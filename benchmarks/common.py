@@ -1,0 +1,155 @@
+"""Shared benchmark plumbing: reduced-scale trainers for the paper's
+ablations (convnet + LM + seq2seq), result persistence."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.loss_scale import LossScaler, convnet_scaler, underflow_fraction
+from repro.core.master_weights import MixedPrecisionOptimizer
+from repro.core.precision_policy import QuantConfig
+from repro.data import (DataConfig, synthetic_image_batches,
+                        synthetic_lm_batches, synthetic_seq2seq_batches)
+from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+from repro.models.registry import build_config
+from repro.models.transformer import init_lm, lm_loss
+from repro.optim.optimizers import (AdamConfig, MomentumConfig,
+                                    adam_leafwise, momentum_leafwise,
+                                    adam, momentum_sgd)
+
+RESULTS_DIR = Path("experiments/bench")
+
+
+def save_result(name: str, payload: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def _mk_opt(name, lr, scaler, master_dtype="float16"):
+    if name == "momentum":
+        cfg = MomentumConfig(learning_rate=lr, momentum=0.9)
+        init, update = momentum_sgd(cfg)
+        names, leaf = momentum_leafwise(cfg)
+    else:
+        cfg = AdamConfig(learning_rate=lr)
+        init, update = adam(cfg)
+        names, leaf = adam_leafwise(cfg)
+    return MixedPrecisionOptimizer(inner_init=init, inner_update=update,
+                                   scaler=scaler, master_dtype=master_dtype,
+                                   accum_names=names, leaf_update=leaf)
+
+
+# ---------------------------------------------------------------------------
+# convnet trainer (paper's ResNet experiments at CIFAR scale)
+# ---------------------------------------------------------------------------
+
+def train_convnet(*, quant: QuantConfig, scaler: LossScaler,
+                  steps: int = 150, seed: int = 0, lr: float = 0.05,
+                  include_l2: bool = True, weight_decay: float = 5e-4,
+                  batch_size: int = 64, eval_every: int = 25,
+                  track_underflow: bool = False) -> Dict:
+    cfg = ResNetConfig(depth_per_stage=(1, 1), widths=(16, 32),
+                       quant=quant, weight_decay=weight_decay)
+    params = init_resnet(jax.random.PRNGKey(seed), cfg)
+    opt = _mk_opt("momentum", lr, scaler)
+    state = opt.init(params)
+    # noise=1.6 keeps the task hard enough that precision/rounding ablations
+    # separate (clean prototypes would saturate every run at 100%).
+    train_it = synthetic_image_batches(batch_size=batch_size, image_size=16,
+                                       seed=seed, noise=1.6)
+    val_it = synthetic_image_batches(batch_size=256, image_size=16,
+                                     seed=seed + 1000, noise=1.6)
+    val_batch = next(val_it)
+
+    def loss_fn(p, batch, key, scale):
+        return resnet_loss(p, batch, cfg=cfg, qkey=key, loss_scale=scale,
+                           include_l2=include_l2)
+
+    @jax.jit
+    def step_fn(state, batch, key):
+        params = opt.compute_params(state)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, key, state.loss_scale.scale)
+        uf = underflow_fraction(grads, threshold=1.52587890625e-05) \
+            if track_underflow else jnp.float32(0)
+        new_state, opt_m = opt.apply_gradients(state, grads)
+        return new_state, {**metrics, **opt_m, "underflow_frac": uf}
+
+    @jax.jit
+    def eval_fn(state, batch):
+        params = opt.compute_params(state)
+        _, metrics = resnet_loss(params, batch, cfg=cfg, qkey=None,
+                                 include_l2=False)
+        return metrics
+
+    hist = {"step": [], "train_nll": [], "val_acc": [], "val_nll": [],
+            "l2_loss": [], "loss_scale": [], "underflow_frac": [],
+            "overflows": []}
+    for i in range(steps):
+        batch = next(train_it)
+        state, m = step_fn(state, batch,
+                           jax.random.fold_in(jax.random.PRNGKey(7), i))
+        if i % eval_every == 0 or i == steps - 1:
+            ev = eval_fn(state, val_batch)
+            hist["step"].append(i)
+            hist["train_nll"].append(float(m["nll"]))
+            hist["val_acc"].append(float(ev["accuracy"]))
+            hist["val_nll"].append(float(ev["nll"]))
+            hist["l2_loss"].append(float(m["l2_loss"]))
+            hist["loss_scale"].append(float(m["loss_scale"]))
+            hist["underflow_frac"].append(float(m["underflow_frac"]))
+            hist["overflows"].append(float(m["overflow_count"]))
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# LM / seq2seq trainer (paper's GNMT/Transformer experiments, reduced)
+# ---------------------------------------------------------------------------
+
+def train_lm(*, policy, steps: int = 80, seed: int = 0, lr: float = 3e-3,
+             scaler: Optional[LossScaler] = None, seq2seq: bool = False,
+             vocab: int = 128) -> Dict:
+    arch = "paper-transformer" if seq2seq else "qwen2-1.5b"
+    cfg = build_config(arch, smoke=True).replace(
+        vocab_size=vocab, policy=policy, remat=False)
+    if not seq2seq:
+        cfg = cfg.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128)
+    opt = _mk_opt("adam", lr, scaler or LossScaler(mode="enhanced",
+                                                   init_scale=512.0,
+                                                   min_scale_schedule=()))
+    from repro.train.step import make_train_step
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    if seq2seq:
+        data = synthetic_seq2seq_batches(
+            DataConfig(vocab_size=vocab, seq_len=33, batch_size=8,
+                       seed=seed), d_model=cfg.d_model)
+    else:
+        data = synthetic_lm_batches(DataConfig(
+            vocab_size=vocab, seq_len=32, batch_size=8, seed=seed))
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    state = opt.init(params)
+    hist = {"step": [], "loss": [], "loss_scale": [], "overflows": []}
+    for i in range(steps):
+        state, m = step_fn(state, next(data),
+                           jax.random.fold_in(jax.random.PRNGKey(11), i))
+        hist["step"].append(i)
+        hist["loss"].append(float(m["loss"]))
+        hist["loss_scale"].append(float(m["loss_scale"]))
+        hist["overflows"].append(float(m["overflow_count"]))
+    return hist
+
+
+def timed(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us

@@ -1,0 +1,46 @@
+"""Kernel micro-bench: XLA-path FP8 ops wall time on CPU (correctness-scale;
+TPU numbers come from the dry-run roofline, not wall time) + shape sweep of
+the Pallas kernels in interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, timed
+from repro.core.quantize import quantize_rne, quantize_sr_e5m2
+from repro.kernels.fp8_matmul import fp8_matmul, fp8_matmul_ref
+
+
+def bench_kernels():
+    out = {}
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1024, 1024), jnp.float32)
+
+    rne = jax.jit(lambda v: quantize_rne(v))
+    out["quantize_rne_1M_us"] = timed(rne, x)
+    sr = jax.jit(lambda v, k: quantize_sr_e5m2(v, k))
+    out["quantize_sr_1M_us"] = timed(sr, x, key)
+
+    a8 = x.astype(jnp.float8_e5m2)
+    b8 = jax.random.normal(key, (1024, 512), jnp.float32).astype(
+        jnp.float8_e5m2)
+    ref = jax.jit(lambda a, b: fp8_matmul_ref(a, b))
+    out["fp8_matmul_xla_1024x1024x512_us"] = timed(ref, a8, b8)
+
+    # Pallas interpret-mode correctness sweep (wall time is interpreter
+    # overhead; recorded for completeness only).
+    errs = []
+    for m, k, n in [(64, 256, 128), (128, 512, 256)]:
+        a = jax.random.normal(jax.random.PRNGKey(1), (m, k)).astype(
+            jnp.float8_e5m2)
+        b = jax.random.normal(jax.random.PRNGKey(2), (k, n)).astype(
+            jnp.float8_e5m2)
+        y = fp8_matmul(a, b, bm=64, bk=128, bn=128, interpret=True)
+        r = fp8_matmul_ref(a, b)
+        errs.append(float(jnp.abs(y - r).max()))
+    out["pallas_interpret_max_abs_err"] = max(errs)
+    save_result("kernels", out)
+    for k, v in out.items():
+        print(f"kernels {k}: {v:.3f}")
+    return out

@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table2     # one
+
+Prints name,value CSV lines; detailed JSON under experiments/bench/.
+"""
+import sys
+import time
+
+from benchmarks import paper_tables
+from benchmarks.kernel_bench import bench_kernels
+
+ALL = {
+    "table1": paper_tables.bench_table1,
+    "fig2a": paper_tables.bench_fig2a,
+    "fig2b": paper_tables.bench_fig2b,
+    "fig3_fig4": paper_tables.bench_fig3_fig4,
+    "table2": paper_tables.bench_table2,
+    "table3": paper_tables.bench_table3,
+    "table4": paper_tables.bench_table4,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===")
+        ALL[name]()
+        print(f"{name},elapsed_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""FP8 gradient-compression demo on an 8-device (emulated) pod axis.
+
+  PYTHONPATH=src python examples/grad_compression.py
+
+Shows the beyond-paper distributed trick: cross-pod data-parallel gradient
+all-reduce with the gradients quantized to e5m2 on the wire plus error
+feedback — the paper's storage format turned into a wire format.
+
+NOTE: must run as its own process (sets XLA device-count flags).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+from jax.sharding import PartitionSpec as P                    # noqa: E402
+
+from repro.distributed.grad_compress import compressed_psum_mean  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 4096)) * 0.01
+    err = jnp.zeros_like(g)
+
+    def step(g, e):
+        def inner(gl, el):
+            red, ne = compressed_psum_mean({"g": gl[0]}, {"g": el[0]},
+                                           axis_name="pod")
+            return red["g"][None], ne["g"][None]
+        return jax.shard_map(inner, mesh=mesh,
+                             in_specs=(P("pod", None), P("pod", None)),
+                             out_specs=(P("pod", None), P("pod", None)),
+                             check_vma=False)(g, e)
+
+    true = np.asarray(g).mean(0)
+    with jax.set_mesh(mesh):
+        jstep = jax.jit(step)
+        red, err_ = jstep(g, err)
+        one_shot = np.linalg.norm(np.asarray(red)[0] - true) \
+            / np.linalg.norm(true)
+        acc_t = acc_c = 0.0
+        e = err
+        for _ in range(20):
+            red, e = jstep(g, e)
+            acc_t = acc_t + true
+            acc_c = acc_c + np.asarray(red)[0]
+        with_feedback = np.linalg.norm(acc_c - acc_t) / np.linalg.norm(acc_t)
+    print(f"one-shot rel err (pure e5m2 wire): {one_shot:.4f}")
+    print(f"20-step accumulated rel err (error feedback): "
+          f"{with_feedback:.4f}")
+    print(f"wire bytes per element: 1 (e5m2) vs 2 (bf16) vs 4 (f32)")
+    assert with_feedback < one_shot
+    print("OK: error feedback converges the compressed reduction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: train a small LM with the paper's FP8 recipe in ~1 minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Covers the whole public API surface: config -> model -> FP8 quantized
+training step (enhanced loss scaling, FP16 master weights, stochastic
+rounding) -> metrics.
+"""
+import jax
+import numpy as np
+
+from repro.core.loss_scale import LossScaler
+from repro.data import DataConfig, synthetic_lm_batches
+from repro.models.registry import build_config
+from repro.models.transformer import init_lm
+from repro.train.step import make_optimizer_for, make_train_step
+
+VOCAB = 256
+
+
+def main():
+    # 1. An architecture from the registry, reduced for CPU.
+    cfg = build_config("qwen2-1.5b", smoke=True).replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=VOCAB, remat=False)
+    print(f"arch={cfg.arch}  params~{cfg.param_count():,}  "
+          f"FP8 recipe: {cfg.policy.quant.fwd_format} fwd / "
+          f"{cfg.policy.quant.bwd_format} bwd, "
+          f"master={cfg.policy.master_weight_dtype}")
+
+    # 2. Mixed-precision optimizer with the paper's enhanced loss scaling.
+    opt = make_optimizer_for(cfg, name="adam", learning_rate=3e-3,
+                             scaler=LossScaler(mode="enhanced",
+                                               init_scale=1024.0,
+                                               min_scale_schedule=()))
+    step = jax.jit(make_train_step(cfg, opt))
+
+    # 3. Deterministic synthetic data with learnable bigram structure.
+    data = synthetic_lm_batches(DataConfig(vocab_size=VOCAB, seq_len=64,
+                                           batch_size=16, seed=0))
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    print(f"unigram entropy (no learning) = {np.log(VOCAB):.3f} nats")
+    for i in range(60):
+        state, m = step(state, next(data),
+                        jax.random.fold_in(jax.random.PRNGKey(1), i))
+        if i % 10 == 0 or i == 59:
+            print(f"step {i:3d}  loss={float(m['loss']):.4f}  "
+                  f"scale={float(m['loss_scale']):.0f}  "
+                  f"finite={bool(m['grads_finite'])}")
+    assert float(m["loss"]) < np.log(VOCAB), "FP8 training failed to learn"
+    print("OK: FP8 training learned the synthetic structure.")
+
+
+if __name__ == "__main__":
+    main()

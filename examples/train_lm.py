@@ -1,0 +1,70 @@
+"""End-to-end training driver: ~100M-parameter LM, few hundred steps, with
+the full production loop — FP8 recipe, enhanced loss scaling, checkpointing/
+restart, preemption handling, straggler detection, metrics jsonl.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300          # full
+  PYTHONPATH=src python examples/train_lm.py --steps 30 --small   # quick
+
+The default config is a ~100M-parameter qwen2-family model (d=512, 12L,
+vocab 32k). Use --small for a CI-scale run. Kill the process with SIGTERM
+and re-run to watch checkpoint/restart resume exactly where it stopped.
+"""
+import argparse
+
+import jax
+
+from repro.core.loss_scale import LossScaler
+from repro.data import DataConfig, synthetic_lm_batches
+from repro.models.registry import build_config
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.step import make_optimizer_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--baseline", action="store_true",
+                    help="FP32/BF16 baseline instead of FP8")
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = build_config(args.arch, smoke=True).replace(
+            n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+            vocab_size=512, remat=False)
+        batch, seq = 8, 64
+    else:
+        # ~100M params: 12L x d512 x ff2048, 32k vocab.
+        cfg = build_config(args.arch, smoke=True).replace(
+            n_layers=12, d_model=512, n_heads=8, n_kv_heads=2, d_ff=2048,
+            vocab_size=32768, max_seq_len=512)
+        batch, seq = 8, 256
+    if args.baseline:
+        from repro.core.precision_policy import BASELINE_POLICY
+        cfg = cfg.replace(policy=BASELINE_POLICY)
+    print(f"training {cfg.arch}-family model, ~{cfg.param_count():,} params, "
+          f"fp8={'off' if args.baseline else 'on'}")
+
+    opt = make_optimizer_for(cfg, name="adam", learning_rate=1e-3,
+                             scaler=LossScaler(mode="enhanced",
+                                               init_scale=2.0**13,
+                                               min_scale_schedule=((100, 64.0),)))
+    data = synthetic_lm_batches(DataConfig(vocab_size=cfg.vocab_size,
+                                           seq_len=seq, batch_size=batch,
+                                           seed=0))
+    loop = TrainLoop(cfg, opt, data,
+                     LoopConfig(total_steps=args.steps, checkpoint_every=50,
+                                checkpoint_dir=args.ckpt, log_every=10,
+                                metrics_path=f"{args.ckpt}/metrics.jsonl"),
+                     seed=0)
+    loop.install_signal_handlers()
+    out = loop.run()
+    print(f"done at step {out['last_step']}: loss="
+          f"{out['metrics'].get('loss'):.4f} "
+          f"(stragglers={out['stragglers']})")
+
+
+if __name__ == "__main__":
+    main()

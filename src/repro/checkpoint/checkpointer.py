@@ -1,0 +1,189 @@
+"""Fault-tolerant checkpointing: atomic commit, async save, elastic restore.
+
+Design for the 1000-node regime:
+ * Atomic commit — a checkpoint directory is written under a tmp name and
+   renamed into place; a crash mid-save can never corrupt the latest-good
+   checkpoint. Restore always picks the newest *committed* step.
+ * Async save — serialization happens on a background thread while training
+   continues; `wait()` joins before the next save or at exit.
+ * Elastic restore — leaves are stored as full (unsharded) host arrays plus
+   a pytree manifest. Restoring onto a *different* mesh/device-count simply
+   re-applies the new shardings via jax.device_put: grow or shrink the mesh
+   between runs without conversion tooling. (On true multi-host fleets the
+   per-leaf save would switch to per-host shard files + the same manifest;
+   the commit protocol and manifest format already support it.)
+ * keep_last_k garbage collection.
+
+Leaves are keyed by their pytree path, so checkpoints survive superficial
+model-code refactors as long as parameter names are stable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_COMMITTED = "COMMITTED"
+
+_UINT_OF_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+_NATIVE = {"float16", "float32", "float64", "int8", "int16", "int32",
+           "int64", "uint8", "uint16", "uint32", "uint64", "bool"}
+
+
+def _to_native(v: np.ndarray) -> np.ndarray:
+    """Bit-pattern view for dtypes numpy can't savez/cast (bf16, fp8)."""
+    if v.dtype.name in _NATIVE:
+        return v
+    return v.view(_UINT_OF_WIDTH[v.dtype.itemsize])
+
+
+def _from_native(v: np.ndarray, dtype_name: str) -> np.ndarray:
+    if v.dtype.name == dtype_name:
+        return v
+    import ml_dtypes
+    target = {"bfloat16": ml_dtypes.bfloat16,
+              "float8_e5m2": ml_dtypes.float8_e5m2,
+              "float8_e4m3fn": ml_dtypes.float8_e4m3fn}.get(dtype_name)
+    if target is None:
+        return v.astype(np.dtype(dtype_name))
+    return v.view(target)
+
+
+def _path_key(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep_last_k: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last_k = keep_last_k
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):
+        """Snapshot `tree` at `step`. Gathers to host, then (optionally)
+        writes on a background thread."""
+        self.wait()
+        leaves = {}
+        dtypes = {}
+        flat = jax.tree_util.tree_map_with_path(
+            lambda p, x: leaves.setdefault(_path_key(p), np.asarray(x)), tree)
+        for k, v in leaves.items():
+            dtypes[k] = str(v.dtype)
+        manifest = {"step": int(step), "time": time.time(),
+                    "keys": sorted(leaves), "dtypes": dtypes,
+                    "extra": extra or {}}
+
+        def _write():
+            tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            # Non-numpy-native dtypes (bf16, fp8) are stored as their bit
+            # patterns (same-width uint view); the manifest records the real
+            # dtype and restore views them back.
+            np.savez(tmp / "leaves.npz",
+                     **{k.replace("/", "__"): _to_native(v)
+                        for k, v in leaves.items()})
+            (tmp / _MANIFEST).write_text(json.dumps(manifest))
+            (tmp / _COMMITTED).write_text("ok")
+            final = self.dir / f"step_{step:010d}"
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last_k] if self.keep_last_k else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / _COMMITTED).exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, *, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of `target` (arrays or
+        ShapeDtypeStructs). shardings: matching tree of NamedSharding (or
+        None => host arrays / default placement). Elastic: shardings may
+        come from a different mesh than the one that saved."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        data = np.load(d / "leaves.npz")
+        dtypes = self.manifest(step)["dtypes"]
+        leaves = {}
+        for k in data.files:
+            key = k.replace("__", "/")
+            leaves[key] = _from_native(data[k], dtypes[key])
+
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = jax.tree_util.tree_leaves(shardings)
+        flat_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
+        out = []
+        for i, (path, proto) in enumerate(flat_with_path):
+            key = _path_key(path)
+            if key not in leaves:
+                raise KeyError(f"checkpoint step {step} missing leaf {key}")
+            arr = leaves[key]
+            if arr.dtype != np.dtype(proto.dtype):
+                arr = arr.astype(np.dtype(proto.dtype))
+            if arr.shape != tuple(proto.shape):
+                raise ValueError(
+                    f"leaf {key}: checkpoint shape {arr.shape} != target "
+                    f"{tuple(proto.shape)}")
+            if shard_flat is not None:
+                out.append(jax.device_put(arr, shard_flat[i]))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    def manifest(self, step: Optional[int] = None) -> dict:
+        if step is None:
+            step = self.latest_step()
+        d = self.dir / f"step_{step:010d}"
+        return json.loads((d / _MANIFEST).read_text())

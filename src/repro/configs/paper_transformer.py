@@ -1,0 +1,22 @@
+"""The paper's own Transformer workload (6-layer, ~200M params, WMT16
+En->De; paper Table 4) at config level — exercised at reduced scale by the
+benchmarks (synthetic seq2seq data; the paper's BLEU-parity claim maps to
+loss-parity FP8 vs FP32 here)."""
+from repro.models.config import ModelConfig
+
+
+def full() -> ModelConfig:
+    # Transformer-big-ish: 6 layers, d=1024, 16 heads, ff 4096 (~210M).
+    return ModelConfig(
+        arch="paper-transformer", family="dense",
+        n_layers=6, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab_size=32000,
+        is_encoder_decoder=True, n_encoder_layers=6,
+        act="gelu", max_seq_len=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(n_layers=2, n_encoder_layers=2, d_model=128,
+                          n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=512,
+                          max_seq_len=128)

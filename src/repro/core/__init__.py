@@ -1,0 +1,22 @@
+"""Core FP8 mixed-precision training primitives (the paper's contribution).
+
+Mellempudi et al. 2019: FP8 (e5m2) weights/activations/errors/gradients with
+FP32 accumulation, FP16 master weights, enhanced loss scaling, stochastic
+rounding.
+"""
+from repro.core.fp8_formats import (BF16, E4M3, E5M2, FP16, FP32, FORMATS,
+                                    FloatFormat, get_format, table1)
+# NOTE: `repro.core.quantize` stays bound to the MODULE; the quantize()
+# function is accessed as repro.core.quantize.quantize (or via the re-exports
+# below, which deliberately exclude the clashing name).
+from repro.core.quantize import (QTensor, amax_scale, dequantize, fake_quant,
+                                 quantize_rne, quantize_sr, quantize_sr_e5m2,
+                                 quantize_sr_grid, sr_e5m2_from_bits)
+from repro.core import quantize  # noqa: F401  (rebind name to the module)
+
+__all__ = [
+    "BF16", "E4M3", "E5M2", "FP16", "FP32", "FORMATS", "FloatFormat",
+    "get_format", "table1", "QTensor", "amax_scale", "dequantize",
+    "fake_quant", "quantize", "quantize_rne", "quantize_sr",
+    "quantize_sr_e5m2", "quantize_sr_grid", "sr_e5m2_from_bits",
+]

@@ -1,0 +1,120 @@
+"""Floating-point format metadata for reduced-precision training.
+
+Reproduces Table 1 of Mellempudi et al. 2019 ("Mixed Precision Training With
+8-bit Floating Point"): the proposed FP8 format is (s=1, e=5, m=2), sharing the
+FP16 exponent range but with a drastically reduced subnormal range
+(min subnormal 1.52e-5 vs 5.96e-8) — the motivation for enhanced loss scaling.
+
+All values here are exact powers of two / dyadic rationals; tests check them
+bit-for-bit against ml_dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """Metadata for a (sign, exponent, mantissa) floating-point format."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    # Exponent bias. IEEE-style: 2**(e-1) - 1 unless overridden (e4m3fn keeps
+    # the IEEE bias of 7 but reclaims the top exponent for finite values).
+    bias: int
+    # Whether the format reserves the all-ones exponent for inf/nan (IEEE) or
+    # reclaims it for finite values (the "fn" variants).
+    has_inf: bool
+    # Storage dtype on the JAX side (None => no native dtype; emulation only).
+    dtype: Optional[jnp.dtype] = None
+
+    # ---- derived quantities (paper Table 1) -------------------------------
+    @property
+    def max_exp(self) -> int:
+        # Largest biased exponent that encodes a finite normal number.
+        raw = (1 << self.exp_bits) - 1
+        return (raw - 1 if self.has_inf else raw) - self.bias
+
+    @property
+    def min_exp(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_normal(self) -> float:
+        frac = 2.0 - 2.0 ** (-self.man_bits)
+        if not self.has_inf:
+            # fn formats: top mantissa pattern is NaN, so max frac loses one ulp.
+            frac = 2.0 - 2.0 ** (1 - self.man_bits)
+        return frac * 2.0 ** self.max_exp
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** self.min_exp
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.min_exp - self.man_bits)
+
+    @property
+    def eps(self) -> float:
+        """Machine epsilon: spacing of numbers in [1, 2)."""
+        return 2.0 ** (-self.man_bits)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+
+# The paper's proposed format: s=1, e=5, m=2. Same exponent range as FP16 =>
+# loss-scaling experience transfers; tiny subnormal range => enhanced scaling.
+E5M2 = FloatFormat("e5m2", exp_bits=5, man_bits=2, bias=15, has_inf=True,
+                   dtype=jnp.float8_e5m2)
+# The "more mantissa" alternative the paper rejected for error tensors (too
+# little dynamic range for back-prop); kept for weights/activations ablations.
+E4M3 = FloatFormat("e4m3", exp_bits=4, man_bits=3, bias=7, has_inf=False,
+                   dtype=jnp.float8_e4m3fn)
+FP16 = FloatFormat("fp16", exp_bits=5, man_bits=10, bias=15, has_inf=True,
+                   dtype=jnp.float16)
+BF16 = FloatFormat("bf16", exp_bits=8, man_bits=7, bias=127, has_inf=True,
+                   dtype=jnp.bfloat16)
+FP32 = FloatFormat("fp32", exp_bits=8, man_bits=23, bias=127, has_inf=True,
+                   dtype=jnp.float32)
+
+FORMATS = {f.name: f for f in (E5M2, E4M3, FP16, BF16, FP32)}
+
+
+def get_format(name: str) -> FloatFormat:
+    try:
+        return FORMATS[name]
+    except KeyError as e:
+        raise ValueError(f"unknown float format {name!r}; have {sorted(FORMATS)}") from e
+
+
+def table1() -> dict:
+    """Paper Table 1: dynamic range comparison (exact values)."""
+    rows = {}
+    for f in (FP32, FP16, E5M2):
+        rows[f.name] = dict(
+            bit_format=(1, f.exp_bits, f.man_bits),
+            max_normal=f.max_normal,
+            min_normal=f.min_normal,
+            min_subnormal=f.min_subnormal,
+        )
+    return rows
+
+
+def ml_dtype_of(fmt: FloatFormat):
+    """The numpy-compatible ml_dtypes dtype, for bit-level cross-checks."""
+    return {
+        "e5m2": ml_dtypes.float8_e5m2,
+        "e4m3": ml_dtypes.float8_e4m3fn,
+        "fp16": np.float16,
+        "bf16": ml_dtypes.bfloat16,
+        "fp32": np.float32,
+    }[fmt.name]

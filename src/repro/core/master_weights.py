@@ -1,0 +1,142 @@
+"""FP16 master weights with FP32 update math — paper Fig. 1b.
+
+The paper halves the master-copy footprint by storing it in FP16 and
+performing the weight update as: up-convert FP16 -> FP32, unscale gradients in
+FP32, run the (momentum/Adam) update in FP32, down-convert back to FP16 for
+storage. Since the update is bandwidth-bound, the FP32 math is free; the FP16
+storage halves HBM traffic and memory.
+
+This module is optimizer-agnostic: it wraps any (init, update) pair from
+repro.optim and adds (a) the storage-dtype round-trip, (b) gradient
+unscaling, (c) the overflow-skip (a non-finite gradient step is dropped and
+the loss scaler backs off — standard dynamic-scaling contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.loss_scale import LossScaleState, LossScaler, all_finite
+from repro.core.precision_policy import dtype_of
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MixedPrecisionState:
+    master: Any          # master weights, stored at master_dtype (paper: fp16)
+    opt_state: Any       # inner optimizer state (fp32)
+    loss_scale: LossScaleState
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecisionOptimizer:
+    """Wraps an inner optimizer with the paper's Fig. 1b update rule.
+
+    If (accum_names, leaf_update) are provided, apply_gradients runs the
+    FUSED path: the entire unscale -> update -> overflow-select -> downcast
+    pipeline executes in one tree_map, so FP32 temporaries are per-leaf
+    instead of per-tree (essential at 100B+ parameters)."""
+    inner_init: Callable[[Any], Any]
+    inner_update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (g,s,p)->(u,s)
+    scaler: LossScaler
+    master_dtype: str = "float16"     # paper: FP16 master copy
+    update_dtype: str = "float32"     # paper: update math in FP32
+    compute_dtype: str = "bfloat16"   # dtype of the params handed to the model
+    accum_names: Tuple[str, ...] = ()
+    leaf_update: Optional[Callable] = None
+
+    def init(self, params) -> MixedPrecisionState:
+        mdt = dtype_of(self.master_dtype)
+        master = jax.tree_util.tree_map(
+            lambda p: p.astype(mdt), params)
+        # Optimizer state (momentum etc.) stays fp32: it accumulates small
+        # increments and the paper only reduces the *master copy* precision.
+        opt_state = self.inner_init(
+            jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params))
+        return MixedPrecisionState(master=master, opt_state=opt_state,
+                                   loss_scale=self.scaler.init())
+
+    def compute_params(self, state: MixedPrecisionState):
+        """Model-facing params: master cast to compute dtype (bf16). The
+        model's qeinsum then quantizes these to FP8 per the W policy."""
+        cdt = dtype_of(self.compute_dtype)
+        return jax.tree_util.tree_map(lambda p: p.astype(cdt), state.master)
+
+    def apply_gradients(self, state: MixedPrecisionState, grads
+                        ) -> Tuple[MixedPrecisionState, dict]:
+        if self.leaf_update is not None:
+            return self._apply_gradients_fused(state, grads)
+        udt = dtype_of(self.update_dtype)
+        mdt = dtype_of(self.master_dtype)
+        # 1. Overflow probe on the raw (still loss-scaled) gradients.
+        finite = all_finite(grads)
+        # 2. Unscale in full precision (paper: prevents underflow).
+        grads32 = self.scaler.unscale(state.loss_scale, grads)
+        # 3. Up-convert master to FP32 and update.
+        master32 = jax.tree_util.tree_map(lambda p: p.astype(udt), state.master)
+        updates, new_opt_state = self.inner_update(grads32, state.opt_state,
+                                                   master32)
+        new_master32 = jax.tree_util.tree_map(lambda p, u: p + u,
+                                              master32, updates)
+        # 4. Skip the step entirely on overflow (keep old master/opt state).
+        def select(new, old):
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(finite, n, o), new, old)
+        new_master32 = select(new_master32, master32)
+        new_opt_state = select(new_opt_state, state.opt_state)
+        # 5. Down-convert master back to FP16 storage.
+        new_master = jax.tree_util.tree_map(lambda p: p.astype(mdt),
+                                            new_master32)
+        new_scale_state = self.scaler.update(state.loss_scale, finite)
+        metrics = {
+            "grads_finite": finite,
+            "loss_scale": new_scale_state.scale,
+            "overflow_count": new_scale_state.overflow_count,
+        }
+        return MixedPrecisionState(master=new_master, opt_state=new_opt_state,
+                                   loss_scale=new_scale_state), metrics
+
+    # -- fused leaf-wise path -------------------------------------------------
+    def _apply_gradients_fused(self, state: MixedPrecisionState, grads
+                               ) -> Tuple[MixedPrecisionState, dict]:
+        udt = dtype_of(self.update_dtype)
+        mdt = dtype_of(self.master_dtype)
+        names = self.accum_names
+        finite = all_finite(grads)
+        inv = (1.0 / state.loss_scale.scale).astype(jnp.float32)
+        count = jnp.where(finite, state.opt_state["count"] + 1,
+                          state.opt_state["count"]).astype(jnp.int32)
+
+        def leaf_fn(g, m, *accs):
+            g32 = g.astype(udt) * inv            # unscale in full precision
+            accums = dict(zip(names, accs))
+            p32 = m.astype(udt)                  # fp16 master -> fp32
+            upd, new_acc = self.leaf_update(g32, accums, count, p32)
+            m32 = p32 + upd                      # update in fp32 (Fig. 1b)
+            new_m = jnp.where(finite, m32, p32).astype(mdt)
+            outs = (new_m,)
+            for n, a in zip(names, accs):
+                outs += (jnp.where(finite, new_acc[n], a),)
+            return outs
+
+        packed = jax.tree_util.tree_map(
+            leaf_fn, grads, state.master,
+            *(state.opt_state[n] for n in names))
+        is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+        new_master = jax.tree_util.tree_map(lambda t: t[0], packed,
+                                            is_leaf=is_tup)
+        new_opt = {"count": count}
+        for i, n in enumerate(names):
+            new_opt[n] = jax.tree_util.tree_map(lambda t, i=i: t[1 + i],
+                                                packed, is_leaf=is_tup)
+        new_scale_state = self.scaler.update(state.loss_scale, finite)
+        metrics = {"grads_finite": finite,
+                   "loss_scale": new_scale_state.scale,
+                   "overflow_count": new_scale_state.overflow_count}
+        return MixedPrecisionState(master=new_master, opt_state=new_opt,
+                                   loss_scale=new_scale_state), metrics

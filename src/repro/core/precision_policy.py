@@ -1,0 +1,120 @@
+"""Precision policy: which tensor gets which format/rounding/saturation.
+
+Encodes the paper's recipe:
+  * W, A, E, G (weights, activations, errors, weight-gradients) in FP8 e5m2.
+  * Stochastic rounding on activations and gradients (paper §3.2), RNE on
+    weights.
+  * Error/grad tensors do NOT saturate on overflow — overflow must surface as
+    inf so the dynamic loss scaler can back off (paper §3.1).
+  * First/last layers (embedding + logits head here; first conv / last FC in
+    the paper's convnets) stay at 16-bit.
+  * Master weights at FP16, update math at FP32 (paper Fig. 1b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Tensor classes, paper Table 3 nomenclature: W, A, E, G.
+WEIGHT, ACT, ERROR, GRAD = "weight", "act", "error", "grad"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static (hashable) quantization configuration for qeinsum/QDense.
+
+    The defaults are the paper's recipe. `enabled=False` produces the FP32/
+    BF16 baseline with an identical call graph (for apples-to-apples
+    benchmarks).
+    """
+    enabled: bool = True
+    fwd_format: str = "e5m2"      # W and A storage format
+    bwd_format: str = "e5m2"      # E and G storage format
+    weight_rounding: str = "rne"
+    act_rounding: str = "sr"
+    error_rounding: str = "sr"
+    grad_rounding: str = "sr"
+    saturate_fwd: bool = True
+    saturate_bwd: bool = False    # keep inf -> dynamic loss scaling sees it
+    # Beyond-paper: per-tensor just-in-time amax scaling (cf. FP8-LM); the
+    # paper relies on global loss scaling only.
+    amax_scale_fwd: bool = False
+    amax_scale_bwd: bool = False
+    compute_dtype: str = "bfloat16"   # MXU operand dtype after dequant
+    output_dtype: str = "bfloat16"    # GEMM epilogue output
+    accum_dtype: str = "float32"      # paper: FP32 accumulator, always
+    backend: str = "xla"              # xla | pallas | pallas_interpret
+    # Whether activation-activation GEMMs (attention QK^T / PV) are quantized.
+    quantize_attention: bool = True
+
+    # -- helpers ------------------------------------------------------------
+    def rounding_for(self, cls: str) -> str:
+        return {WEIGHT: self.weight_rounding, ACT: self.act_rounding,
+                ERROR: self.error_rounding, GRAD: self.grad_rounding}[cls]
+
+    def format_for(self, cls: str) -> str:
+        return self.fwd_format if cls in (WEIGHT, ACT) else self.bwd_format
+
+    def saturate_for(self, cls: str) -> bool:
+        return self.saturate_fwd if cls in (WEIGHT, ACT) else self.saturate_bwd
+
+    def amax_for(self, cls: str) -> bool:
+        return self.amax_scale_fwd if cls in (WEIGHT, ACT) else self.amax_scale_bwd
+
+    @property
+    def needs_key(self) -> bool:
+        return self.enabled and "sr" in (self.weight_rounding, self.act_rounding,
+                                         self.error_rounding, self.grad_rounding)
+
+    def eval_mode(self) -> "QuantConfig":
+        """Deterministic inference variant: RNE everywhere, saturating."""
+        return dataclasses.replace(self, act_rounding="rne", error_rounding="rne",
+                                   grad_rounding="rne", saturate_bwd=True)
+
+    def baseline(self) -> "QuantConfig":
+        return dataclasses.replace(self, enabled=False)
+
+
+# Canonical configs ---------------------------------------------------------
+
+PAPER_FP8 = QuantConfig()                      # the paper's recipe
+PAPER_FP8_RNE = dataclasses.replace(            # ablation: RNE-only (Fig. 3)
+    PAPER_FP8, act_rounding="rne", error_rounding="rne", grad_rounding="rne")
+BASELINE = QuantConfig(enabled=False)          # FP32/BF16 baseline
+AMAX_FP8 = dataclasses.replace(                # beyond-paper per-tensor scaling
+    PAPER_FP8, amax_scale_fwd=True, amax_scale_bwd=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Model-level policy: where FP8 applies and master-weight precision."""
+    quant: QuantConfig = PAPER_FP8
+    # Paper §4: first conv & last FC stay at 16-bit. LM analogue: embedding
+    # table and logits head.
+    quantize_embedding: bool = False
+    quantize_logits_head: bool = False
+    # Paper Fig. 1b: master copy of weights at FP16, update math in FP32.
+    master_weight_dtype: str = "float16"
+    update_dtype: str = "float32"
+    # Model compute dtype for non-GEMM ops (norms/softmax run in f32 anyway).
+    activation_dtype: str = "bfloat16"
+    # Beyond-paper: FP8 KV-cache for serving.
+    kv_cache_format: Optional[str] = None     # None | "e5m2" | "e4m3"
+
+    def quant_for_layer(self, *, is_embedding: bool = False,
+                        is_head: bool = False) -> QuantConfig:
+        if (is_embedding and not self.quantize_embedding) or \
+           (is_head and not self.quantize_logits_head):
+            return self.quant.baseline()
+        return self.quant
+
+
+PAPER_POLICY = PrecisionPolicy()
+BASELINE_POLICY = PrecisionPolicy(quant=BASELINE, master_weight_dtype="float32")
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return jnp.dtype({"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                      "float16": jnp.float16}[name])

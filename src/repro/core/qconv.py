@@ -1,0 +1,46 @@
+"""Quantized 2-D convolution (the paper's ResNet workloads).
+
+TPU convs lower to implicit GEMM; we make that explicit: extract patches with
+lax.conv_general_dilated_patches, then run the (patches x filters) GEMM
+through qeinsum — so the paper's W/A/E/G quantization covers convolutions
+with the exact same Q-node dataflow as dense layers (forward, error and
+weight-gradient GEMMs all take FP8 operands, f32 accumulation). The patch
+extraction/scatter itself is index movement, not arithmetic, and stays
+unquantized — as in the paper, where quantization applies to GEMM inputs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import PAPER_FP8, QuantConfig
+from repro.core.qlinear import qeinsum
+
+Array = jax.Array
+
+
+def conv_init(key, kh: int, kw: int, c_in: int, c_out: int, *,
+              dtype=jnp.float32) -> Array:
+    fan_in = kh * kw * c_in
+    std = (2.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0,
+                                        (kh, kw, c_in, c_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def qconv2d(x: Array, w: Array, *, stride: Tuple[int, int] = (1, 1),
+            padding: str = "SAME", key: Optional[Array] = None,
+            cfg: QuantConfig = PAPER_FP8) -> Array:
+    """x: (B, H, W, C_in), w: (kh, kw, C_in, C_out) -> (B, H', W', C_out)."""
+    kh, kw, c_in, c_out = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches returns channels ordered (C_in, kh, kw)
+    # on the last axis; reorder the filter to match.
+    w_flat = w.transpose(2, 0, 1, 3).reshape(c_in * kh * kw, c_out)
+    b, ho, wo, _ = patches.shape
+    y = qeinsum("bhwk,kn->bhwn", patches, w_flat, key=key, cfg=cfg)
+    return y

@@ -1,0 +1,205 @@
+"""Quantized GEMM with the paper's Fig. 1a dataflow, as a composable JAX op.
+
+`qeinsum(spec, a, b)` is an einsum whose *forward and backward* GEMMs all take
+FP8 operands and accumulate in FP32:
+
+    forward:   Y  = Q_A(a) . Q_W(b)                 (fp8 x fp8 -> fp32)
+    backward:  dA = Q_E(dY) . Q_W(b)^T              (fp8 x fp8 -> fp32)
+               dW = Q_A(a)^T . Q_E(dY), then Q_G    (fp8 x fp8 -> fp32 -> fp8)
+
+Q_A/Q_W/Q_E/Q_G are the quantization nodes for activations / weights / errors
+/ weight-gradients with per-class rounding (paper: SR for A, E, G; RNE for W)
+and per-class overflow behavior (errors keep inf so dynamic loss scaling can
+back off).
+
+The residuals saved for backward are the *quantized* fp8 tensors — a 4x
+activation-memory saving relative to an f32-residual baseline, mirroring the
+paper's storage story.
+
+On TPU the inner computes route to the Pallas kernels in
+repro.kernels.{fp8_matmul,fused_quant_matmul}; on CPU (and for the dry-run)
+they run an XLA path that upcasts fp8 -> bf16 and issues a dot with
+preferred_element_type=f32, which is exactly the MXU dataflow the kernels
+implement (bf16 multiplies into an f32 accumulator).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QTensor
+from repro.core.quantize import dequantize as _dequantize
+from repro.core.quantize import quantize as _quantize
+from repro.core.fp8_formats import get_format
+from repro.core.precision_policy import (ACT, ERROR, GRAD, WEIGHT, PAPER_FP8,
+                                         QuantConfig, dtype_of)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# einsum spec utilities
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def parse_spec(spec: str) -> Tuple[str, str, str]:
+    spec = spec.replace(" ", "")
+    lhs, out = spec.split("->")
+    a, b = lhs.split(",")
+    if "." in spec:
+        raise ValueError(f"qeinsum does not support ellipsis specs: {spec!r}")
+    return a, b, out
+
+
+@functools.lru_cache(maxsize=None)
+def adjoint_specs(spec: str) -> Tuple[str, str]:
+    """Derive the einsum specs computing dA and dB for `spec`.
+
+    For Y = einsum('A,B->O', a, b):  dA = einsum('O,B->A', dy, b) and
+    dB = einsum('A,O->B', a, dy).  Valid as long as every index of each
+    operand appears in the union of the output and the other operand (true
+    for every GEMM-like contraction; sum-only indices are rejected).
+    """
+    a, b, o = parse_spec(spec)
+    for idx in a:
+        if idx not in o and idx not in b:
+            raise ValueError(f"index {idx!r} of lhs is summed-only in {spec!r}")
+    for idx in b:
+        if idx not in o and idx not in a:
+            raise ValueError(f"index {idx!r} of rhs is summed-only in {spec!r}")
+    return f"{o},{b}->{a}", f"{a},{o}->{b}"
+
+
+# ---------------------------------------------------------------------------
+# operand quantization + fp8 compute
+# ---------------------------------------------------------------------------
+
+def _quant_operand(x: Array, cls: str, cfg: QuantConfig, key: Array) -> QTensor:
+    fmt = get_format(cfg.format_for(cls))
+    return _quantize(
+        x, fmt,
+        rounding=cfg.rounding_for(cls),
+        key=key,
+        use_amax_scale=cfg.amax_for(cls),
+        saturate=cfg.saturate_for(cls),
+    )
+
+
+def _pallas_matmul_spec(spec: str) -> bool:
+    """True for '...k,kn->...n'-shaped contractions the fp8_matmul kernel covers."""
+    a, b, o = parse_spec(spec)
+    return (len(b) == 2 and a[-1] == b[0] and o == a[:-1] + b[1]
+            and b[1] not in a and b[0] not in o)
+
+
+def _compute(spec: str, qa: QTensor, qb: QTensor, cfg: QuantConfig) -> Array:
+    """fp8 x fp8 -> f32 (accumulate) -> output_dtype, optionally via Pallas."""
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    out_scale = (qa.scale * qb.scale).astype(jnp.float32)
+    if cfg.backend.startswith("pallas") and _pallas_matmul_spec(spec):
+        from repro.kernels.fp8_matmul import ops as mm_ops  # lazy: no cycle
+        a2 = qa.data.reshape((-1, qa.data.shape[-1]))
+        y = mm_ops.fp8_matmul(a2, qb.data,
+                              interpret=cfg.backend == "pallas_interpret")
+        y = y.reshape(qa.data.shape[:-1] + (qb.data.shape[-1],))
+    else:
+        y = jnp.einsum(spec, qa.data.astype(compute_dtype),
+                       qb.data.astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+    y = y * out_scale
+    return y.astype(dtype_of(cfg.output_dtype))
+
+
+def _plain_einsum(spec: str, a: Array, b: Array, cfg: QuantConfig) -> Array:
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    y = jnp.einsum(spec, a.astype(compute_dtype), b.astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(dtype_of(cfg.output_dtype))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _qeinsum(spec: str, classes: Tuple[str, str], cfg: QuantConfig,
+             a: Array, b: Array, key: Array) -> Array:
+    out, _ = _qeinsum_fwd(spec, classes, cfg, a, b, key)
+    return out
+
+
+def _qeinsum_fwd(spec, classes, cfg, a, b, key):
+    k_a, k_b, k_bwd = jax.random.split(key, 3)
+    qa = _quant_operand(a, classes[0], cfg, k_a)
+    qb = _quant_operand(b, classes[1], cfg, k_b)
+    y = _compute(spec, qa, qb, cfg)
+    # Zero-size dtype witnesses so bwd can emit cotangents in primal dtypes.
+    return y, (qa, qb, k_bwd, jnp.zeros((0,), a.dtype), jnp.zeros((0,), b.dtype))
+
+
+def _qeinsum_bwd(spec, classes, cfg, res, dy):
+    qa, qb, k_bwd, a_wit, b_wit = res
+    a_dtype, b_dtype = a_wit.dtype, b_wit.dtype
+    k_e, k_ga, k_gb = jax.random.split(k_bwd, 3)
+    qdy = _quant_operand(dy, ERROR, cfg, k_e)
+    da_spec, db_spec = adjoint_specs(spec)
+    da = _compute(da_spec, qdy, qb, cfg)
+    db = _compute(db_spec, qa, qdy, cfg)
+    # Weight gradients are stored in FP8 (tensor class G, paper Fig. 1b).
+    # Implemented as fake-quant here; the optimizer unscales in FP32.
+    if classes[0] == WEIGHT:
+        da = _fake_quant_grad(da, cfg, k_ga)
+    if classes[1] == WEIGHT:
+        db = _fake_quant_grad(db, cfg, k_gb)
+    # Cotangents match primal dtypes; the integer PRNG key gets float0 zeros.
+    return (da.astype(a_dtype), db.astype(b_dtype),
+            np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0))
+
+
+def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array) -> Array:
+    fmt = get_format(cfg.format_for(GRAD))
+    q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
+                    use_amax_scale=cfg.amax_for(GRAD),
+                    saturate=cfg.saturate_for(GRAD))
+    return _dequantize(q, dtype=g.dtype)
+
+
+_qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def qeinsum(spec: str, a: Array, b: Array, *,
+            key: Optional[Array] = None,
+            cfg: QuantConfig = PAPER_FP8,
+            classes: Tuple[str, str] = (ACT, WEIGHT)) -> Array:
+    """Quantized einsum (see module docstring). classes tags each operand as
+    'act' or 'weight', selecting its rounding/format and whether its gradient
+    is additionally stored as FP8 (weights only)."""
+    parse_spec(spec)  # validate early
+    if not cfg.enabled:
+        return _plain_einsum(spec, a, b, cfg)
+    if key is None:
+        if cfg.needs_key:
+            raise ValueError(
+                f"QuantConfig uses stochastic rounding; qeinsum({spec!r}) "
+                "needs a PRNG key")
+        key = jax.random.PRNGKey(0)
+    return _qeinsum(spec, tuple(classes), cfg, a, b, key)
+
+
+def qmatmul(a: Array, w: Array, *, key: Optional[Array] = None,
+            cfg: QuantConfig = PAPER_FP8) -> Array:
+    """x @ w for x: (..., K), w: (K, N) — the layer-projection fast path."""
+    if a.ndim == 2:
+        return qeinsum("mk,kn->mn", a, w, key=key, cfg=cfg)
+    if a.ndim == 3:
+        return qeinsum("bsk,kn->bsn", a, w, key=key, cfg=cfg)
+    lead = "abcdefg"[: a.ndim - 1]
+    return qeinsum(f"{lead}k,kn->{lead}n", a, w, key=key, cfg=cfg)

@@ -1,0 +1,265 @@
+"""Quantization primitives: RNE and stochastic rounding into FP8.
+
+This is the software realization of the paper's `Q` nodes (Fig. 1a): each GEMM
+produces a 32-bit result which is down-converted + rounded to FP8 before the
+next op. Two rounding modes, per paper §3.2:
+
+ * RNE  (round-to-nearest-even): what commodity hardware implements; shown by
+   the paper to be sufficient for small nets but to cause generalization loss
+   on ResNet-50 (unconstrained parameter growth).
+ * SR   (stochastic rounding): round(x) = floor(x) + eps with probability
+   (x - floor(x))/eps. The paper applies SR to activations and gradients and
+   recovers (slightly beats) the FP32 baseline.
+
+For E5M2 — the paper's format — SR is implemented *exactly* with the fp16
+bit-twiddle: e5m2 is the top byte of an IEEE fp16, so adding a uniform 8-bit
+integer to the fp16 bit pattern and truncating the low byte performs
+stochastic rounding on the real line (bit patterns are monotone in magnitude,
+and mantissa carries propagate into the exponent, handling binade crossings
+and the subnormal/normal boundary for free). This is also exactly what the
+Pallas kernel does on-TPU (kernels/stochastic_round), so ops and kernels are
+bit-identical by construction.
+
+Note on double rounding: inputs are first converted f32->f16 with RNE, then
+stochastically rounded f16->e5m2. The intermediate RNE step contributes a
+relative error <= 2^-11, i.e. 256x smaller than the e5m2 machine epsilon
+(2^-2); the residual bias is far below the quantization noise floor and is
+bounded in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fp8_formats import E4M3, E5M2, FloatFormat, get_format
+
+Array = jax.Array
+
+_F16_EXP_MASK = 0x7C00  # fp16 exponent field (all-ones => inf/nan)
+_F16_MAG_MASK = 0x7FFF
+_F16_SIGN_MASK = 0x8000
+_E5M2_MAX_F16_BITS = 0x7B00  # |57344| as fp16 bits — e5m2 max normal
+
+
+def _f16_bits(x: Array) -> Array:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float16), jnp.uint16)
+
+
+def _bits_f16(b: Array) -> Array:
+    return jax.lax.bitcast_convert_type(b.astype(jnp.uint16), jnp.float16)
+
+
+# ---------------------------------------------------------------------------
+# RNE quantization
+# ---------------------------------------------------------------------------
+
+def rne_overflow_threshold(fmt: FloatFormat) -> float:
+    """Smallest |x| that RNE rounds to infinity (midpoint of max_normal and
+    the next power of two)."""
+    return (fmt.max_normal + 2.0 ** (fmt.max_exp + 1)) / 2.0
+
+
+def quantize_rne(x: Array, fmt: FloatFormat = E5M2, *, saturate: bool = True) -> Array:
+    """Round-to-nearest-even down-conversion into `fmt`'s storage dtype.
+
+    saturate=True clamps overflow to +-max_normal (forward tensors);
+    saturate=False lets overflow become +-inf (error/grad tensors, so the
+    dynamic loss scaler can detect it and back off — paper §3.1).
+    """
+    if fmt.dtype is None:
+        raise ValueError(f"format {fmt.name} has no storage dtype")
+    # Dtype-preserving: all elementwise work stays in x's dtype (bf16 grads
+    # would otherwise materialize f32 copies of every weight-grad tensor —
+    # measured as the dominant training-memory term at 123B scale). The fp8
+    # grid bounds are exactly representable in bf16/f16/f32.
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        x = x.astype(jnp.float32)
+    q = x.astype(fmt.dtype)
+    if saturate:
+        # XLA's f32->f8 conversion saturates for e5m2 and produces NaN for
+        # e4m3fn overflow; normalize both to explicit clamping.
+        lo = jnp.asarray(-fmt.max_normal, x.dtype)
+        hi = jnp.asarray(fmt.max_normal, x.dtype)
+        clamped = jnp.clip(x, lo, hi)
+        q = jnp.where(jnp.isfinite(x), clamped.astype(fmt.dtype), q)
+    else:
+        thresh = jnp.asarray(rne_overflow_threshold(fmt), jnp.float32)
+        overflow = jnp.abs(x.astype(jnp.float32)) >= thresh \
+            if x.dtype == jnp.float16 else jnp.abs(x) >= thresh.astype(x.dtype)
+        inf = jnp.asarray(jnp.inf, x.dtype) * jnp.sign(x)
+        # e4m3fn has no inf encoding; overflow becomes NaN (still non-finite,
+        # still detectable by the loss scaler).
+        q = jnp.where(overflow & jnp.isfinite(x),
+                      inf.astype(fmt.dtype) if fmt.has_inf
+                      else jnp.asarray(jnp.nan, fmt.dtype),
+                      q)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding
+# ---------------------------------------------------------------------------
+
+def sr_e5m2_from_bits(h_bits: Array, rand8: Array, *, saturate: bool = True) -> Array:
+    """Exact E5M2 stochastic rounding given fp16 bit patterns + 8 random bits.
+
+    Pure uint16 math — shared verbatim with the Pallas kernel (ref oracle and
+    kernel body both call this). rand8 must be uniform in [0, 256).
+    """
+    h_bits = h_bits.astype(jnp.uint16)
+    sign = h_bits & _F16_SIGN_MASK
+    mag = h_bits & _F16_MAG_MASK
+    finite = mag < _F16_EXP_MASK
+    bumped = mag + (rand8.astype(jnp.uint16) & jnp.uint16(0xFF))
+    trunc = bumped & jnp.uint16(0xFF00)
+    if saturate:
+        trunc = jnp.minimum(trunc, jnp.uint16(_E5M2_MAX_F16_BITS))
+    else:
+        # Rounding up past max normal lands exactly on the inf pattern 0x7C00.
+        trunc = jnp.minimum(trunc, jnp.uint16(_F16_EXP_MASK))
+    out_mag = jnp.where(finite, trunc, mag & jnp.uint16(0xFF00) | (mag & jnp.uint16(0x0200)))
+    # (non-finite: preserve inf/nan; keep a nan-signalling mantissa bit)
+    return sign | out_mag
+
+
+def quantize_sr_e5m2(x: Array, key: Array, *, saturate: bool = True) -> Array:
+    """Stochastically round into e5m2 (the paper's SR, exact on the fp16 grid)."""
+    if saturate:
+        # Clamp before the f16 step so |x| beyond fp16 range cannot escape to
+        # inf around the bit-twiddle's finite-only path. Dtype-preserving:
+        # 57344 is exact in bf16/f16/f32.
+        lo = jnp.asarray(-E5M2.max_normal, x.dtype)
+        hi = jnp.asarray(E5M2.max_normal, x.dtype)
+        x = jnp.where(jnp.isnan(x), x, jnp.clip(x, lo, hi))
+    h = x.astype(jnp.float16)
+    bits = _f16_bits(h)
+    rand8 = jax.random.bits(key, bits.shape, jnp.uint16)
+    out_bits = sr_e5m2_from_bits(bits, rand8, saturate=saturate)
+    return _bits_f16(out_bits).astype(jnp.float8_e5m2)
+
+
+def quantize_sr_grid(x: Array, fmt: FloatFormat, key: Array, *,
+                     saturate: bool = True) -> Array:
+    """Generic grid-based stochastic rounding (any format, e.g. E4M3).
+
+    Decomposes |x| into (ulp, multiple-of-ulp) using the f32 exponent field,
+    adds U[0,1) before flooring. All grid arithmetic is exact in f32 because
+    ulp is a power of two and the mantissa multiple fits in 24 bits.
+    """
+    xf = x.astype(jnp.float32)
+    ax = jnp.abs(xf)
+    sgn = jnp.sign(xf)
+    xb = jax.lax.bitcast_convert_type(ax, jnp.uint32)
+    e_unb = (xb >> 23).astype(jnp.int32) - 127
+    e = jnp.maximum(e_unb, fmt.min_exp)
+    ulp_exp = e - fmt.man_bits
+    ulp = jnp.exp2(ulp_exp.astype(jnp.float32))
+    r = jax.random.uniform(key, xf.shape, jnp.float32)
+    q = jnp.floor(ax / ulp + r) * ulp
+    if saturate:
+        q = jnp.minimum(q, fmt.max_normal)
+    else:
+        q = jnp.where(q > fmt.max_normal, jnp.inf, q)
+    q = jnp.where(jnp.isfinite(xf), sgn * q, xf)
+    out = q.astype(fmt.dtype)
+    if not saturate and not fmt.has_inf:
+        out = jnp.where(jnp.isinf(q), jnp.asarray(jnp.nan, fmt.dtype), out)
+    return out
+
+
+def quantize_sr(x: Array, fmt: FloatFormat, key: Array, *,
+                saturate: bool = True) -> Array:
+    if fmt.name == "e5m2":
+        return quantize_sr_e5m2(x, key, saturate=saturate)
+    return quantize_sr_grid(x, fmt, key, saturate=saturate)
+
+
+# ---------------------------------------------------------------------------
+# Scaled quantization (QTensor)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    """An FP8 payload plus a dequantization scale: x ~= data.astype(f32) * scale.
+
+    `scale` is a scalar (per-tensor). The paper's loss scaling is *global*
+    (applied to the loss), so training-path QTensors usually carry scale=1;
+    per-tensor amax scaling (beyond-paper, cf. FP8-LM) sets
+    scale = amax / fmt.max_normal.
+    """
+    data: Array
+    scale: Array
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        return self.data.astype(jnp.float32) * self.scale.astype(jnp.float32) \
+            if self.scale.ndim == 0 else \
+            self.data.astype(jnp.float32) * self.scale[..., None].astype(jnp.float32)
+
+
+def amax_scale(x: Array, fmt: FloatFormat, *, margin: float = 1.0) -> Array:
+    """Per-tensor scale mapping amax -> fmt.max_normal / margin. The abs/max
+    reduce stays in x's dtype (no f32 copy); only the scalar is f32."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    amax = jnp.maximum(amax, 1e-12)
+    return amax * margin / fmt.max_normal
+
+
+def quantize(x: Array, fmt: Union[str, FloatFormat] = E5M2, *,
+             rounding: str = "rne",
+             key: Optional[Array] = None,
+             scale: Optional[Array] = None,
+             use_amax_scale: bool = False,
+             saturate: bool = True) -> QTensor:
+    """Quantize into a QTensor. rounding in {'rne','sr'}; 'sr' requires key."""
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        x = x.astype(jnp.float32)
+    if scale is None:
+        scale = amax_scale(x, fmt) if use_amax_scale \
+            else jnp.asarray(1.0, jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    if use_amax_scale or (hasattr(scale, "shape") and scale.shape != ()):
+        xs = x * (1.0 / scale).astype(x.dtype)
+    else:
+        # scale may be the static 1.0 default: keep the division but in
+        # x's dtype so no f32 copy of the tensor is materialized.
+        xs = x / scale.astype(x.dtype)
+    if rounding == "rne":
+        data = quantize_rne(xs, fmt, saturate=saturate)
+    elif rounding == "sr":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        data = quantize_sr(xs, fmt, key, saturate=saturate)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    return QTensor(data=data, scale=scale)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> Array:
+    # Dequantize directly in the target dtype (no f32 intermediate copy).
+    return q.data.astype(dtype) * q.scale.astype(dtype)
+
+
+# Convenience: fake-quantize (quantize-dequantize) in one call — used by the
+# emulation path on CPU and by tests as the semantic reference.
+def fake_quant(x: Array, fmt: Union[str, FloatFormat] = E5M2, *,
+               rounding: str = "rne", key: Optional[Array] = None,
+               scale: Optional[Array] = None, saturate: bool = True) -> Array:
+    q = quantize(x, fmt, rounding=rounding, key=key, scale=scale,
+                 saturate=saturate)
+    return dequantize(q, dtype=x.dtype)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, synthetic_image_batches,
+                                 synthetic_lm_batches, synthetic_seq2seq_batches)
+
+__all__ = ["DataConfig", "synthetic_lm_batches", "synthetic_image_batches",
+           "synthetic_seq2seq_batches"]

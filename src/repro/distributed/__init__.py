@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (batch_specs, param_specs,
+                                        state_specs, zero1_specs)
+
+__all__ = ["batch_specs", "param_specs", "state_specs", "zero1_specs"]

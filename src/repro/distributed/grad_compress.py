@@ -1,0 +1,118 @@
+"""FP8-compressed cross-pod gradient all-reduce with error feedback.
+
+Beyond-paper distributed optimization: the paper makes FP8 a *storage*
+format for W/A/E/G; here it also becomes the *wire* format for the
+data-parallel gradient reduction across the pod boundary — the slowest link
+in a multi-pod mesh (DCN / inter-pod ICI), and the collective the roofline
+shows dominating multi-pod training steps.
+
+Algorithm (per gradient leaf, executed under shard_map over the pod axis):
+
+  1. e      <- error-feedback buffer (f32, same shape as grad)
+  2. y      =  g + e
+  3. scale  =  pmax(amax(|y|)) / E5M2_max      (shared scale: decode-correct)
+  4. q      =  RNE_e5m2(y / scale)             (1 byte/element on the wire)
+  5. reduce-scatter in FP8: all_to_all the fp8 shards (1B/elt), upcast to
+     f32 locally, sum — single-hop summation, so precision loss is one
+     quantization, not log(N) re-quantizations.
+  6. q2     =  RNE_e5m2(partial_sum / (scale * n))   ; all_gather q2 (1B/elt)
+  7. out    =  dequant                                ; e' = y - dequant(q)
+
+Wire bytes: 2 x (N-1)/N x |g| x 1 byte — half of a bf16 ring all-reduce,
+quarter of f32. Error feedback makes the compression unbiased over time
+(residuals re-enter the next step), the standard convergence fix for lossy
+gradient compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8_formats import E5M2
+from repro.core.quantize import quantize_rne
+
+Array = jax.Array
+
+
+def _amax(x: Array) -> Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
+    """Compressed all-reduce-mean of y over `axis_name` (inside shard_map).
+
+    Returns (mean, dequantized_local_contribution) — the caller computes the
+    error-feedback residual as y - dequantized_local_contribution.
+    """
+    n = jax.lax.axis_size(axis_name)
+    scale = jax.lax.pmax(_amax(y), axis_name) / E5M2.max_normal
+    scale = jnp.maximum(scale, 1e-30)
+    q = quantize_rne(y / scale, E5M2, saturate=True)        # local fp8
+
+    flat = q.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+    # reduce-scatter leg: all_to_all moves fp8 (1B/elt on the wire)
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    partial = recv.astype(jnp.float32).sum(axis=0) * scale   # (chunk,) f32
+    # all-gather leg: re-quantize the reduced shard, 1B/elt again
+    scale2 = jnp.maximum(jax.lax.pmax(_amax(partial), axis_name)
+                         / E5M2.max_normal, 1e-30)
+    q2 = quantize_rne(partial / scale2, E5M2, saturate=True)
+    gathered = jax.lax.all_gather(q2, axis_name)             # (n, chunk) fp8
+    total = gathered.astype(jnp.float32).reshape(-1) * scale2
+    if pad:
+        total = total[:-pad]
+    mean = (total / n).reshape(y.shape)
+    local_contrib = (q.astype(jnp.float32) * scale).reshape(y.shape)
+    return mean, local_contrib
+
+
+def compressed_psum_mean(grads: Any, error: Optional[Any], *,
+                         axis_name: str) -> Tuple[Any, Any]:
+    """Tree-wise compressed mean-reduce with error feedback.
+
+    grads: pytree of per-device gradient shards (inside shard_map over
+    `axis_name`). error: matching residual pytree (or None on step 0).
+    Returns (reduced_grads, new_error).
+    """
+    if error is None:
+        error = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        y = g.astype(jnp.float32) + e
+        mean, local = fp8_allreduce_mean(y, axis_name=axis_name)
+        return mean.astype(g.dtype), y - local
+
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    reduced = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, new_err
+
+
+def make_compressed_dp_allreduce(mesh, *, axis_name: str = "pod"):
+    """shard_map-wrapped compressed all-reduce over one mesh axis; other axes
+    pass through. Usable as a drop-in on a gradient pytree whose leaves are
+    replicated over `axis_name` — e.g. after per-pod reduction, before the
+    optimizer."""
+    from jax.sharding import PartitionSpec as P
+
+    def allreduce(grads, error):
+        def inner(g, e):
+            return compressed_psum_mean(g, e, axis_name=axis_name)
+        specs = jax.tree_util.tree_map(lambda _: P(), grads)
+        return jax.shard_map(inner, mesh=mesh,
+                             in_specs=(specs, specs),
+                             out_specs=(specs, specs),
+                             check_vma=False)(grads, error)
+
+    return allreduce

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the FP8 training hot spots.
+
+Three kernels, each with kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with padding/shape handling) and ref.py (pure-jnp
+oracle used by tests):
+
+ * stochastic_round   — the paper's Q node: f32/bf16 -> e5m2 with SR/RNE.
+ * fp8_matmul         — FP8xFP8 -> FP32-accumulated matmul (paper Fig. 1a):
+                        fp8 tiles live in HBM, are up-converted in VMEM, and
+                        hit the MXU as bf16 with an f32 accumulator.
+ * fused_quant_matmul — matmul with the quantize epilogue fused in VMEM: the
+                        f32 accumulator tile is scaled + rounded to e5m2
+                        before it ever leaves the chip (beyond-paper: the
+                        paper materializes the f32 output then quantizes).
+"""

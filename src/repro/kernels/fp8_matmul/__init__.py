@@ -1,0 +1,4 @@
+from repro.kernels.fp8_matmul.ops import fp8_matmul
+from repro.kernels.fp8_matmul.ref import fp8_matmul_ref
+
+__all__ = ["fp8_matmul", "fp8_matmul_ref"]

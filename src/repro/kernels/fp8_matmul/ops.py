@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for fp8_matmul: padding to MXU-aligned tiles."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fp8_matmul import kernel as _k
+
+
+def _pad_to(x, mult0, mult1):
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype",
+                                             "interpret"))
+def fp8_matmul(a, b, *, bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
+               out_dtype=jnp.float32, interpret: bool = False):
+    """a: (M, K) fp8, b: (K, N) fp8 -> (M, N). Pads to tile multiples
+    (zero padding is exact for matmul) and slices the result back."""
+    m, n = a.shape[0], b.shape[1]
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, max(128, n))
+    bk_ = min(bk, max(128, a.shape[1]))
+    ap = _pad_to(a, bm_, bk_)
+    bp = _pad_to(b, bk_, bn_)
+    out = _k.fp8_matmul_kernel(ap, bp, bm=bm_, bk=bk_, bn=bn_,
+                               out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]

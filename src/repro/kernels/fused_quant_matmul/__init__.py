@@ -1,0 +1,4 @@
+from repro.kernels.fused_quant_matmul.ops import fused_quant_matmul
+from repro.kernels.fused_quant_matmul.ref import fused_quant_matmul_ref
+
+__all__ = ["fused_quant_matmul", "fused_quant_matmul_ref"]

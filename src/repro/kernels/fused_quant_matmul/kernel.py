@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: FP8 matmul with the quantize epilogue FUSED in VMEM.
+
+Beyond-paper optimization. The paper's dataflow materializes the FP32 GEMM
+output to memory and then applies the Q node (down-convert + round) as a
+separate op — on TPU that is an extra HBM round-trip of 4 bytes/element out +
+4 in + 1 out. Fusing Q into the matmul epilogue means the f32 accumulator
+tile is scaled and rounded to e5m2 *while still in VMEM*, writing only
+1 byte/element to HBM: an 8x reduction in epilogue write traffic and the
+elimination of the Q-node read pass entirely.
+
+Rounding in the epilogue supports both RNE (deterministic) and SR, matching
+the paper's Q-node semantics (sr via the exact fp16 bit-twiddle shared with
+core.quantize). This is precisely the paper's architectural argument —
+"rounding belongs in the epilogue, not the MAC" — taken one step further:
+the epilogue never leaves the chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import sr_e5m2_from_bits
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+DEFAULT_BN = 256
+
+
+def _quantize_tile(acc, rand8, inv_scale, *, rounding: str, saturate: bool):
+    y = acc * inv_scale
+    if rounding == "rne":
+        if saturate:
+            y = jnp.clip(y, -57344.0, 57344.0)
+        return y.astype(jnp.float8_e5m2)
+    h = y.astype(jnp.float16)
+    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
+    out_bits = sr_e5m2_from_bits(bits, rand8.astype(jnp.uint16),
+                                 saturate=saturate)
+    return jax.lax.bitcast_convert_type(out_bits, jnp.float16).astype(
+        jnp.float8_e5m2)
+
+
+def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
+          rounding: str, saturate: bool, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.bfloat16)
+    b = b_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        inv = 1.0 / scale_ref[0]
+        o_ref[...] = _quantize_tile(acc_ref[...], rand_ref[...], inv,
+                                    rounding=rounding, saturate=saturate)
+
+
+def fused_quant_matmul_kernel(a, b, rand8, scale, *,
+                              bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN,
+                              rounding: str = "sr", saturate: bool = True,
+                              interpret: bool = False):
+    """a: (M,K) fp8, b: (K,N) fp8, rand8: (M,N) u8, scale: (1,) f32
+    -> (M,N) e5m2 quantized output (value semantics: Q((a@b)/scale))."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_body, rounding=rounding, saturate=saturate,
+                          n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(a, b, rand8, scale)

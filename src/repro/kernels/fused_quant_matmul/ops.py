@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for fused_quant_matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_quant_matmul import kernel as _k
+
+
+def _pad_to(x, mult0, mult1):
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "rounding",
+                                             "saturate", "interpret"))
+def fused_quant_matmul(a, b, key, scale=None, *,
+                       bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
+                       rounding: str = "sr", saturate: bool = True,
+                       interpret: bool = False):
+    """Q((a @ b) / scale) -> e5m2, with the Q node fused into the epilogue."""
+    m, n = a.shape[0], b.shape[1]
+    if scale is None:
+        scale = jnp.ones((1,), jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, max(128, n))
+    bk_ = min(bk, max(128, a.shape[1]))
+    ap = _pad_to(a, bm_, bk_)
+    bp = _pad_to(b, bk_, bn_)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    rand8 = jax.random.bits(key, (mp, np_), jnp.uint8) if rounding == "sr" \
+        else jnp.zeros((mp, np_), jnp.uint8)
+    out = _k.fused_quant_matmul_kernel(ap, bp, rand8, scale,
+                                       bm=bm_, bk=bk_, bn=bn_,
+                                       rounding=rounding, saturate=saturate,
+                                       interpret=interpret)
+    return out[:m, :n]

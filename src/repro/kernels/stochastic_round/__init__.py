@@ -1,0 +1,4 @@
+from repro.kernels.stochastic_round.ops import stochastic_round_e5m2
+from repro.kernels.stochastic_round.ref import stochastic_round_e5m2_ref
+
+__all__ = ["stochastic_round_e5m2", "stochastic_round_e5m2_ref"]

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the stochastic_round kernel (padding + reshaping)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stochastic_round import kernel as _k
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("saturate", "interpret", "use_onchip_prng"))
+def stochastic_round_e5m2(x, key, scale=None, *, saturate: bool = True,
+                          interpret: bool = False,
+                          use_onchip_prng: bool = False):
+    """Quantize x -> e5m2 with stochastic rounding via the Pallas kernel.
+
+    Accepts any rank; internally flattens to 2D (TPU tiles are 2D). `key` is
+    a JAX PRNG key (operand-randomness path) or an int32 seed scalar
+    (on-chip-PRNG path).
+    """
+    if scale is None:
+        scale = jnp.ones((1,), jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    orig_shape = x.shape
+    n = orig_shape[-1] if x.ndim >= 1 else 1
+    x2 = x.reshape((-1, n))
+    if use_onchip_prng:
+        seed = jnp.asarray(key, jnp.int32).reshape((1,))
+        out = _k.sr_quantize_kernel_onchip(x2, seed, scale, saturate=saturate)
+    else:
+        rand8 = jax.random.bits(key, x2.shape, jnp.uint8)
+        out = _k.sr_quantize_kernel(x2, rand8, scale, saturate=saturate,
+                                    interpret=interpret)
+    return out.reshape(orig_shape)

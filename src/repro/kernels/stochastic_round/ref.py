@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the stochastic_round kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import sr_e5m2_from_bits
+
+
+def stochastic_round_e5m2_ref(x, rand8, scale, *, saturate: bool = True):
+    """Bit-exact reference: same math as the kernel, no tiling."""
+    inv = (1.0 / scale.reshape(())).astype(jnp.float32)
+    h = (x.astype(jnp.float32) * inv).astype(jnp.float16)
+    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
+    out_bits = sr_e5m2_from_bits(bits, rand8.astype(jnp.uint16),
+                                 saturate=saturate)
+    return jax.lax.bitcast_convert_type(out_bits, jnp.float16).astype(
+        jnp.float8_e5m2)

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod-slice class).
+Multi-pod: (pod=2, data=16, model=16) — 512 chips; the 'pod' axis carries
+data parallelism across the inter-pod (DCN/ICI) boundary, which is where the
+FP8 gradient compression (distributed/grad_compress.py) pays off.
+
+These are FUNCTIONS, not module constants: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+DATA_PARALLEL_AXES: Tuple[str, ...] = ("pod", "data")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present in a mesh ('pod' + 'data')."""
+    return tuple(a for a in DATA_PARALLEL_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,107 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration runner for §Perf hillclimbing.
+
+Compiles a named VARIANT of a dry-run cell (a dict of ModelConfig /
+PrecisionPolicy overrides), derives the roofline terms, and appends the
+record to experiments/perf/<arch>_<shape>.jsonl — the raw material for the
+hypothesis -> change -> measure log.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch mistral-large-123b \
+      --shape decode_32k --variant kv_fp8 --set policy.kv_cache_format=e5m2
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline.analysis import analyze_record
+
+
+def run_variant(arch: str, shape: str, variant: str, overrides: dict, *,
+                unroll: bool = False, out_dir: str = "experiments/perf"):
+    mesh = make_production_mesh()
+    rec = dict(arch=arch, shape=shape, mesh="single", variant=variant,
+               overrides=overrides, unroll=unroll,
+               n_devices=mesh.devices.size, status="pending")
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            cell = build_cell(arch, shape, mesh, unroll_layers=unroll,
+                              overrides=overrides)
+            rec["meta"] = cell["meta"]
+            compiled = jax.jit(
+                cell["fn"], in_shardings=cell["in_shardings"],
+                out_shardings=cell["out_shardings"],
+                donate_argnums=cell.get("donate_argnums", ()),
+            ).lower(*cell["args"]).compile()
+            ma = compiled.memory_analysis()
+            rec["memory"] = dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+                peak_bytes=int(ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes))
+            ca = compiled.cost_analysis()
+            rec["cost"] = {k: float(v) for k, v in ca.items()
+                           if k in ("flops", "bytes accessed",
+                                    "transcendentals")}
+            rec["collectives"] = parse_collectives(compiled.as_text())
+            rec["status"] = "ok"
+            rec["roofline"] = analyze_record(rec)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+    rec["total_s"] = round(time.time() - t0, 2)
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    with open(out / f"{arch}_{shape}.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"[perf] {arch} {shape} {variant}: compute={r['compute_s']:.3e}"
+              f" memory={r['memory_s']:.3e} coll={r['collective_s']:.3e}"
+              f" dom={r['dominant']} peak={r['peak_gib']:.1f}GiB")
+    else:
+        print(f"[perf] {arch} {shape} {variant}: {rec['error'][:150]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="key=value ModelConfig/policy overrides")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v == "true":
+            v = True
+        elif v == "false":
+            v = False
+        overrides[k] = v
+    run_variant(args.arch, args.shape, args.variant, overrides,
+                unroll=args.unroll)
+
+
+if __name__ == "__main__":
+    main()

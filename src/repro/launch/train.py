@@ -1,0 +1,58 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --steps 100 --smoke          # CPU-scale
+  # On a real fleet the same entry point runs under your cluster launcher
+  # (one process per host); jax.distributed.initialize() is called when
+  # COORDINATOR_ADDRESS is set, and the mesh comes from launch.mesh.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if os.environ.get("COORDINATOR_ADDRESS"):
+        import jax
+        jax.distributed.initialize()   # multi-host fleet entry
+
+    from repro.core.loss_scale import LossScaler
+    from repro.data import DataConfig, synthetic_lm_batches
+    from repro.models.registry import build_config
+    from repro.train.loop import LoopConfig, TrainLoop
+    from repro.train.step import make_optimizer_for
+
+    cfg = build_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = cfg.replace(remat=False)
+    opt = make_optimizer_for(cfg, name="adam", learning_rate=args.lr,
+                             scaler=LossScaler(mode="enhanced",
+                                               init_scale=2.0**13))
+    data = synthetic_lm_batches(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        batch_size=args.batch, seed=0))
+    loop = TrainLoop(cfg, opt, data,
+                     LoopConfig(total_steps=args.steps,
+                                checkpoint_every=max(10, args.steps // 4),
+                                checkpoint_dir=args.ckpt_dir,
+                                metrics_path=f"{args.ckpt_dir}/metrics.jsonl",
+                                n_microbatches=args.microbatches))
+    loop.install_signal_handlers()
+    out = loop.run()
+    print(f"finished step {out['last_step']} loss="
+          f"{out['metrics'].get('loss', float('nan')):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import build_config, list_archs
+
+__all__ = ["ModelConfig", "build_config", "list_archs"]

@@ -1,0 +1,308 @@
+"""GQA attention with FP8 GEMMs, long-context chunking, and KV caches.
+
+Memory strategy for long sequences (prefill_32k and train_4k cells): queries
+are processed in chunks of `cfg.attn_chunk_size`; each q-chunk attends to its
+*static* causal prefix (a python-level slice, so shapes stay static and the
+compiled FLOPs are the true triangular count, not the masked-full-matrix
+2x overcount). The per-chunk score tile (cq x prefix) is the only transient.
+
+Local (sliding-window) attention slices the static band instead of the full
+prefix. Decode uses a ring-buffer cache of `window` slots for local layers —
+softmax is permutation-invariant over KV slots, so ring order is fine as long
+as RoPE is applied before caching; slot validity is tracked by absolute
+position.
+
+KV caches can be stored in FP8 e5m2 (beyond-paper; halves the decode
+bandwidth, which the roofline shows is the decode bottleneck).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig
+from repro.core.qlinear import qeinsum
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, subkey
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh),
+        "wk": dense_init(ks[1], d, hkv * dh),
+        "wv": dense_init(ks[2], d, hkv * dh),
+        "wo": dense_init(ks[3], h * dh, d, scale=0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV cache (optionally FP8)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               n_layers: Optional[int] = None, window: int = 0):
+    """Stacked-over-layers cache pytree. window>0 => ring buffer of that size."""
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    length = min(window, max_len) if window else max_len
+    l = cfg.n_layers if n_layers is None else n_layers
+    fmt = cfg.policy.kv_cache_format
+    dtype = {"e5m2": jnp.float8_e5m2, "e4m3": jnp.float8_e4m3fn,
+             None: jnp.bfloat16}[fmt]
+    return {
+        "k": jnp.zeros((l, batch, length, hkv, dh), dtype),
+        "v": jnp.zeros((l, batch, length, hkv, dh), dtype),
+        # Absolute position stored in each slot; -1 = empty.
+        "slot_pos": jnp.full((l, batch, length), -1, jnp.int32),
+        "length": jnp.zeros((l, batch), jnp.int32),
+    }
+
+
+def _store_dtype(cache_layer):
+    return cache_layer["k"].dtype
+
+
+def _to_cache_dtype(x: Array, dtype) -> Array:
+    if dtype in (jnp.float8_e5m2, jnp.float8_e4m3fn):
+        # RNE, saturating — inference-side quantization (no SR at eval).
+        return jnp.clip(x.astype(jnp.float32), -57344.0, 57344.0).astype(dtype)
+    return x.astype(dtype)
+
+
+def _from_cache_dtype(x: Array, dtype=jnp.bfloat16) -> Array:
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _qk_scores(q: Array, k: Array, qcfg: QuantConfig, qkey, op: int) -> Array:
+    """q: (B,H,Q,dh) x k: (B,H,K,dh) -> (B,H,Q,K) f32."""
+    if qcfg.enabled and qcfg.quantize_attention:
+        s = qeinsum("bhqd,bhkd->bhqk", q, k, key=subkey(qkey, op), cfg=qcfg,
+                    classes=("act", "act"))
+    else:
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.bfloat16),
+                       k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    return s.astype(jnp.float32)
+
+
+def _pv(probs: Array, v: Array, qcfg: QuantConfig, qkey, op: int) -> Array:
+    if qcfg.enabled and qcfg.quantize_attention:
+        return qeinsum("bhqk,bhkd->bhqd", probs.astype(jnp.bfloat16), v,
+                       key=subkey(qkey, op), cfg=qcfg, classes=("act", "act"))
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(jnp.bfloat16),
+                      v.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(B,Hkv,S,dh) -> (B,Hkv*groups,S,dh) for GQA."""
+    if groups == 1:
+        return k
+    b, hkv, s, dh = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, hkv, groups, s, dh)
+                            ).reshape(b, hkv * groups, s, dh)
+
+
+def _sdpa(q, k, v, mask, scale, qcfg, qkey, op_base) -> Array:
+    """Dense scaled-dot-product attention on (B,H,S,dh) tensors; f32 softmax."""
+    s = _qk_scores(q, k, qcfg, qkey, op_base) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    return _pv(p, v, qcfg, qkey, op_base + 1)
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int, scale: float,
+                             qcfg: QuantConfig, qkey, window: int = 0,
+                             remat: bool = True) -> Array:
+    """Causal attention over (B,H,S,dh) with static-prefix chunking.
+
+    Python loop over q chunks; chunk i attends k/v[: (i+1)*chunk] (or the
+    static window band). Shapes are static per chunk; compiled FLOPs equal the
+    true triangular cost. The per-chunk compute is rematerialized in backward.
+    """
+    b, h, s, dh = q.shape
+    n_chunks = max(1, (s + chunk - 1) // chunk)
+
+    def one_chunk(qc, kc, vc, mask):
+        return _sdpa(qc, kc, vc, mask, scale, qcfg, qkey, 10)
+
+    if remat:
+        one_chunk = jax.checkpoint(one_chunk)
+
+    outs = []
+    for i in range(n_chunks):
+        q0, q1 = i * chunk, min((i + 1) * chunk, s)
+        k0 = 0 if not window else max(0, q0 - window + 1)
+        k1 = q1
+        qc = q[:, :, q0:q1]
+        kc, vc = k[:, :, k0:k1], v[:, :, k0:k1]
+        qpos = jnp.arange(q0, q1)[:, None]
+        kpos = jnp.arange(k0, k1)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        outs.append(one_chunk(qc, kc, vc, mask[None, None]))
+    return jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+
+
+def full_bidirectional_attention(q, k, v, *, scale, qcfg, qkey,
+                                 kv_mask=None) -> Array:
+    mask = None if kv_mask is None else kv_mask[:, None, None, :]
+    return _sdpa(q, k, v, mask, scale, qcfg, qkey, 20)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + modes)
+# ---------------------------------------------------------------------------
+
+def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+              qkey, positions: Array, mode: str = "train",
+              cache_layer=None, kv_x: Optional[Array] = None,
+              window: int = 0) -> Tuple[Array, Optional[dict]]:
+    """Full attention block.
+
+    modes:
+      train   — causal self-attention, no cache.
+      encode  — bidirectional self-attention (encoder), no cache.
+      cross   — queries from x, keys/values from kv_x (no cache, train) .
+      prefill — causal; writes the cache and returns it.
+      decode  — single-token step against cache_layer.
+    Returns (y, new_cache_layer) (new cache is None unless prefill/decode).
+    """
+    b, sq, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / (dh ** 0.5)
+
+    q = qeinsum("bsd,dn->bsn", x, params["wq"], key=subkey(qkey, 0), cfg=qcfg)
+    src = kv_x if kv_x is not None else x
+    k = qeinsum("bsd,dn->bsn", src, params["wk"], key=subkey(qkey, 1), cfg=qcfg)
+    v = qeinsum("bsd,dn->bsn", src, params["wv"], key=subkey(qkey, 2), cfg=qcfg)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+
+    q = q.reshape(b, sq, h, dh)
+    k = k.reshape(b, -1, hkv, dh)
+    v = v.reshape(b, -1, hkv, dh)
+
+    if kv_x is None and mode != "cross":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if mode != "decode":
+            k = apply_rope(k, positions, cfg.rope_theta)
+        else:
+            k = apply_rope(k, positions, cfg.rope_theta)  # single position
+
+    # (B, S, H, dh) -> (B, H, S, dh); shard heads over 'model' (falls back to
+    # replication when H does not divide the axis, e.g. qwen2's 12 heads).
+    qt = constrain(q.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    new_cache = None
+
+    if mode in ("train", "encode", "cross", "prefill"):
+        kt = _repeat_kv(k.transpose(0, 2, 1, 3), h // hkv)
+        vt = _repeat_kv(v.transpose(0, 2, 1, 3), h // hkv)
+        kt = constrain(kt, "dp", "model", None, None)
+        vt = constrain(vt, "dp", "model", None, None)
+        if mode in ("encode", "cross"):
+            o = full_bidirectional_attention(qt, kt, vt, scale=scale,
+                                             qcfg=qcfg, qkey=qkey)
+        else:
+            use_chunks = sq > cfg.attn_chunk_threshold or window
+            if use_chunks:
+                o = chunked_causal_attention(
+                    qt, kt, vt, chunk=min(cfg.attn_chunk_size, sq),
+                    scale=scale, qcfg=qcfg, qkey=qkey, window=window,
+                    remat=cfg.remat)
+            else:
+                qpos = jnp.arange(sq)
+                mask = (qpos[None, :, None] >= qpos[None, None, :])[:, None]
+                o = _sdpa(qt, kt, vt, mask, scale, qcfg, qkey, 30)
+        if mode == "prefill" and cache_layer is not None:
+            new_cache = _prefill_cache(cache_layer, k, v, positions)
+    elif mode == "decode":
+        assert cache_layer is not None
+        new_cache = _append_cache(cache_layer, k, v, positions)
+        dt = jnp.bfloat16
+        kt = _from_cache_dtype(new_cache["k"], dt).transpose(0, 2, 1, 3)
+        vt = _from_cache_dtype(new_cache["v"], dt).transpose(0, 2, 1, 3)
+        kt = constrain(_repeat_kv(kt, h // hkv), "dp", "model", None, None)
+        vt = constrain(_repeat_kv(vt, h // hkv), "dp", "model", None, None)
+        # Validity: slot filled and within window (if any).
+        slot_pos = new_cache["slot_pos"]            # (B, C)
+        cur = positions[:, -1:]                     # (B, 1)
+        valid = (slot_pos >= 0) & (slot_pos <= cur)
+        if window:
+            valid &= slot_pos > cur - window
+        o = _sdpa(qt, kt, vt, valid[:, None, None, :], scale, qcfg, qkey, 40)
+    else:
+        raise ValueError(f"unknown attention mode {mode!r}")
+
+    o = o.transpose(0, 2, 1, 3).reshape(b, sq, h * dh)
+    y = qeinsum("bsn,nd->bsd", o, params["wo"], key=subkey(qkey, 3), cfg=qcfg)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+def _prefill_cache(cache_layer, k, v, positions):
+    """Write the first S entries (or last `window` for ring caches)."""
+    dtype = _store_dtype(cache_layer)
+    cap = cache_layer["k"].shape[1]
+    s = k.shape[1]
+    if s <= cap:
+        kq = _to_cache_dtype(k, dtype)
+        vq = _to_cache_dtype(v, dtype)
+        new_k = jax.lax.dynamic_update_slice(
+            cache_layer["k"], kq, (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache_layer["v"], vq, (0, 0, 0, 0))
+        slot = jnp.full(cache_layer["slot_pos"].shape, -1, jnp.int32)
+        slot = jax.lax.dynamic_update_slice(slot, positions.astype(jnp.int32),
+                                            (0, 0))
+    else:
+        # Ring cache smaller than the prompt: keep the last `cap` tokens.
+        kq = _to_cache_dtype(k[:, -cap:], dtype)
+        vq = _to_cache_dtype(v[:, -cap:], dtype)
+        new_k, new_v = kq, vq
+        slot = positions[:, -cap:].astype(jnp.int32)
+    length = jnp.minimum(
+        jnp.full(cache_layer["length"].shape, s, jnp.int32), cap)
+    return {"k": new_k, "v": new_v, "slot_pos": slot, "length": length}
+
+
+def _append_cache(cache_layer, k, v, positions):
+    """Insert one token at position pos (ring index pos % capacity)."""
+    dtype = _store_dtype(cache_layer)
+    cap = cache_layer["k"].shape[1]
+    pos = positions[:, -1]                      # (B,)
+    idx = pos % cap                             # ring slot per batch element
+    kq = _to_cache_dtype(k, dtype)              # (B, 1, Hkv, dh)
+    vq = _to_cache_dtype(v, dtype)
+    b_idx = jnp.arange(k.shape[0])
+    new_k = cache_layer["k"].at[b_idx, idx].set(kq[:, 0])
+    new_v = cache_layer["v"].at[b_idx, idx].set(vq[:, 0])
+    slot = cache_layer["slot_pos"].at[b_idx, idx].set(pos.astype(jnp.int32))
+    length = jnp.minimum(cache_layer["length"] + 1, cap)
+    return {"k": new_k, "v": new_v, "slot_pos": slot, "length": length}

@@ -1,0 +1,120 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.precision_policy import PAPER_POLICY, PrecisionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str = "custom"
+    family: str = "dense"   # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False          # qwen2 keeps QKV bias
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "silu"               # silu | gelu
+    rope_theta: float = 10_000.0
+    max_seq_len: int = 8192
+
+    # MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # Per-sample dispatch keeps gather/scatter indices local to each batch
+    # element (dp shard) — under SPMD a *global* token dispatch lowers to
+    # one-hot GEMMs over the full token table (measured: ~300x the useful
+    # expert FLOPs at 1M tokens). Global dispatch kept for ablation.
+    moe_per_sample_dispatch: bool = True
+
+    # hybrid / ssm -------------------------------------------------------
+    # Repeating block pattern; () means all-attention. Entries:
+    #  "attn" | "local_attn" | "rglru" | "mlstm" | "slstm"
+    block_pattern: Tuple[str, ...] = ()
+    window: int = 0                  # local-attention window (recurrentgemma)
+    lru_dim: int = 0                 # RG-LRU recurrent width (0 => d_model)
+    ssm_proj_factor: float = 2.0     # xLSTM block up-projection factor
+
+    # encoder-decoder (seamless) ------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+
+    # modality frontends (stubs per assignment) ---------------------------
+    frontend: Optional[str] = None   # None | "patch_stub" | "audio_stub"
+    n_frontend_tokens: int = 0       # patches / frames provided as embeddings
+
+    # numerics / execution -------------------------------------------------
+    policy: PrecisionPolicy = PAPER_POLICY
+    remat: bool = True
+    scan_layers: bool = True
+    # Megatron-style sequence parallelism: shard the residual stream's
+    # sequence dim over 'model' between blocks — the saved scan residuals
+    # shrink by the TP degree (needed to fit 88-layer x 12k-wide models).
+    sequence_parallel: bool = False
+    # Attention memory strategy: sequences longer than this use chunked
+    # (static-prefix) attention; <= uses a single dense attention. 2048 keeps
+    # the per-chunk f32 score tile bounded even at train_4k.
+    attn_chunk_threshold: int = 2048
+    attn_chunk_size: int = 1024
+
+    # ----------------------------------------------------------------------
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab padded to a multiple of 16 (Megatron-style) so the embedding
+        table / logits head shard over a 16-way model axis; lm_loss masks the
+        padded columns."""
+        return -(-self.vocab_size // 16) * 16
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def pattern(self) -> Tuple[str, ...]:
+        return self.block_pattern if self.block_pattern else ("attn",)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind for all n_layers, repeating the pattern."""
+        pat = self.pattern()
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + layers + head)."""
+        d, dh = self.d_model, self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        for kind in self.layer_kinds():
+            if kind in ("attn", "local_attn"):
+                per_layer += d * (self.n_heads * dh + 2 * self.n_kv_heads * dh)
+                per_layer += self.n_heads * dh * d
+            elif kind == "rglru":
+                w = self.lru_dim or self.d_model
+                per_layer += 2 * d * w + 3 * w + w * d
+            elif kind in ("mlstm", "slstm"):
+                inner = int(d * self.ssm_proj_factor)
+                per_layer += 2 * d * inner + 4 * inner * inner // 4 + inner * d
+            if kind not in ("mlstm", "slstm"):
+                if self.n_experts:
+                    per_layer += self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+                elif self.d_ff:
+                    per_layer += 3 * d * self.d_ff
+        enc = 0
+        if self.is_encoder_decoder:
+            enc = self.n_encoder_layers * (4 * d * d + 3 * d * self.d_ff
+                                           + 2 * d * d)
+        return emb + per_layer + enc

@@ -1,0 +1,164 @@
+"""Shared NN layers, FP8-aware. Plain functional style: init_* returns a
+param dict, the apply function takes (params, x, ...).
+
+GEMM-bearing layers route through core.qlinear.qeinsum so the paper's W/A/E/G
+quantization applies uniformly; norms, softmax and embedding lookups run in
+f32/bf16 (the paper keeps non-GEMM ops at >= 16-bit).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig, dtype_of
+from repro.core.qlinear import qeinsum
+
+Array = jax.Array
+
+
+def subkey(key: Optional[Array], op_id: int) -> Optional[Array]:
+    """Deterministic per-op PRNG key (None passes through for RNE configs)."""
+    if key is None:
+        return None
+    return jax.random.fold_in(key, op_id)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float = 1.0,
+               dtype=jnp.float32) -> Array:
+    std = scale / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.float32) -> Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d),
+                                        jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (f32 math regardless of input dtype)
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x: Array, *, eps: float = 1e-5) -> Array:
+    # Statistics in f32 (a per-row scalar), elementwise application in x's
+    # dtype — avoids materializing full-sequence f32 copies (and their f32
+    # cotangents) of the residual stream.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x: Array, *, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * inv * params["scale"].astype(x.dtype)
+            + params["bias"].astype(x.dtype))
+
+
+def make_norm(norm_type: str, d: int):
+    if norm_type == "rmsnorm":
+        return init_rmsnorm(d)
+    return init_layernorm(d)
+
+
+def apply_norm(params, x: Array, *, eps: float = 1e-5) -> Array:
+    if "bias" in params:
+        return layernorm(params, x, eps=eps)
+    return rmsnorm(params, x, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP / GLU (FP8 GEMMs)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, *, glu: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff),
+         "down": dense_init(ks[1], d_ff, d, scale=0.5)}
+    if glu:
+        p["gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def mlp(params, x: Array, *, act: str, qcfg: QuantConfig,
+        qkey: Optional[Array]) -> Array:
+    """(Gated) MLP with all three GEMMs in FP8."""
+    a = activation(act)
+    up = qeinsum("bsd,df->bsf", x, params["up"], key=subkey(qkey, 1), cfg=qcfg)
+    if "gate" in params:
+        gate = qeinsum("bsd,df->bsf", x, params["gate"],
+                       key=subkey(qkey, 2), cfg=qcfg)
+        h = a(gate.astype(jnp.float32)).astype(up.dtype) * up
+    else:
+        h = a(up.astype(jnp.float32)).astype(up.dtype)
+    return qeinsum("bsf,fd->bsd", h, params["down"],
+                   key=subkey(qkey, 3), cfg=qcfg)
+
+
+# ---------------------------------------------------------------------------
+# embedding + logits head (16-bit per the paper's first/last-layer rule)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, *, tie: bool):
+    ks = jax.random.split(key, 2)
+    p = {"table": embed_init(ks[0], vocab, d)}
+    if not tie:
+        p["head"] = dense_init(ks[1], d, vocab, scale=0.5)
+    return p
+
+
+def embed(params, tokens: Array, *, dtype=jnp.bfloat16) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def logits_head(params, x: Array, *, qcfg: QuantConfig,
+                qkey: Optional[Array]) -> Array:
+    """Final projection. qcfg here is usually the *baseline* (16-bit) config
+    via PrecisionPolicy.quant_for_layer(is_head=True)."""
+    if "head" in params:
+        w = params["head"]
+    else:
+        w = params["table"].T  # tied embeddings
+    return qeinsum("bsd,dv->bsv", x, w, key=subkey(qkey, 4), cfg=qcfg)

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts FFN with FP8 expert GEMMs (dbrx, moonshot archs).
+
+Capacity-based top-k routing (GShard/Switch semantics) with *gather*
+dispatch: instead of the one-hot (N, E, C) dispatch einsum — whose
+materialization is O(N*E*C) and dwarfs memory at 1M tokens — we compute each
+pair's position-in-expert by cumsum, scatter token ids into an (E, C) index
+table, and gather. Expert GEMMs run through qeinsum with classes
+(act, weight), so the paper's FP8 recipe covers expert weights exactly like
+dense FFNs. The router stays in f32: top-k boundaries are
+precision-critical, the same reasoning the paper uses to keep softmax/tanh
+at higher precision.
+
+Sharding: expert dim E maps to the 'model' mesh axis (expert parallelism);
+the token gather/scatter across the data axis lowers to all-to-all-style
+collectives under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig
+from repro.core.qlinear import qeinsum
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, subkey
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+
+    def expert_stack(k, d_in, d_out, scale=1.0):
+        return jax.vmap(
+            lambda kk: dense_init(kk, d_in, d_out, scale=scale)
+        )(jax.random.split(k, e))
+
+    return {
+        "router": dense_init(ks[0], d, e).astype(jnp.float32),
+        "w_gate": expert_stack(ks[1], d, f),
+        "w_up": expert_stack(ks[2], d, f),
+        "w_down": expert_stack(ks[3], f, d, scale=0.5),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.experts_per_token
+                  * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling friendliness
+
+
+def moe_ffn(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+            qkey) -> Tuple[Array, dict]:
+    """x: (B, S, D) -> (y, aux) with aux = {'lb_loss', 'router_z_loss'}."""
+    if cfg.moe_per_sample_dispatch:
+        return moe_ffn_per_sample(params, x, cfg=cfg, qcfg=qcfg, qkey=qkey)
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    c = capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    # ---- routing (f32) -----------------------------------------------------
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)           # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ---------------------------------------------------------
+    me = probs.mean(axis=0)                               # (E,) mean prob
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (n * k))                                    # (E,) token fraction
+    lb_loss = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * 1e-3
+
+    # ---- dispatch: position of each (token, slot) pair in its expert --------
+    flat_e = expert_idx.reshape(-1)                       # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (N*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot             # pairs before me
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < c
+    token_of_pair = jnp.arange(n * k) // k
+    dest = flat_e * c + pos_in_e                          # (N*k,) in [0, E*C)
+    dest = jnp.where(keep, dest, e * c)                   # dropped -> overflow
+
+    # (E*C + 1,) slot -> token+1 (0 = empty slot)
+    slot_token = jnp.zeros((e * c + 1,), jnp.int32).at[dest].set(
+        token_of_pair.astype(jnp.int32) + 1)[:e * c]
+    slot_valid = slot_token > 0
+    xe = xf[jnp.maximum(slot_token - 1, 0)].reshape(e, c, d)
+    xe = jnp.where(slot_valid.reshape(e, c, 1), xe, 0).astype(jnp.bfloat16)
+    # Expert-parallel: expert dim over 'model' (the token gather above is the
+    # all-to-all boundary between data- and expert-parallel regions).
+    xe = constrain(xe, "model", None, None)
+
+    # ---- expert GEMMs (FP8, per the paper) ----------------------------------
+    g = qeinsum("ecd,edf->ecf", xe, params["w_gate"],
+                key=subkey(qkey, 50), cfg=qcfg)
+    u = qeinsum("ecd,edf->ecf", xe, params["w_up"],
+                key=subkey(qkey, 51), cfg=qcfg)
+    h = (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u)
+    ye = qeinsum("ecf,efd->ecd", h, params["w_down"],
+                 key=subkey(qkey, 52), cfg=qcfg)
+    ye = constrain(ye, "model", None, None)
+
+    # ---- combine: gather each pair's expert output, weight, segment-sum -----
+    ye_flat = ye.reshape(e * c, d)
+    pair_out = ye_flat[jnp.minimum(dest, e * c - 1)]      # (N*k, D)
+    w = (gate.reshape(-1) * keep.astype(jnp.float32))[:, None]
+    pair_out = pair_out.astype(jnp.float32) * w
+    y = jax.ops.segment_sum(pair_out, token_of_pair, num_segments=n)
+    return y.reshape(b, s, d).astype(x.dtype), {
+        "lb_loss": lb_loss, "router_z_loss": z_loss,
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+
+
+def moe_ffn_per_sample(params, x: Array, *, cfg: ModelConfig,
+                       qcfg: QuantConfig, qkey) -> Tuple[Array, dict]:
+    """Per-sample dispatch: every gather/scatter indexes along the sequence
+    dim of ONE batch element, so the batch dim stays data-sharded end to end
+    and no cross-shard gather (= SPMD one-hot GEMM) is ever generated.
+    Expert buffers are (E, B, C_s, D) with E on 'model', B on dp."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    c = capacity(s, cfg)                                   # per-sample slots
+
+    # ---- routing (f32) -----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)             # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ----------------------------------------------------------
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (b * s * k))
+    lb_loss = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * 1e-3
+
+    # ---- per-sample positions ------------------------------------------------
+    flat_e = expert_idx.reshape(b, s * k)                  # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.take_along_axis(
+        pos, flat_e[..., None], axis=2)[..., 0]            # (B, S*k)
+    keep = pos_in_e < c
+    token_of_pair = jnp.broadcast_to(
+        (jnp.arange(s * k) // k)[None], (b, s * k))
+    dest = jnp.where(keep, flat_e * c + pos_in_e, e * c)   # (B, S*k)
+
+    b_idx = jnp.arange(b)[:, None]
+    slot_token = jnp.zeros((b, e * c + 1), jnp.int32).at[
+        b_idx, dest].set(token_of_pair.astype(jnp.int32) + 1)[:, :e * c]
+    slot_valid = slot_token > 0                            # (B, E*C)
+    # per-sample gather along S (local to each dp shard)
+    xe = jnp.take_along_axis(
+        x, jnp.maximum(slot_token - 1, 0)[..., None],
+        axis=1)                                            # (B, E*C, D)
+    xe = jnp.where(slot_valid[..., None], xe, 0)
+    xe = xe.reshape(b, e, c, d).transpose(1, 0, 2, 3)      # (E, B, C, D)
+    xe = constrain(xe.astype(jnp.bfloat16), "model", "dp", None, None)
+
+    # ---- expert GEMMs (FP8, per the paper) -----------------------------------
+    g = qeinsum("ebcd,edf->ebcf", xe, params["w_gate"],
+                key=subkey(qkey, 50), cfg=qcfg)
+    u = qeinsum("ebcd,edf->ebcf", xe, params["w_up"],
+                key=subkey(qkey, 51), cfg=qcfg)
+    h = (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u)
+    ye = qeinsum("ebcf,efd->ebcd", h, params["w_down"],
+                 key=subkey(qkey, 52), cfg=qcfg)
+    ye = constrain(ye, "model", "dp", None, None)
+
+    # ---- combine (per-sample gather + scatter-add) ----------------------------
+    ye_flat = ye.transpose(1, 0, 2, 3).reshape(b, e * c, d)
+    pair_out = jnp.take_along_axis(
+        ye_flat, jnp.minimum(dest, e * c - 1)[..., None], axis=1)
+    w = (gate.reshape(b, s * k) * keep.astype(jnp.float32))[..., None]
+    pair_out = pair_out.astype(jnp.float32) * w            # (B, S*k, D)
+    y = jnp.zeros((b, s, d), jnp.float32).at[
+        b_idx, token_of_pair].add(pair_out)
+    return y.astype(x.dtype), {
+        "lb_loss": lb_loss, "router_z_loss": z_loss,
+        "dropped_frac": 1.0 - keep.mean(),
+    }

@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+Configs live in repro.configs.<id> (dashes -> underscores), each exporting
+full() and smoke(). full() is exercised only through the dry-run
+(ShapeDtypeStruct, no allocation); smoke() instantiates on CPU in tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "internlm2-20b",
+    "mistral-large-123b",
+    "qwen2-1.5b",
+    "codeqwen1.5-7b",
+    "dbrx-132b",
+    "moonshot-v1-16b-a3b",
+    "llava-next-34b",
+    "xlstm-125m",
+    "recurrentgemma-9b",
+    "seamless-m4t-large-v2",
+    # The paper's own workloads:
+    "paper-transformer",
+    "paper-resnet",
+]
+
+
+def _module(arch: str):
+    name = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def build_config(arch: str, *, smoke: bool = False, **overrides) -> ModelConfig:
+    if arch not in ARCHS:
+        raise ValueError(f"unknown arch {arch!r}; have {ARCHS}")
+    mod = _module(arch)
+    cfg = mod.smoke() if smoke else mod.full()
+    return cfg.replace(**overrides) if overrides else cfg

@@ -1,0 +1,128 @@
+"""Reduced ResNet (the paper's convnet workload family) with FP8 convs.
+
+Used by the paper-reproduction benchmarks: Fig. 2a (loss-scale sweep),
+Fig. 3/4 (RNE vs stochastic rounding generalization), Table 2 (FP8 vs FP32
+accuracy). CIFAR-scale so it trains on CPU in minutes; the mechanisms the
+paper ablates (gradient underflow, rounding-induced L2 growth) reproduce at
+this scale.
+
+Per paper §4: the first conv and the final FC stay at 16-bit precision; all
+other convs/GEMMs run the FP8 recipe. BatchNorm is replaced by GroupNorm-
+style per-channel scale+shift computed in f32 (batch statistics in f32 — the
+paper keeps non-GEMM ops at high precision; GN avoids cross-device batch
+stats in data-parallel training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import (BASELINE, PAPER_FP8, PrecisionPolicy,
+                                         QuantConfig)
+from repro.core.qconv import conv_init, qconv2d
+from repro.models.layers import dense_init, subkey
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    depth_per_stage: Tuple[int, ...] = (2, 2, 2)
+    widths: Tuple[int, ...] = (32, 64, 128)
+    n_classes: int = 10
+    quant: QuantConfig = PAPER_FP8
+    weight_decay: float = 5e-4
+
+
+def _groupnorm(params, x, *, groups: int = 8, eps: float = 1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = xf.var(axis=(1, 2, 4), keepdims=True)
+    xn = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (xn * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _init_gn(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    ks = iter(jax.random.split(key, 256))
+    params = {"stem": conv_init(next(ks), 3, 3, 3, cfg.widths[0]),
+              "stem_gn": _init_gn(cfg.widths[0])}
+    c_prev = cfg.widths[0]
+    for s, (depth, c) in enumerate(zip(cfg.depth_per_stage, cfg.widths)):
+        for i in range(depth):
+            blk = {
+                "conv1": conv_init(next(ks), 3, 3, c_prev if i == 0 else c, c),
+                "gn1": _init_gn(c),
+                "conv2": conv_init(next(ks), 3, 3, c, c),
+                "gn2": _init_gn(c),
+            }
+            if i == 0 and c_prev != c:
+                blk["proj"] = conv_init(next(ks), 1, 1, c_prev, c)
+            params[f"s{s}_b{i}"] = blk
+        c_prev = c
+    params["head"] = dense_init(next(ks), c_prev, cfg.n_classes)
+    return params
+
+
+def resnet_forward(params, x: Array, *, cfg: ResNetConfig,
+                   qkey: Optional[Array] = None) -> Array:
+    """x: (B, H, W, 3) -> logits (B, n_classes)."""
+    q = cfg.quant
+    if qkey is None and q.needs_key:
+        q = q.eval_mode()   # deterministic eval: RNE, saturating
+    # First conv at 16-bit (paper §4).
+    h = qconv2d(x.astype(jnp.bfloat16), params["stem"], cfg=BASELINE)
+    h = jax.nn.relu(_groupnorm(params["stem_gn"], h))
+    op = 0
+    for s, (depth, c) in enumerate(zip(cfg.depth_per_stage, cfg.widths)):
+        for i in range(depth):
+            blk = params[f"s{s}_b{i}"]
+            stride = (2, 2) if (i == 0 and s > 0) else (1, 1)
+            r = qconv2d(h, blk["conv1"], stride=stride,
+                        key=subkey(qkey, op), cfg=q)
+            op += 1
+            r = jax.nn.relu(_groupnorm(blk["gn1"], r))
+            r = qconv2d(r, blk["conv2"], key=subkey(qkey, op), cfg=q)
+            op += 1
+            r = _groupnorm(blk["gn2"], r)
+            sc = h
+            if "proj" in blk:
+                sc = qconv2d(h, blk["proj"], stride=stride,
+                             key=subkey(qkey, op), cfg=q)
+                op += 1
+            elif stride != (1, 1):
+                sc = h[:, ::2, ::2]
+            h = jax.nn.relu(sc.astype(jnp.float32)
+                            + r.astype(jnp.float32)).astype(jnp.bfloat16)
+    pooled = h.astype(jnp.float32).mean(axis=(1, 2))
+    # Last FC at 16-bit (paper §4).
+    logits = pooled.astype(jnp.bfloat16) @ params["head"].astype(jnp.bfloat16)
+    return logits.astype(jnp.float32)
+
+
+def resnet_loss(params, batch, *, cfg: ResNetConfig, qkey=None,
+                loss_scale: Optional[Array] = None,
+                include_l2: bool = True):
+    """Cross-entropy + paper Eq. (1) L2 loss. Returns (loss, metrics)."""
+    logits = resnet_forward(params, batch["image"], cfg=cfg, qkey=qkey)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    l2 = jnp.asarray(0.0, jnp.float32)
+    if include_l2:
+        from repro.optim import l2_regularization_loss
+        l2 = l2_regularization_loss(params, cfg.weight_decay)
+    loss = nll + l2
+    acc = (logits.argmax(-1) == labels).mean()
+    if loss_scale is not None:
+        loss = loss * loss_scale.astype(loss.dtype)
+    return loss, {"nll": nll, "l2_loss": l2, "accuracy": acc}

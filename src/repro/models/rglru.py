@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) with FP8 projections.
+
+Block layout (Griffin Fig. 2): two branches from the input —
+  left:  W_x -> causal depthwise conv (width 4) -> RG-LRU
+  right: W_g -> GeLU
+merged by elementwise product, then W_o back to d_model.
+
+RG-LRU recurrence (f32; the a_t^(c*sigma) powers underflow in fp8, so state
+math stays full precision — same principle as the paper keeping tanh/sigmoid
+at >= 16-bit):
+
+  r_t = sigmoid(W_a xi_t);  i_t = sigmoid(W_i xi_t)
+  a_t = exp(-c * softplus(Lambda) * r_t),   c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training/prefill uses jax.lax.associative_scan — the TPU-native O(log S)
+evaluation that also keeps every FLOP visible to the roofline cost analysis
+(a sequential lax.scan body would be counted once by XLA's cost model).
+Decode is the single-step recurrence with carried (h, conv window) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig
+from repro.core.qlinear import qeinsum
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, subkey
+
+Array = jax.Array
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_dim or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so a in [0.9, 0.999] at r=1 (Griffin appendix).
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "wx": dense_init(ks[0], d, w),
+        "wg": dense_init(ks[1], d, w),
+        "wa": dense_init(ks[2], w, w, scale=0.5),
+        "wi": dense_init(ks[3], w, w, scale=0.5),
+        "lam": lam,
+        "conv": (jax.random.normal(ks[5], (_CONV_W, w), jnp.float32)
+                 * (1.0 / _CONV_W)),
+        "wo": dense_init(jax.random.fold_in(key, 9), w, d, scale=0.5),
+    }
+
+
+def _causal_conv(x: Array, kernel: Array,
+                 state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv width 4. x: (B,S,W); state: (B,3,W) history."""
+    b, s, w = x.shape
+    hist = jnp.zeros((b, _CONV_W - 1, w), x.dtype) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)          # (B, S+3, W)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(_CONV_W):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * kernel[i]
+    new_state = xp[:, -( _CONV_W - 1):]
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_scan(xi: Array, a: Array) -> Array:
+    """Parallel evaluation of h_t = a_t h_{t-1} + b_t via associative scan.
+    xi: (B,S,W) the gated input sqrt(1-a^2)*i*x; a: (B,S,W) decay."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+    _, h = jax.lax.associative_scan(combine, (a, xi), axis=1)
+    return h
+
+
+def rglru_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+                qkey, mode: str = "train",
+                state: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    """x: (B,S,D) -> (y, new_state). state = {'h': (B,W), 'conv': (B,3,W)}."""
+    xi = qeinsum("bsd,dw->bsw", x, params["wx"], key=subkey(qkey, 60), cfg=qcfg)
+    gate = qeinsum("bsd,dw->bsw", x, params["wg"], key=subkey(qkey, 61),
+                   cfg=qcfg)
+    conv_state = None if state is None else state.get("conv")
+    xi, new_conv = _causal_conv(xi, params["conv"], conv_state)
+
+    r = jax.nn.sigmoid(qeinsum("bsw,wv->bsv", xi, params["wa"],
+                               key=subkey(qkey, 62), cfg=qcfg)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(qeinsum("bsw,wv->bsv", xi, params["wi"],
+                               key=subkey(qkey, 63), cfg=qcfg)
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r    # (B,S,W) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * xi.astype(jnp.float32)
+
+    new_state = None
+    if mode == "decode":
+        assert state is not None
+        h_prev = state["h"]                             # (B, W) f32
+        h = a[:, 0] * h_prev + gated[:, 0]
+        hs = h[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        hs = _rglru_scan(gated, a)                      # (B,S,W)
+        if mode == "prefill":
+            new_state = {"h": hs[:, -1], "conv": new_conv}
+
+    merged = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)
+                                              ).astype(x.dtype)
+    y = qeinsum("bsw,wd->bsd", merged, params["wo"], key=subkey(qkey, 64),
+                cfg=qcfg)
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    w = cfg.lru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, w), jnp.bfloat16)}

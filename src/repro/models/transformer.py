@@ -1,0 +1,446 @@
+"""Model assembly: decoder-only LMs, hybrid/recurrent stacks, enc-dec.
+
+Layers are grouped by the repeating `block_pattern` and scanned with
+jax.lax.scan (per-group stacked params => small HLO, fast SPMD compile, true
+full-model memory analysis). Non-divisible remainder layers are applied
+unrolled after the scan. Per-layer PRNG keys for stochastic rounding are
+fold_in'd from a single step key, so the whole model is reproducible from
+(params, batch, step_key).
+
+The same forward supports:
+  mode="train"    — causal LM (or enc-dec) with loss masks.
+  mode="prefill"  — builds KV caches / recurrent states, returns them.
+  mode="decode"   — single-token step against caches/states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig
+from repro.distributed.sharding import constrain
+from repro.models.attention import attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_norm, embed, init_embedding, init_mlp,
+                                 logits_head, make_norm, mlp, subkey)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_block
+from repro.models.xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                                init_slstm_state, mlstm_block, slstm_block)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": make_norm("rmsnorm", cfg.d_model)}
+    if kind in ("attn", "local_attn", "enc_attn"):
+        p["attn"] = init_attention(ks[0], cfg)
+        if cross:
+            p["cross_norm"] = make_norm("rmsnorm", cfg.d_model)
+            p["cross_attn"] = init_attention(ks[1], cfg)
+        if cfg.n_experts:
+            p["norm2"] = make_norm("rmsnorm", cfg.d_model)
+            p["moe"] = init_moe(ks[2], cfg)
+        elif cfg.d_ff:
+            p["norm2"] = make_norm("rmsnorm", cfg.d_model)
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(ks[0], cfg)
+        if cfg.d_ff:
+            p["norm2"] = make_norm("rmsnorm", cfg.d_model)
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Per-layer serving state (KV cache or recurrent state)."""
+    from repro.models.attention import init_cache
+    if kind in ("attn", "enc_attn"):
+        c = init_cache(cfg, batch, max_len, n_layers=1)
+        return {"kv": jax.tree_util.tree_map(lambda x: x[0], c)}
+    if kind == "local_attn":
+        c = init_cache(cfg, batch, max_len, n_layers=1, window=cfg.window)
+        return {"kv": jax.tree_util.tree_map(lambda x: x[0], c)}
+    if kind == "rglru":
+        return {"rec": init_rglru_state(cfg, batch)}
+    if kind == "mlstm":
+        return {"rec": init_mlstm_state(cfg, batch)}
+    if kind == "slstm":
+        return {"rec": init_slstm_state(cfg, batch)}
+    raise ValueError(kind)
+
+
+def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
+                qcfg: QuantConfig, qkey, positions: Array, mode: str,
+                state=None, enc_out: Optional[Array] = None):
+    """Returns (h, new_state, aux)."""
+    aux = {}
+    new_state = None
+    if cfg.sequence_parallel and mode in ("train", "prefill"):
+        # SP: residual stream sequence-sharded over 'model' between blocks;
+        # attention/MLP re-gather internally (Megatron-SP dataflow). Also the
+        # cure for full-sequence f32 GEMM-output transients at 32k prefill.
+        h = constrain(h, "dp", "model", None)
+    else:
+        h = constrain(h, "dp", None, None)   # keep the residual batch-sharded
+    if kind in ("attn", "local_attn", "enc_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        attn_mode = {"train": "train", "prefill": "prefill",
+                     "decode": "decode"}[mode]
+        if kind == "enc_attn":
+            attn_mode = "encode"
+        a, new_cache = attention(
+            p["attn"], apply_norm(p["norm1"], h, eps=cfg.norm_eps),
+            cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 100), positions=positions,
+            mode=attn_mode,
+            cache_layer=None if state is None else state.get("kv"),
+            window=window)
+        h = h + a
+        if "cross_attn" in p and enc_out is not None:
+            ca, _ = attention(
+                p["cross_attn"], apply_norm(p["cross_norm"], h,
+                                            eps=cfg.norm_eps),
+                cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 101),
+                positions=positions, mode="cross", kv_x=enc_out)
+            h = h + ca
+        if "moe" in p:
+            f, moe_aux = moe_ffn(p["moe"],
+                                 apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                                 cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 102))
+            aux.update(moe_aux)
+            h = h + f
+        elif "mlp" in p:
+            f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                    act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 102))
+            h = h + f
+        if new_cache is not None:
+            new_state = {"kv": new_cache}
+    elif kind == "rglru":
+        r, rec = rglru_block(p["rglru"],
+                             apply_norm(p["norm1"], h, eps=cfg.norm_eps),
+                             cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 103),
+                             mode=mode,
+                             state=None if state is None else state.get("rec"))
+        h = h + r
+        if "mlp" in p:
+            f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                    act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 104))
+            h = h + f
+        if rec is not None:
+            new_state = {"rec": rec}
+    elif kind == "mlstm":
+        r, rec = mlstm_block(p["mlstm"],
+                             apply_norm(p["norm1"], h, eps=cfg.norm_eps),
+                             cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 105),
+                             mode=mode,
+                             state=None if state is None else state.get("rec"))
+        h = h + r
+        if rec is not None:
+            new_state = {"rec": rec}
+    elif kind == "slstm":
+        r, rec = slstm_block(p["slstm"],
+                             apply_norm(p["norm1"], h, eps=cfg.norm_eps),
+                             cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 106),
+                             mode=mode,
+                             state=None if state is None else state.get("rec"))
+        h = h + r
+        if rec is not None:
+            new_state = {"rec": rec}
+    else:
+        raise ValueError(kind)
+    return h, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over pattern groups)
+# ---------------------------------------------------------------------------
+
+def _split_layers(cfg: ModelConfig, n_layers: int) -> Tuple[int, int]:
+    pat = cfg.pattern()
+    n_groups = n_layers // len(pat)
+    rem = n_layers - n_groups * len(pat)
+    return n_groups, rem
+
+
+def init_stack(key, cfg: ModelConfig, *, n_layers: int, kinds=None,
+               cross: bool = False):
+    """Params for a stack of layers: scanned groups + unrolled remainder."""
+    pat = tuple(kinds) if kinds else cfg.pattern()
+    n_groups = n_layers // len(pat)
+    rem = n_layers - n_groups * len(pat)
+    params: Dict[str, Any] = {}
+    if cfg.scan_layers and n_groups > 1:
+        for pos, kind in enumerate(pat):
+            gkeys = jax.random.split(jax.random.fold_in(key, pos), n_groups)
+            params[f"stack_{pos}"] = jax.vmap(
+                lambda k: init_layer(k, cfg, kind, cross=cross))(gkeys)
+    else:
+        for i in range(n_groups * len(pat)):
+            kind = pat[i % len(pat)]
+            params[f"layer_{i}"] = init_layer(
+                jax.random.fold_in(key, 1000 + i), cfg, kind, cross=cross)
+    for i in range(rem):
+        kind = pat[i % len(pat)]
+        params[f"rem_{i}"] = init_layer(
+            jax.random.fold_in(key, 2000 + i), cfg, kind, cross=cross)
+    return params
+
+
+def init_stack_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                     n_layers: int, kinds=None):
+    pat = tuple(kinds) if kinds else cfg.pattern()
+    n_groups = n_layers // len(pat)
+    rem = n_layers - n_groups * len(pat)
+    state: Dict[str, Any] = {}
+
+    def stacked(kind):
+        proto = init_layer_state(cfg, kind, batch, max_len)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape).copy()
+            if n_groups > 1 else x[None], proto)
+
+    if cfg.scan_layers and n_groups > 1:
+        for pos, kind in enumerate(pat):
+            state[f"stack_{pos}"] = stacked(kind)
+    else:
+        for i in range(n_groups * len(pat)):
+            state[f"layer_{i}"] = init_layer_state(
+                cfg, pat[i % len(pat)], batch, max_len)
+    for i in range(rem):
+        state[f"rem_{i}"] = init_layer_state(cfg, pat[i % len(pat)],
+                                             batch, max_len)
+    return state
+
+
+def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+                qkey, positions, mode, states=None, enc_out=None,
+                n_layers: int, kinds=None, key_base: int = 0):
+    """Returns (h, new_states, aux_sums)."""
+    pat = tuple(kinds) if kinds else cfg.pattern()
+    n_groups = n_layers // len(pat)
+    rem = n_layers - n_groups * len(pat)
+    aux_total: Dict[str, Array] = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+
+    new_states: Dict[str, Any] = {}
+    scanned = cfg.scan_layers and n_groups > 1
+
+    if scanned:
+        stacked_params = tuple(params[f"stack_{p}"] for p in range(len(pat)))
+        stacked_states = None
+        if states is not None:
+            stacked_states = tuple(states[f"stack_{p}"]
+                                   for p in range(len(pat)))
+
+        def body(carry, xs):
+            hh, gi = carry
+            gp = xs[0]
+            gs = xs[1] if states is not None else (None,) * len(pat)
+            outs = []
+            all_aux = {}
+            for p, kind in enumerate(pat):
+                lkey = None if qkey is None else jax.random.fold_in(
+                    qkey, key_base + gi * len(pat) + p)
+                hh, ns, aux = apply_layer(
+                    gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg, qkey=lkey,
+                    positions=positions, mode=mode, state=gs[p],
+                    enc_out=enc_out)
+                outs.append(ns)
+                for k, v in aux.items():
+                    all_aux[k] = all_aux.get(k, 0.0) + v
+            if cfg.sequence_parallel and mode in ("train", "prefill"):
+                # Keep the scan carry (= the saved remat residual)
+                # sequence-sharded; applied at body END so the stored value
+                # is the sharded one.
+                hh = constrain(hh, "dp", "model", None)
+            ys = (tuple(outs) if states is not None else 0,
+                  all_aux if all_aux else {"_": jnp.float32(0)})
+            return (hh, gi + 1), ys
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") \
+            else body
+        xs = (stacked_params,) if states is None \
+            else (stacked_params, stacked_states)
+        (h, _), (out_states, aux_stack) = jax.lax.scan(body_fn, (h, 0), xs)
+        for k, v in aux_stack.items():
+            if k != "_":
+                aux_total[k] = aux_total.get(k, 0.0) + v.sum()
+        if states is not None:
+            for p in range(len(pat)):
+                new_states[f"stack_{p}"] = out_states[p]
+    else:
+        for i in range(n_groups * len(pat)):
+            kind = pat[i % len(pat)]
+            lkey = None if qkey is None else jax.random.fold_in(
+                qkey, key_base + i)
+            st = None if states is None else states[f"layer_{i}"]
+            h, ns, aux = apply_layer(params[f"layer_{i}"], h, kind=kind,
+                                     cfg=cfg, qcfg=qcfg, qkey=lkey,
+                                     positions=positions, mode=mode,
+                                     state=st, enc_out=enc_out)
+            add_aux(aux)
+            if states is not None and ns is not None:
+                new_states[f"layer_{i}"] = ns
+
+    base = n_groups * len(pat)
+    for i in range(rem):
+        kind = pat[i % len(pat)]
+        lkey = None if qkey is None else jax.random.fold_in(
+            qkey, key_base + base + i)
+        st = None if states is None else states[f"rem_{i}"]
+        h, ns, aux = apply_layer(params[f"rem_{i}"], h, kind=kind, cfg=cfg,
+                                 qcfg=qcfg, qkey=lkey, positions=positions,
+                                 mode=mode, state=st, enc_out=enc_out)
+        add_aux(aux)
+        if states is not None and ns is not None:
+            new_states[f"rem_{i}"] = ns
+    return h, (new_states if states is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# full models
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": init_embedding(ks[0], cfg.padded_vocab_size, cfg.d_model,
+                                tie=cfg.tie_embeddings),
+        "final_norm": make_norm("rmsnorm", cfg.d_model),
+        "decoder": init_stack(ks[1], cfg, n_layers=cfg.n_layers,
+                              cross=cfg.is_encoder_decoder),
+    }
+    if cfg.is_encoder_decoder:
+        params["encoder"] = init_stack(ks[2], cfg,
+                                       n_layers=cfg.n_encoder_layers,
+                                       kinds=("enc_attn",))
+        params["enc_norm"] = make_norm("rmsnorm", cfg.d_model)
+    return params
+
+
+def encode(params, enc_inputs: Array, *, cfg: ModelConfig, qkey=None) -> Array:
+    """Encoder forward (seamless): enc_inputs are precomputed frame
+    embeddings (B, T, D) from the stub frontend."""
+    qcfg = cfg.policy.quant
+    b, t, _ = enc_inputs.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    h = enc_inputs.astype(jnp.bfloat16)
+    h, _, _ = apply_stack(params["encoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
+                          positions=positions, mode="train", states=None,
+                          n_layers=cfg.n_encoder_layers, kinds=("enc_attn",),
+                          key_base=500)
+    return apply_norm(params["enc_norm"], h, eps=cfg.norm_eps)
+
+
+def forward(params, tokens: Array, *, cfg: ModelConfig, qkey=None,
+            mode: str = "train", states=None, positions=None,
+            extra_embeds: Optional[Array] = None,
+            enc_out: Optional[Array] = None, last_only: bool = False):
+    """Backbone forward. Returns (logits, new_states, aux).
+
+    extra_embeds: (B, P, D) precomputed patch/frame embeddings prepended to
+    the token embeddings (llava anyres stub). enc_out: encoder output for
+    enc-dec cross-attention. last_only=True computes logits only for the
+    final position (prefill: avoids a (B, S, V) materialization).
+    """
+    qcfg = cfg.policy.quant
+    head_cfg = cfg.policy.quant_for_layer(is_head=True)
+    h = embed(params["embed"], tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, new_states, aux = apply_stack(
+        params["decoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
+        positions=positions, mode=mode, states=states, enc_out=enc_out,
+        n_layers=cfg.n_layers)
+    if last_only:
+        h = h[:, -1:]
+    h = apply_norm(params["final_norm"], h, eps=cfg.norm_eps)
+    logits = logits_head(params["embed"], h, qcfg=head_cfg, qkey=qkey)
+    return logits, new_states, aux
+
+
+def _chunked_ce(params, h, labels, mask, *, cfg, head_cfg, qkey, chunk: int):
+    """Sequence-chunked cross-entropy: materializes (B, chunk, V) logits per
+    chunk instead of (B, S, V), rematerializing the head GEMM in backward —
+    the standard memory lever for large-vocab LM heads."""
+    def chunk_loss(hc, lc, mc):
+        logits = logits_head(params["embed"], hc, qcfg=head_cfg, qkey=qkey)
+        lf = logits.astype(jnp.float32)
+        if cfg.padded_vocab_size != cfg.vocab_size:
+            col = jnp.arange(lf.shape[-1])
+            lf = jnp.where(col < cfg.vocab_size, lf, -1e30)
+        logz = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mc)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    s = h.shape[1]
+    total = jnp.asarray(0.0, jnp.float32)
+    for c0 in range(0, s, chunk):
+        c1 = min(c0 + chunk, s)
+        total = total + chunk_loss(h[:, c0:c1], labels[:, c0:c1],
+                                   mask[:, c0:c1])
+    return total
+
+
+def lm_loss(params, batch: Dict[str, Array], *, cfg: ModelConfig, qkey=None,
+            loss_scale: Optional[Array] = None):
+    """Causal-LM (or seq2seq) cross-entropy + MoE aux. Returns (loss, metrics).
+    If loss_scale is given the returned loss is scaled (paper Fig. 1b: scale
+    before backprop; unscale in the optimizer in f32)."""
+    qcfg = cfg.policy.quant
+    head_cfg = cfg.policy.quant_for_layer(is_head=True)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["enc_inputs"], cfg=cfg, qkey=qkey)
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+
+    # backbone (without head)
+    h = embed(params["embed"], tokens)
+    extra = batch.get("extra_embeds")
+    if extra is not None:
+        h = jnp.concatenate([extra.astype(h.dtype), h], axis=1)
+        labels = jnp.pad(labels, ((0, 0), (extra.shape[1], 0)))
+        mask = jnp.pad(mask, ((0, 0), (extra.shape[1], 0)))
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, _, aux = apply_stack(params["decoder"], h, cfg=cfg, qcfg=qcfg,
+                            qkey=qkey, positions=positions, mode="train",
+                            states=None, enc_out=enc_out,
+                            n_layers=cfg.n_layers)
+    h = apply_norm(params["final_norm"], h, eps=cfg.norm_eps)
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    nll_sum = _chunked_ce(params, h, labels, mask, cfg=cfg,
+                          head_cfg=head_cfg, qkey=qkey,
+                          chunk=min(s, cfg.attn_chunk_size))
+    loss = nll_sum / denom
+    for v in aux.values():
+        loss = loss + v
+    metrics = {"nll": nll_sum / denom, **aux}
+    if loss_scale is not None:
+        loss = loss * loss_scale.astype(loss.dtype)
+    return loss, metrics

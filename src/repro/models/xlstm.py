@@ -1,0 +1,275 @@
+"""xLSTM blocks (sLSTM + mLSTM) with FP8 projections (xlstm-125m arch).
+
+mLSTM (matrix memory, parallelizable): trained in the stabilized *parallel
+form* (xLSTM paper §2, Eq. 21-27): per head,
+
+  F_i = sum_{t<=i} log sigmoid(f_t),  D_ij = F_i - F_j + i_j   (j <= i)
+  m_i = max_j D_ij,  W_ij = exp(D_ij - m_i) * (q_i . k_j / sqrt(d))
+  h_i = (sum_j W_ij v_j) / max(|sum_j W_ij|, 1)
+
+which is an attention-shaped computation -> the QK/PV GEMMs run through the
+same FP8 qeinsum path as attention. Decode uses the recurrent form with
+(C, n, m) state carried in f32 (exponential gating is range-critical — the
+same "sensitive ops stay high precision" rule the paper applies to
+tanh/sigmoid).
+
+sLSTM (scalar memory, sequential by construction): lax.scan over time with
+block-diagonal recurrent mixing over 4 heads; exponential gating with the
+m-stabilizer.
+
+Block layouts follow the xLSTM paper: mLSTM lives inside an up-projection
+sandwich (pf=2) with a SiLU gate branch; sLSTM is followed by a gated FFN.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision_policy import QuantConfig
+from repro.core.qlinear import qeinsum
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, dense_init, init_rmsnorm, subkey
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    inner = int(d * cfg.ssm_proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, inner),
+        "w_gate": dense_init(ks[1], d, inner),
+        "wq": dense_init(ks[2], inner, inner),
+        "wk": dense_init(ks[3], inner, inner),
+        "wv": dense_init(ks[4], inner, inner),
+        "w_if": dense_init(ks[5], inner, 2 * cfg.n_heads, scale=0.5),
+        "norm": init_rmsnorm(inner),
+        "w_down": dense_init(ks[6], inner, d, scale=0.5),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_gate, log_f, state):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,c,dh) f32; i_gate/log_f: (B,H,c) f32;
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) carried across chunks.
+    Returns (h (B,H,c,dh), new_state). All math f32 + m-stabilized.
+    """
+    dh = q.shape[-1]
+    c = q.shape[2]
+    cum_f = jnp.cumsum(log_f, axis=-1)                   # (B,H,c) F_i (local)
+    # intra-chunk decay D_ij = F_i - F_j + i_j for j <= i
+    d_mat = cum_f[..., :, None] - cum_f[..., None, :] + i_gate[..., None, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    d_mat = jnp.where(causal, d_mat, -jnp.inf)
+    # inter-chunk contribution scale: b_i = F_i + m_prev
+    c_prev, n_prev, m_prev = state
+    b_vec = cum_f + m_prev[..., None]                    # (B,H,c)
+    m_i = jnp.maximum(jnp.max(d_mat, axis=-1), b_vec)    # (B,H,c)
+    m_i = jnp.maximum(m_i, 0.0)
+    decay = jnp.exp(d_mat - m_i[..., None])              # (B,H,c,c)
+    qs = q / (dh ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qs, k) * decay
+    inter_w = jnp.exp(b_vec - m_i)                       # (B,H,c)
+    num = jnp.einsum("bhqk,bhkd->bhqd", scores, v) \
+        + inter_w[..., None] * jnp.einsum("bhvk,bhqk->bhqv", c_prev, qs)
+    den = scores.sum(-1) + inter_w * jnp.einsum("bhk,bhqk->bhq", n_prev, qs)
+    # Stabilized normalizer (xLSTM Eq. 24): the exp(-m) floor makes h exactly
+    # independent of the stabilizer m, so parallel and recurrent forms match.
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+    # end-of-chunk state
+    f_tail = cum_f[..., -1:] - cum_f                     # sum_{t>j} log f
+    m_new = jnp.maximum(cum_f[..., -1] + m_prev,
+                        jnp.max(f_tail + i_gate, axis=-1))
+    w_j = jnp.exp(f_tail + i_gate - m_new[..., None])    # (B,H,c)
+    carry = jnp.exp(cum_f[..., -1] + m_prev - m_new)     # (B,H)
+    c_new = carry[..., None, None] * c_prev \
+        + jnp.einsum("bhs,bhsv,bhsk->bhvk", w_j, v, k)
+    n_new = carry[..., None] * n_prev + jnp.einsum("bhs,bhsk->bhk", w_j, k)
+    return h, (c_new, n_new, m_new)
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate, *, chunk: int = 1024,
+                    state: Optional[dict] = None, remat: bool = True):
+    """Chunkwise-parallel mLSTM: static python loop over chunks (all FLOPs
+    visible to cost analysis; per-chunk transients only). Returns
+    (h (B,H,S,dh) f32, final_state dict)."""
+    b, h, s, dh = q.shape
+    log_f = jax.nn.log_sigmoid(f_gate)
+    if state is None:
+        st = (jnp.zeros((b, h, dh, dh), jnp.float32),
+              jnp.zeros((b, h, dh), jnp.float32),
+              jnp.zeros((b, h), jnp.float32))
+    else:
+        st = (state["C"], state["n"], state["m"])
+    step = jax.checkpoint(_mlstm_chunk) if remat else _mlstm_chunk
+    outs = []
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    for c0 in range(0, s, chunk):
+        c1 = min(c0 + chunk, s)
+        hc, st = step(qf[:, :, c0:c1], kf[:, :, c0:c1], vf[:, :, c0:c1],
+                      i_gate[..., c0:c1], log_f[..., c0:c1], st)
+        outs.append(hc)
+    hs = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    return hs, {"C": st[0], "n": st[1], "m": st[2]}
+
+
+def _mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Single decode step. q,k,v: (B,H,dh); gates: (B,H). state: C,n,m."""
+    c_prev, n_prev, m_prev = state["C"], state["n"], state["m"]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m_prev, i_raw)
+    i_p = jnp.exp(i_raw - m_new)[..., None]
+    f_p = jnp.exp(log_f + m_prev - m_new)[..., None]
+    n_new = f_p * n_prev + i_p * k
+    c_new = f_p[..., None] * c_prev + i_p[..., None] * \
+        (v[..., :, None] * k[..., None, :])             # (B,H,dh,dh)
+    dh = q.shape[-1]
+    qn = q / (dh ** 0.5)
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qn)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qn)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+                qkey, mode: str = "train",
+                state: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    inner = int(d * cfg.ssm_proj_factor)
+    dh = inner // h_heads
+
+    up = qeinsum("bsd,di->bsi", x, params["w_up"], key=subkey(qkey, 70),
+                 cfg=qcfg)
+    gate = qeinsum("bsd,di->bsi", x, params["w_gate"], key=subkey(qkey, 71),
+                   cfg=qcfg)
+    q = qeinsum("bsi,ij->bsj", up, params["wq"], key=subkey(qkey, 72),
+                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    k = qeinsum("bsi,ij->bsj", up, params["wk"], key=subkey(qkey, 73),
+                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    v = qeinsum("bsi,ij->bsj", up, params["wv"], key=subkey(qkey, 74),
+                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+    gates = qeinsum("bsi,ig->bsg", up, params["w_if"], key=subkey(qkey, 75),
+                    cfg=qcfg).astype(jnp.float32)       # (B,S,2H)
+    i_raw = gates[..., :h_heads].transpose(0, 2, 1)     # (B,H,S)
+    f_raw = gates[..., h_heads:].transpose(0, 2, 1) + 1.0  # forget bias init
+
+    new_state = None
+    if mode == "decode":
+        assert state is not None
+        h, new_state = _mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   i_raw[..., 0], f_raw[..., 0], state)
+        h = h[:, :, None]                                # (B,H,1,dh)
+    else:
+        h, end_state = _mlstm_parallel(q, k, v, i_raw, f_raw,
+                                       chunk=cfg.attn_chunk_size,
+                                       remat=cfg.remat)
+        if mode == "prefill":
+            new_state = end_state
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, inner).astype(x.dtype)
+    h = apply_norm(params["norm"], h, eps=cfg.norm_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    return qeinsum("bsi,id->bsd", h, params["w_down"], key=subkey(qkey, 76),
+                   cfg=qcfg), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    inner = int(cfg.d_model * cfg.ssm_proj_factor)
+    dh = inner // cfg.n_heads
+    h = cfg.n_heads
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    ff = max(8, int(d * 4 / 3))
+    return {
+        "w_zifo": dense_init(ks[0], d, 4 * d),
+        # Block-diagonal recurrent mixing: per-head (dh, 4*dh).
+        "r_zifo": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+                   / (dh ** 0.5)),
+        "norm": init_rmsnorm(d),
+        "w_up": dense_init(ks[2], d, ff),
+        "w_gate": dense_init(ks[3], d, ff),
+        "w_down": dense_init(ks[4], ff, d, scale=0.5),
+    }
+
+
+def _slstm_scan(params, z_in: Array, h0, c0, n0, m0):
+    """z_in: (B, S, 4D) pre-activations from the input projection."""
+    b, s, d4 = z_in.shape
+    d = d4 // 4
+    h_heads = params["r_zifo"].shape[0]
+    dh = d // h_heads
+
+    def step(carry, zt):
+        h_prev, c_prev, n_prev, m_prev = carry
+        hh = h_prev.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, params["r_zifo"]
+                         ).reshape(b, 4 * d)
+        zifo = zt.astype(jnp.float32) + rec
+        z_r, i_r, f_r, o_r = jnp.split(zifo, 4, axis=-1)
+        z = jnp.tanh(z_r)
+        o = jax.nn.sigmoid(o_r)
+        log_f = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(log_f + m_prev, i_r)
+        i_p = jnp.exp(i_r - m_new)
+        f_p = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_p * c_prev + i_p * z
+        n_new = f_p * n_prev + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    z_in.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (h, c, n, m)
+
+
+def slstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
+                qkey, mode: str = "train",
+                state: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    z_in = qeinsum("bsd,dz->bsz", x, params["w_zifo"], key=subkey(qkey, 80),
+                   cfg=qcfg)
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry0 = (zeros, zeros, zeros, zeros)
+    else:
+        carry0 = (state["h"], state["c"], state["n"], state["m"])
+    hs, (h, c, n, m) = _slstm_scan(params, z_in, *carry0)
+    new_state = {"h": h, "c": c, "n": n, "m": m} \
+        if mode in ("prefill", "decode") else None
+
+    y = apply_norm(params["norm"], hs.astype(x.dtype), eps=cfg.norm_eps)
+    up = qeinsum("bsd,df->bsf", y, params["w_up"], key=subkey(qkey, 81),
+                 cfg=qcfg)
+    gate = qeinsum("bsd,df->bsf", y, params["w_gate"], key=subkey(qkey, 82),
+                   cfg=qcfg)
+    hff = jax.nn.gelu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    return qeinsum("bsf,fd->bsd", hff, params["w_down"], key=subkey(qkey, 83),
+                   cfg=qcfg), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (AdamConfig, MomentumConfig, adam,
+                                    momentum_sgd, make_optimizer,
+                                    l2_regularization_loss)
+
+__all__ = ["AdamConfig", "MomentumConfig", "adam", "momentum_sgd",
+           "make_optimizer", "l2_regularization_loss"]

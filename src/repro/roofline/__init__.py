@@ -1,0 +1,3 @@
+from repro.roofline.analysis import analyze_record, build_table
+
+__all__ = ["analyze_record", "build_table"]

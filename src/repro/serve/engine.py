@@ -1,0 +1,148 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Inference runs the deterministic FP8 path (RNE, saturating — no stochastic
+rounding at eval, per the paper's training/inference split) with an
+optionally FP8-quantized KV cache (beyond-paper: decode is KV-bandwidth
+bound; e5m2 KV halves the dominant roofline term).
+
+Slot model: `max_batch` concurrent sequences. add_request() fills a free
+slot (prefilling its cache region); step() decodes one token for every
+active slot; finished sequences (EOS or max_len) free their slot. The jitted
+decode step is shape-stable — request churn never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_stack_state
+from repro.train.step import make_serve_decode, make_serve_prefill
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    eos_id: int = -1          # -1 => never stops early
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self._prefill = jax.jit(make_serve_prefill(cfg))
+        self._decode = jax.jit(make_serve_decode(cfg))
+        b, ml = serve.max_batch, serve.max_len
+        self.states = init_stack_state(cfg, b, max_len=ml,
+                                       n_layers=cfg.n_layers)
+        self.slots: List[Optional[Request]] = [None] * b
+        self.positions = np.zeros((b,), np.int64)
+        self.last_token = np.zeros((b,), np.int32)
+        self._uid = 0
+
+    # -- slot management ------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def add_request(self, prompt: np.ndarray,
+                    max_new_tokens: int = 32) -> int:
+        """Prefill `prompt` into a free slot; returns the request uid."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots; call step() until one frees")
+        slot = free[0]
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens)
+        self.slots[slot] = req
+        # Prefill this slot: run a batch-1-style prefill into the slot's
+        # cache rows (the whole batch is passed; only this slot's rows are
+        # consumed by construction of the cache update).
+        s = req.prompt.shape[0]
+        tokens = np.zeros((len(self.slots), s), np.int32)
+        tokens[slot] = req.prompt
+        logits, new_states = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens)},
+            self.states)
+        # Merge: take the new cache rows for this slot only.
+        self.states = _merge_slot(self.states, new_states, slot)
+        self.positions[slot] = s
+        nxt = self._sample(np.asarray(logits)[slot, -1])
+        self.last_token[slot] = nxt
+        req.generated.append(int(nxt))
+        return req.uid
+
+    # -- decode ---------------------------------------------------------------
+    def step(self) -> Dict[int, List[int]]:
+        """One decode step for all active slots. Returns finished requests."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return {}
+        tokens = jnp.asarray(self.last_token[:, None])
+        positions = jnp.asarray(self.positions[:, None].astype(np.int32))
+        logits, self.states = self._decode(
+            self.params, {"tokens": tokens, "positions": positions},
+            self.states)
+        logits = np.asarray(logits)[:, 0]
+        finished: Dict[int, List[int]] = {}
+        for i in active:
+            req = self.slots[i]
+            nxt = self._sample(logits[i])
+            req.generated.append(int(nxt))
+            self.positions[i] += 1
+            self.last_token[i] = nxt
+            hit_eos = (self.serve.eos_id >= 0 and nxt == self.serve.eos_id)
+            if hit_eos or len(req.generated) >= req.max_new_tokens \
+                    or self.positions[i] >= self.serve.max_len - 1:
+                finished[req.uid] = req.generated
+                self.slots[i] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            out.update(self.step())
+            if not any(self.slots):
+                break
+        return out
+
+    def _sample(self, logits: np.ndarray) -> int:
+        logits = logits[:self.cfg.vocab_size]
+        if self.serve.temperature <= 0:
+            return int(logits.argmax())
+        p = np.exp((logits - logits.max()) / self.serve.temperature)
+        p /= p.sum()
+        rng = np.random.default_rng(self.serve.seed + self._uid)
+        return int(rng.choice(len(p), p=p))
+
+
+def _merge_slot(old_states, new_states, slot: int):
+    """Take slot `slot`'s rows from new_states, keep others from old."""
+    def merge(o, n):
+        if o.ndim >= 2 and o.shape == n.shape:
+            # batch dim is 1 for stacked leaves (G, B, ...) else 0
+            bdim = 1 if o.ndim >= 2 else 0
+            idx = [slice(None)] * o.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            return o.at[tuple(idx)].set(n[tuple(idx)])
+        return n
+    return jax.tree_util.tree_map(merge, old_states, new_states)

@@ -1,0 +1,5 @@
+from repro.train.step import (make_optimizer_for, make_serve_decode,
+                              make_serve_prefill, make_train_step)
+
+__all__ = ["make_train_step", "make_serve_prefill", "make_serve_decode",
+           "make_optimizer_for"]

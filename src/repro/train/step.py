@@ -1,0 +1,147 @@
+"""Jittable step functions: the units the dry-run lowers and the train loop
+runs.
+
+train_step implements the paper's full Fig. 1b pipeline per step:
+  compute params (fp16 master -> bf16) -> FP8 forward/backward (loss scaled)
+  -> overflow probe -> unscale in f32 -> optimizer update in f32 -> fp16
+  master store -> loss-scale update.
+
+Optional gradient accumulation (n_microbatches) runs the loss/grad pass in a
+scan with f32 accumulators — the standard large-batch memory lever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.loss_scale import LossScaler
+from repro.core.master_weights import MixedPrecisionOptimizer, MixedPrecisionState
+from repro.models.config import ModelConfig
+from repro.models.transformer import encode, forward, lm_loss
+from repro.optim import make_optimizer
+
+Array = jax.Array
+
+
+def make_optimizer_for(cfg: ModelConfig, *, name: str = "adam",
+                       scaler: Optional[LossScaler] = None,
+                       learning_rate: float = 1e-4) -> MixedPrecisionOptimizer:
+    from repro.optim.optimizers import make_leafwise
+    init, update = make_optimizer(name, learning_rate=learning_rate)
+    names, leaf = make_leafwise(name, learning_rate=learning_rate)
+    return MixedPrecisionOptimizer(
+        inner_init=init, inner_update=update,
+        scaler=scaler or LossScaler(mode="enhanced"),
+        master_dtype=cfg.policy.master_weight_dtype,
+        update_dtype=cfg.policy.update_dtype,
+        compute_dtype=cfg.policy.activation_dtype,
+        accum_names=names, leaf_update=leaf)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
+                    n_microbatches: int = 1, grad_shardings=None):
+    """Returns train_step(state, batch, step_key) -> (state, metrics).
+
+    grad_shardings: optional PartitionSpec pytree (params-shaped). Applied to
+    the gradients / accumulator so the f32 grad buffer is ZeRO-sharded like
+    the master weights instead of ballooning to a model-sharded-only copy.
+    """
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g, grad_shardings)
+
+    def loss_fn(params, batch, step_key, scale):
+        return lm_loss(params, batch, cfg=cfg, qkey=step_key,
+                       loss_scale=scale)
+
+    def train_step(state: MixedPrecisionState, batch: Dict[str, Array],
+                   step_key: Array) -> Tuple[MixedPrecisionState, Dict]:
+        params = optimizer.compute_params(state)
+        scale = state.loss_scale.scale
+
+        if n_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, step_key, scale)
+            grads = constrain_grads(grads)
+        else:
+            def reshape_mb(x):
+                return x.reshape((n_microbatches,
+                                  x.shape[0] // n_microbatches) + x.shape[1:])
+            mb_batch = jax.tree_util.tree_map(reshape_mb, batch)
+
+            def mb_body(carry, mb):
+                acc, i = carry
+                mkey = jax.random.fold_in(step_key, i)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, mkey, scale)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n_microbatches,
+                    acc, g)
+                return (constrain_grads(acc), i + 1), (l, m)
+
+            zero = constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, _), (losses, metricses) = jax.lax.scan(
+                mb_body, (zero, 0), mb_batch)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), metricses)
+
+        new_state, opt_metrics = optimizer.apply_gradients(state, grads)
+        inv = 1.0 / jnp.maximum(scale, 1e-9)
+        out = {"loss": loss.astype(jnp.float32) * inv,
+               "grad_norm": optax_safe_norm(grads) * inv,
+               **{k: v for k, v in metrics.items()}, **opt_metrics}
+        return new_state, out
+
+    return train_step
+
+
+def optax_safe_norm(tree) -> Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# serving steps (deterministic eval: RNE, saturating)
+# ---------------------------------------------------------------------------
+
+def _eval_cfg(cfg: ModelConfig) -> ModelConfig:
+    pol = dataclasses.replace(cfg.policy, quant=cfg.policy.quant.eval_mode())
+    return cfg.replace(policy=pol)
+
+
+def make_serve_prefill(cfg: ModelConfig):
+    ecfg = _eval_cfg(cfg)
+
+    def prefill(params, batch, states):
+        enc_out = None
+        if ecfg.is_encoder_decoder:
+            enc_out = encode(params, batch["enc_inputs"], cfg=ecfg)
+        logits, new_states, _ = forward(
+            params, batch["tokens"], cfg=ecfg, mode="prefill", states=states,
+            extra_embeds=batch.get("extra_embeds"), enc_out=enc_out,
+            last_only=True)
+        return logits, new_states
+
+    return prefill
+
+
+def make_serve_decode(cfg: ModelConfig):
+    ecfg = _eval_cfg(cfg)
+
+    def decode(params, batch, states):
+        enc_out = batch.get("enc_out")
+        logits, new_states, _ = forward(
+            params, batch["tokens"], cfg=ecfg, mode="decode", states=states,
+            positions=batch["positions"], enc_out=enc_out)
+        return logits[:, -1:], new_states
+
+    return decode

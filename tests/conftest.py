@@ -1,0 +1,10 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device tests spawn subprocesses that set
+xla_force_host_platform_device_count themselves."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,83 @@
+"""Checkpointer: roundtrip, atomic commit, GC, elastic restore."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+@pytest.fixture()
+def tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((2,), jnp.bfloat16),
+                       "c": jnp.asarray(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(5, tree)
+    proto = jax.eval_shape(lambda t: t, tree)
+    restored, step = ck.restore(proto)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_async_save(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=True)
+    ck.save(1, tree)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, tree)
+    # simulate a crash mid-save at step 2: directory without COMMITTED
+    broken = Path(tmp_path) / "step_0000000002"
+    broken.mkdir()
+    (broken / "leaves.npz").write_bytes(b"garbage")
+    assert ck.latest_step() == 1
+    restored, step = ck.restore(jax.eval_shape(lambda t: t, tree))
+    assert step == 1
+
+
+def test_keep_last_k(tmp_path, tree):
+    ck = Checkpointer(tmp_path, keep_last_k=2, async_save=False)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, tree)
+    bad = dict(tree)
+    bad["a"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(jax.eval_shape(lambda t: t, bad))
+
+
+def test_missing_leaf_raises(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, tree)
+    bigger = dict(tree)
+    bigger["extra"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        ck.restore(jax.eval_shape(lambda t: t, bigger))
+
+
+def test_manifest(tmp_path, tree):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(7, tree, extra={"loss": 1.5})
+    m = ck.manifest()
+    assert m["step"] == 7 and m["extra"]["loss"] == 1.5
+    assert "a" in m["keys"]

@@ -1,0 +1,63 @@
+"""Data pipeline: determinism, shardability, learnable structure."""
+import numpy as np
+
+from repro.data import (DataConfig, synthetic_image_batches,
+                        synthetic_lm_batches, synthetic_seq2seq_batches)
+from repro.data.pipeline import host_shard
+
+
+def test_deterministic_replay():
+    cfg = DataConfig(vocab_size=128, seq_len=16, batch_size=4, seed=3)
+    a = [next(synthetic_lm_batches(cfg)) for _ in range(1)][0]
+    b = [next(synthetic_lm_batches(cfg)) for _ in range(1)][0]
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_restart_from_step_matches():
+    cfg = DataConfig(vocab_size=128, seq_len=16, batch_size=4, seed=3)
+    it = synthetic_lm_batches(cfg)
+    batches = [next(it) for _ in range(5)]
+    it2 = synthetic_lm_batches(cfg, start_step=3)
+    np.testing.assert_array_equal(batches[3]["tokens"],
+                                  next(it2)["tokens"])
+
+
+def test_bigram_structure_learnable():
+    """Most transitions follow the deterministic bigram map."""
+    cfg = DataConfig(vocab_size=64, seq_len=64, batch_size=8, seed=0,
+                     temperature=0.2)
+    batch = next(synthetic_lm_batches(cfg))
+    toks, labels = batch["tokens"], batch["labels"]
+    from repro.data.pipeline import _bigram_params
+    a, b = _bigram_params(64, 0)
+    det = (a * toks + b) % 64
+    frac = (det == labels).mean()
+    assert frac > 0.7
+
+
+def test_host_shard_is_pure_slice():
+    cfg = DataConfig(vocab_size=64, seq_len=8, batch_size=8)
+    batch = next(synthetic_lm_batches(cfg))
+    s0 = host_shard(batch, 0, 2)
+    s1 = host_shard(batch, 1, 2)
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), batch["tokens"])
+
+
+def test_seq2seq_targets_follow_source():
+    cfg = DataConfig(vocab_size=64, seq_len=16, batch_size=4)
+    b = next(synthetic_seq2seq_batches(cfg, d_model=32))
+    assert b["enc_inputs"].shape == (4, 16, 32)
+    assert b["tokens"].shape == (4, 15)
+
+
+def test_images_class_dependent():
+    it = synthetic_image_batches(batch_size=64, image_size=16, seed=1)
+    b = next(it)
+    assert b["image"].shape == (64, 16, 16, 3)
+    # same-class images correlate more than cross-class
+    img, lab = b["image"], b["label"]
+    cls0 = img[lab == lab[0]]
+    if len(cls0) >= 2:
+        same = np.corrcoef(cls0[0].ravel(), cls0[1].ravel())[0, 1]
+        assert same > 0.15

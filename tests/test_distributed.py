@@ -1,0 +1,161 @@
+"""Distribution: sharding rules (pure), and multi-device behavior via
+subprocesses (so the main test session keeps exactly one CPU device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import _spec_for
+from repro.models.registry import build_config
+from repro.models.transformer import init_lm
+
+
+class TestShardingRules:
+    @pytest.mark.parametrize("path,shape,expected", [
+        ("decoder/stack_0/attn/wq", (4, 128, 256), P(None, None, "model")),
+        ("decoder/stack_0/attn/wo", (4, 256, 128), P(None, "model", None)),
+        ("decoder/stack_0/mlp/up", (4, 128, 512), P(None, None, "model")),
+        ("decoder/stack_0/mlp/down", (4, 512, 128), P(None, "model", None)),
+        ("embed/table", (9216, 128), P("model", None)),
+        ("embed/head", (128, 9216), P(None, "model")),
+        ("decoder/stack_0/moe/router", (128, 16), P()),
+        ("decoder/stack_0/moe/w_up", (16, 128, 512), P("model", None, None)),
+        ("decoder/stack_0/norm1/scale", (128,), P()),
+        ("decoder/stack_0/attn/bq", (256,), P("model",)),
+    ])
+    def test_rules(self, path, shape, expected):
+        assert _spec_for(path, shape, model_size=16) == expected
+
+    def test_indivisible_replicates(self):
+        # 12 heads x 1536 not divisible by 16 columns? 1536 is divisible;
+        # use a genuinely indivisible dim:
+        assert _spec_for("decoder/stack_0/attn/wq", (4, 100, 12),
+                         model_size=16) == P()
+
+    def test_embed_vocab_fallback_to_d(self):
+        # vocab 256206 not divisible by 16 -> shard d instead
+        assert _spec_for("embed/table", (256206, 1024), model_size=16) == \
+            P(None, "model")
+
+
+def _run_subprocess(code: str) -> str:
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        cwd="/root/repo")
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_grad_compression_correct_and_error_feedback():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.grad_compress import compressed_psum_mean
+        mesh = jax.make_mesh((8,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 0.01
+        e0 = jnp.zeros_like(g)
+        def step(g, e):
+            def inner(gl, el):
+                r, ne = compressed_psum_mean({"g": gl[0]}, {"g": el[0]},
+                                             axis_name="pod")
+                return r["g"][None], ne["g"][None]
+            return jax.shard_map(inner, mesh=mesh,
+                                 in_specs=(P("pod", None), P("pod", None)),
+                                 out_specs=(P("pod", None), P("pod", None)),
+                                 check_vma=False)(g, e)
+        with jax.set_mesh(mesh):
+            red, err = jax.jit(step)(g, e0)
+        true = np.asarray(g).mean(0)
+        rel = np.linalg.norm(np.asarray(red)[0] - true) / np.linalg.norm(true)
+        assert rel < 0.15, rel
+        acc_t, acc_c, e = 0, 0, e0
+        for _ in range(16):
+            red, e = jax.jit(step)(g, e)
+            acc_t = acc_t + true; acc_c = acc_c + np.asarray(red)[0]
+        rel_acc = np.linalg.norm(acc_c - acc_t) / np.linalg.norm(acc_t)
+        assert rel_acc < rel, (rel_acc, rel)   # error feedback improves it
+        print("OK", rel, rel_acc)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_train_and_decode():
+    """Lower+compile a reduced arch on a 2x4 mesh: the full distribution
+    path (param/batch/state specs, SP, ZeRO) on 8 host devices."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.launch.specs import build_cell, SHAPES
+        SHAPES["tiny_train"] = dict(seq=64, batch=8, mode="train")
+        SHAPES["tiny_decode"] = dict(seq=64, batch=8, mode="decode")
+        mesh = make_mesh((2, 4), ("data", "model"))
+        import repro.launch.specs as S
+        S.SHAPES = SHAPES
+        for arch in ["qwen2-1.5b", "dbrx-132b", "recurrentgemma-9b"]:
+            for shape in ["tiny_train", "tiny_decode"]:
+                import repro.models.registry as R
+                cfg = R.build_config(arch, smoke=True)
+                orig = R.build_config
+                R.build_config = lambda a, smoke=False, **kw: \
+                    orig(a, smoke=True, **kw)
+                S._cfg_for_cell.cache_clear()
+                try:
+                    with jax.set_mesh(mesh):
+                        cell = build_cell(arch, shape, mesh)
+                        c = jax.jit(cell["fn"],
+                                    in_shardings=cell["in_shardings"],
+                                    out_shardings=cell["out_shardings"]
+                                    ).lower(*cell["args"]).compile()
+                        assert c.memory_analysis().temp_size_in_bytes > 0
+                        print("OK", arch, shape)
+                finally:
+                    R.build_config = orig
+    """)
+    assert out.count("OK") == 6
+
+
+@pytest.mark.slow
+def test_real_sharded_train_step_runs():
+    """Actually EXECUTE a sharded train step on 8 devices and check the
+    loss is finite and the loss scale updates."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.models.registry import build_config
+        from repro.models.transformer import init_lm
+        from repro.train.step import make_optimizer_for, make_train_step
+        from repro.distributed.sharding import param_specs, batch_specs
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = build_config("qwen2-1.5b", smoke=True).replace(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=512, remat=False)
+        opt = make_optimizer_for(cfg, learning_rate=1e-3)
+        step = make_train_step(cfg, opt)
+        with jax.set_mesh(mesh):
+            params = init_lm(jax.random.PRNGKey(0), cfg)
+            state = opt.init(params)
+            toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 512)
+            batch = {"tokens": toks, "labels": toks,
+                     "loss_mask": jnp.ones((8, 32), jnp.float32)}
+            bspec = batch_specs(batch, mesh)
+            batch = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                batch, bspec)
+            state2, m = jax.jit(step)(state, batch, jax.random.PRNGKey(2))
+            assert np.isfinite(float(m["loss"]))
+            print("OK", float(m["loss"]))
+    """)
+    assert "OK" in out

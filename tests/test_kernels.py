@@ -1,0 +1,116 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fp8_matmul import fp8_matmul, fp8_matmul_ref
+from repro.kernels.fp8_matmul.kernel import fp8_matmul_kernel
+from repro.kernels.fused_quant_matmul import (fused_quant_matmul,
+                                              fused_quant_matmul_ref)
+from repro.kernels.stochastic_round import (stochastic_round_e5m2,
+                                            stochastic_round_e5m2_ref)
+from repro.kernels.stochastic_round.kernel import sr_quantize_kernel
+
+
+class TestStochasticRoundKernel:
+    @pytest.mark.parametrize("shape,block", [
+        ((32, 128), (32, 128)),
+        ((64, 256), (32, 128)),
+        ((128, 384), (64, 128)),
+    ])
+    @pytest.mark.parametrize("in_dtype", [jnp.float32, jnp.bfloat16])
+    def test_bit_exact_vs_ref(self, shape, block, in_dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 8).astype(
+            in_dtype)
+        rand8 = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint8)
+        scale = jnp.ones((1,), jnp.float32)
+        out_k = sr_quantize_kernel(x, rand8, scale, block=block,
+                                   interpret=True)
+        out_r = stochastic_round_e5m2_ref(x, rand8, scale)
+        np.testing.assert_array_equal(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32))
+
+    @pytest.mark.parametrize("scale", [0.5, 4.0])
+    def test_scale_applied(self, scale):
+        x = jnp.full((16, 128), 2.0, jnp.float32)
+        rand8 = jnp.zeros((16, 128), jnp.uint8)
+        out = sr_quantize_kernel(x, rand8, jnp.array([scale], jnp.float32),
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   2.0 / scale, rtol=0.13)
+
+    def test_wrapper_any_rank(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 128))
+        out = stochastic_round_e5m2(x, jax.random.PRNGKey(1), interpret=True)
+        assert out.shape == x.shape and out.dtype == jnp.float8_e5m2
+
+
+class TestFP8Matmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (32, 128, 128), (64, 256, 128), (128, 512, 256), (100, 300, 130),
+    ])
+    def test_matches_ref(self, m, k, n):
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k)).astype(
+            jnp.float8_e5m2)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(
+            jnp.float8_e5m2)
+        y = fp8_matmul(a, b, bm=32, bk=128, bn=128, interpret=True)
+        ref = fp8_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+    def test_out_dtypes(self, out_dtype):
+        a = jax.random.normal(jax.random.PRNGKey(0), (32, 128)).astype(
+            jnp.float8_e5m2)
+        b = jax.random.normal(jax.random.PRNGKey(1), (128, 128)).astype(
+            jnp.float8_e5m2)
+        y = fp8_matmul(a, b, bm=32, bk=128, bn=128, out_dtype=out_dtype,
+                       interpret=True)
+        assert y.dtype == out_dtype
+
+    def test_e4m3_inputs(self):
+        a = (jax.random.normal(jax.random.PRNGKey(0), (32, 128)) * 0.5
+             ).astype(jnp.float8_e4m3fn)
+        b = (jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 0.5
+             ).astype(jnp.float8_e4m3fn)
+        y = fp8_matmul(a, b, bm=32, bk=128, bn=128, interpret=True)
+        ref = fp8_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_k_accumulation_order(self):
+        """Multiple K blocks accumulate exactly in f32."""
+        a = jnp.ones((8, 512), jnp.float8_e5m2)
+        b = jnp.ones((512, 128), jnp.float8_e5m2)
+        y = fp8_matmul_kernel(a, b, bm=8, bk=128, bn=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y), 512.0)
+
+
+class TestFusedQuantMatmul:
+    @pytest.mark.parametrize("rounding", ["rne", "sr"])
+    def test_matches_ref(self, rounding):
+        m, k, n = 32, 256, 128
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k)).astype(
+            jnp.float8_e5m2)
+        b = (jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1).astype(
+            jnp.float8_e5m2)
+        key = jax.random.PRNGKey(2)
+        y = fused_quant_matmul(a, b, key, jnp.array([2.0]), bm=32, bk=128,
+                               bn=128, rounding=rounding, interpret=True)
+        rand8 = jax.random.bits(key, (m, n), jnp.uint8) if rounding == "sr" \
+            else jnp.zeros((m, n), jnp.uint8)
+        ref = fused_quant_matmul_ref(a, b, rand8, jnp.array([2.0]),
+                                     rounding=rounding)
+        np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                      np.asarray(ref, np.float32))
+
+    def test_output_is_fp8(self):
+        a = jnp.ones((8, 128), jnp.float8_e5m2)
+        b = jnp.ones((128, 128), jnp.float8_e5m2)
+        y = fused_quant_matmul(a, b, jax.random.PRNGKey(0), rounding="rne",
+                               bm=8, bk=128, bn=128, interpret=True)
+        assert y.dtype == jnp.float8_e5m2
+        np.testing.assert_array_equal(np.asarray(y, np.float32), 128.0)

@@ -1,0 +1,104 @@
+"""Loss scaling: constant / dynamic / enhanced (paper §3.1) + invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.loss_scale import (LossScaler, all_finite, convnet_scaler,
+                                   gnmt_scaler, underflow_fraction)
+
+
+class TestConstant:
+    def test_never_changes(self):
+        s = convnet_scaler(10_000.0)
+        st_ = s.init()
+        for finite in [True, False, True]:
+            st_ = s.update(st_, jnp.asarray(finite))
+        assert float(st_.scale) == 10_000.0
+        assert int(st_.overflow_count) == 1
+
+
+class TestDynamic:
+    def test_backoff_on_overflow(self):
+        s = LossScaler(mode="dynamic", init_scale=4096.0)
+        st_ = s.update(s.init(), jnp.asarray(False))
+        assert float(st_.scale) == 2048.0
+
+    def test_growth_after_interval(self):
+        s = LossScaler(mode="dynamic", init_scale=1024.0, growth_interval=3)
+        st_ = s.init()
+        for _ in range(3):
+            st_ = s.update(st_, jnp.asarray(True))
+        assert float(st_.scale) == 2048.0
+
+    def test_max_scale_cap(self):
+        s = LossScaler(mode="dynamic", init_scale=2.0**23, growth_interval=1,
+                       max_scale=2.0**24)
+        st_ = s.init()
+        for _ in range(5):
+            st_ = s.update(st_, jnp.asarray(True))
+        assert float(st_.scale) == 2.0**24
+
+
+class TestEnhanced:
+    """Paper Fig. 2b: minimum threshold grows on a schedule."""
+
+    def test_floor_inactive_before_knot(self):
+        s = gnmt_scaler()
+        st_ = s.init()
+        for _ in range(4):   # 8192 -> 512
+            st_ = s.update(st_, jnp.asarray(False))
+        assert float(st_.scale) == 512.0
+
+    def test_floor_active_after_knot(self):
+        s = gnmt_scaler()
+        st_ = dataclasses.replace(s.init(), step=jnp.asarray(50_000))
+        for _ in range(4):
+            st_ = s.update(st_, jnp.asarray(False))
+        assert float(st_.scale) == 8192.0   # clamped at the 40K-knot floor
+
+    def test_second_knot(self):
+        s = gnmt_scaler()
+        st_ = dataclasses.replace(s.init(), step=jnp.asarray(200_000))
+        st_ = s.update(st_, jnp.asarray(False))
+        assert float(st_.scale) >= 32768.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=60),
+           st.integers(min_value=0, max_value=300_000))
+    def test_invariants(self, finites, start_step):
+        """Scale stays within [scheduled_floor, max_scale] and positive."""
+        s = gnmt_scaler()
+        st_ = dataclasses.replace(s.init(), step=jnp.asarray(start_step))
+        for f in finites:
+            st_ = s.update(st_, jnp.asarray(f))
+            scale = float(st_.scale)
+            assert 0 < scale <= s.max_scale
+            floor = float(s.min_scale_at(st_.step - 1))
+            assert scale >= min(floor, s.init_scale)
+
+
+class TestHelpers:
+    def test_all_finite(self):
+        assert bool(all_finite({"a": jnp.ones(3), "b": jnp.zeros(2)}))
+        assert not bool(all_finite({"a": jnp.array([1.0, np.inf])}))
+        assert not bool(all_finite({"a": jnp.array([np.nan])}))
+
+    def test_all_finite_ignores_ints(self):
+        assert bool(all_finite({"a": jnp.array([1, 2], jnp.int32)}))
+
+    def test_underflow_fraction(self):
+        g = {"g": jnp.array([1e-9, 1e-3, 0.0, 1e-6], jnp.float32)}
+        frac = float(underflow_fraction(g, threshold=1.52587890625e-05))
+        assert frac == pytest.approx(2 / 3)
+
+    def test_unscale_is_f32(self):
+        s = convnet_scaler(1000.0)
+        st_ = s.init()
+        out = s.unscale(st_, {"g": jnp.ones(3, jnp.bfloat16) * 1000})
+        assert out["g"].dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out["g"]), 1.0, rtol=1e-3)

@@ -1,0 +1,100 @@
+"""Optimizers + FP16-master mixed precision (paper Fig. 1b)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.loss_scale import LossScaler, convnet_scaler
+from repro.core.master_weights import MixedPrecisionOptimizer
+from repro.optim import make_optimizer
+from repro.optim.optimizers import l2_regularization_loss, make_leafwise
+
+
+def _mp(name="momentum", scaler=None, fused=False, **kw):
+    init, update = make_optimizer(name, **kw)
+    extra = {}
+    if fused:
+        names, leaf = make_leafwise(name, **kw)
+        extra = dict(accum_names=names, leaf_update=leaf)
+    return MixedPrecisionOptimizer(
+        inner_init=init, inner_update=update,
+        scaler=scaler or convnet_scaler(1024.0), **extra)
+
+
+class TestOptimizers:
+    def test_momentum_trajectory(self):
+        init, update = make_optimizer("momentum", learning_rate=0.1,
+                                      momentum=0.9)
+        p = {"w": jnp.array([1.0])}
+        s = init(p)
+        g = {"w": jnp.array([1.0])}
+        upd, s = update(g, s, p)
+        np.testing.assert_allclose(np.asarray(upd["w"]), -0.1)
+        upd, s = update(g, s, p)
+        np.testing.assert_allclose(np.asarray(upd["w"]), -0.19)  # 0.9*1+1
+
+    def test_adam_first_step_is_lr(self):
+        init, update = make_optimizer("adam", learning_rate=0.01)
+        p = {"w": jnp.array([1.0])}
+        s = init(p)
+        upd, _ = update({"w": jnp.array([0.5])}, s, p)
+        np.testing.assert_allclose(np.asarray(upd["w"]), -0.01, rtol=1e-4)
+
+    def test_l2_loss_eq1(self):
+        p = {"a": jnp.array([1.0, 2.0]), "b": jnp.array([3.0])}
+        assert float(l2_regularization_loss(p, 0.1)) == pytest.approx(1.4)
+
+
+class TestMixedPrecision:
+    def test_master_stored_fp16(self):
+        opt = _mp()
+        state = opt.init({"w": jnp.ones((3,), jnp.float32)})
+        assert state.master["w"].dtype == jnp.float16
+
+    def test_unscale_and_update(self):
+        opt = _mp(learning_rate=0.1, momentum=0.0)
+        state = opt.init({"w": jnp.ones((2,), jnp.float32)})
+        grads = {"w": jnp.full((2,), 1024.0 * 0.5)}     # loss-scaled
+        state, m = jax.jit(opt.apply_gradients)(state, grads)
+        np.testing.assert_allclose(np.asarray(state.master["w"],
+                                              np.float32), 0.95, rtol=1e-3)
+        assert bool(m["grads_finite"])
+
+    def test_overflow_skips_step(self):
+        opt = _mp()
+        state = opt.init({"w": jnp.ones((2,), jnp.float32)})
+        state2, m = jax.jit(opt.apply_gradients)(
+            state, {"w": jnp.array([jnp.inf, 1.0])})
+        np.testing.assert_array_equal(np.asarray(state2.master["w"]),
+                                      np.asarray(state.master["w"]))
+        assert not bool(m["grads_finite"])
+
+    @pytest.mark.parametrize("name", ["momentum", "adam"])
+    def test_fused_matches_generic(self, name):
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (16,)),
+                  "b": jax.random.normal(jax.random.PRNGKey(1), (4,))}
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (16,)) * 512,
+                 "b": jax.random.normal(jax.random.PRNGKey(3), (4,)) * 512}
+        scaler = convnet_scaler(512.0)
+        o_gen = _mp(name, scaler, fused=False, learning_rate=0.05)
+        o_fus = _mp(name, scaler, fused=True, learning_rate=0.05)
+        s_gen = o_gen.init(params)
+        s_fus = o_fus.init(params)
+        for _ in range(3):
+            s_gen, _ = jax.jit(o_gen.apply_gradients)(s_gen, grads)
+            s_fus, _ = jax.jit(o_fus.apply_gradients)(s_fus, grads)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(s_gen.master[k], np.float32),
+                np.asarray(s_fus.master[k], np.float32), rtol=2e-3,
+                atol=2e-4)
+
+    def test_dynamic_scale_backs_off_then_steps(self):
+        opt = _mp(scaler=LossScaler(mode="dynamic", init_scale=1024.0))
+        state = opt.init({"w": jnp.ones((2,))})
+        state, m = jax.jit(opt.apply_gradients)(
+            state, {"w": jnp.array([jnp.nan, 1.0])})
+        assert float(m["loss_scale"]) == 512.0
+        state, m = jax.jit(opt.apply_gradients)(
+            state, {"w": jnp.array([512.0, 512.0])})
+        assert bool(m["grads_finite"])

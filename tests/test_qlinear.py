@@ -1,0 +1,142 @@
+"""qeinsum: adjoint derivation, gradient flow, FP8 error bounds, remat."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision_policy import (AMAX_FP8, BASELINE, PAPER_FP8,
+                                         PAPER_FP8_RNE)
+from repro.core.qlinear import adjoint_specs, parse_spec, qeinsum, qmatmul
+
+
+class TestAdjointSpecs:
+    @pytest.mark.parametrize("spec,da,db", [
+        ("mk,kn->mn", "mn,kn->mk", "mk,mn->kn"),
+        ("bsk,kn->bsn", "bsn,kn->bsk", "bsk,bsn->kn"),
+        ("bhqd,bhkd->bhqk", "bhqk,bhkd->bhqd", "bhqd,bhqk->bhkd"),
+        ("ecd,edf->ecf", "ecf,edf->ecd", "ecd,ecf->edf"),
+    ])
+    def test_derivation(self, spec, da, db):
+        assert adjoint_specs(spec) == (da, db)
+
+    def test_rejects_sum_only_index(self):
+        with pytest.raises(ValueError):
+            adjoint_specs("ab,cd->ad")  # b summed-only in lhs
+
+    def test_rejects_ellipsis(self):
+        with pytest.raises(ValueError):
+            parse_spec("...k,kn->...n")
+
+    @pytest.mark.parametrize("spec,ash,bsh", [
+        ("mk,kn->mn", (8, 16), (16, 4)),
+        ("bsk,kn->bsn", (2, 8, 16), (16, 4)),
+        ("bhqd,bhkd->bhqk", (2, 3, 8, 16), (2, 3, 8, 16)),
+        ("ecd,edf->ecf", (4, 8, 16), (4, 16, 8)),
+    ])
+    def test_adjoints_match_autodiff(self, spec, ash, bsh):
+        """Baseline-mode qeinsum gradients == plain einsum gradients."""
+        a = jax.random.normal(jax.random.PRNGKey(0), ash)
+        b = jax.random.normal(jax.random.PRNGKey(1), bsh) * 0.3
+
+        def f_q(a, b):
+            return (qeinsum(spec, a, b, cfg=BASELINE)
+                    .astype(jnp.float32) ** 2).sum()
+
+        def f_p(a, b):
+            y = jnp.einsum(spec, a.astype(jnp.bfloat16),
+                           b.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+            return (y.astype(jnp.bfloat16).astype(jnp.float32) ** 2).sum()
+
+        gq = jax.grad(f_q, argnums=(0, 1))(a, b)
+        gp = jax.grad(f_p, argnums=(0, 1))(a, b)
+        for x, y in zip(gq, gp):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-2, atol=1e-3)
+
+
+class TestFP8Path:
+    def test_forward_error_bounded(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 32)) * 0.1
+        y8 = qmatmul(x, w, key=jax.random.PRNGKey(2), cfg=PAPER_FP8)
+        yb = qmatmul(x, w, cfg=BASELINE)
+        rel = (np.linalg.norm(np.asarray(y8 - yb, np.float32))
+               / np.linalg.norm(np.asarray(yb, np.float32)))
+        assert rel < 0.2, rel   # e5m2 eps=0.25; GEMM averages it down
+
+    def test_amax_scaling_tightens_error(self):
+        # 2e-5 puts most magnitudes in e5m2's subnormal regime where plain
+        # quantization is coarse; amax scaling recovers the full mantissa.
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 2e-5
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 32)) * 2e-5
+        yb = np.asarray(qmatmul(x, w, cfg=BASELINE), np.float32)
+        y_plain = np.asarray(qmatmul(x, w, key=jax.random.PRNGKey(2),
+                                     cfg=PAPER_FP8), np.float32)
+        y_amax = np.asarray(qmatmul(x, w, key=jax.random.PRNGKey(2),
+                                    cfg=AMAX_FP8), np.float32)
+        err_plain = np.linalg.norm(y_plain - yb)
+        err_amax = np.linalg.norm(y_amax - yb)
+        assert err_amax < err_plain  # tiny values underflow without scaling
+
+    def test_grads_finite_and_nonzero(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+
+        def loss(x, w, k):
+            return (qmatmul(x, w, key=k, cfg=PAPER_FP8)
+                    .astype(jnp.float32) ** 2).mean()
+
+        gx, gw = jax.jit(jax.grad(loss, argnums=(0, 1)))(
+            x, w, jax.random.PRNGKey(3))
+        assert bool(jnp.isfinite(gx).all() and jnp.isfinite(gw).all())
+        assert float(jnp.abs(gw).sum()) > 0
+
+    def test_error_overflow_propagates_to_grads(self):
+        """With saturate_bwd=False, a huge cotangent must produce non-finite
+        weight grads (the dynamic loss scaler's back-off signal)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+
+        def loss(w):
+            y = qmatmul(x, w, key=jax.random.PRNGKey(2), cfg=PAPER_FP8)
+            return (y.astype(jnp.float32) * 1e9).sum()  # enormous dy
+
+        g = jax.grad(loss)(w)
+        assert not bool(jnp.isfinite(g).all())
+
+    def test_rne_config_needs_no_key(self):
+        x = jnp.ones((4, 8))
+        w = jnp.ones((8, 4))
+        y = qmatmul(x, w, cfg=PAPER_FP8_RNE)
+        assert y.shape == (4, 4)
+
+    def test_sr_config_requires_key(self):
+        with pytest.raises(ValueError, match="needs a PRNG key"):
+            qmatmul(jnp.ones((4, 8)), jnp.ones((8, 4)), cfg=PAPER_FP8)
+
+    def test_remat_consistency(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+
+        def loss(w, k):
+            return (qmatmul(x, w, key=k, cfg=PAPER_FP8)
+                    .astype(jnp.float32) ** 2).mean()
+
+        g1 = jax.jit(jax.grad(loss))(w, jax.random.PRNGKey(2))
+        g2 = jax.jit(jax.grad(jax.remat(loss)))(w, jax.random.PRNGKey(2))
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+    def test_pallas_interpret_backend_matches_xla(self):
+        import dataclasses
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 128))
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 0.1
+        cfg_x = dataclasses.replace(PAPER_FP8_RNE, backend="xla",
+                                    output_dtype="float32")
+        cfg_p = dataclasses.replace(PAPER_FP8_RNE,
+                                    backend="pallas_interpret",
+                                    output_dtype="float32")
+        yx = qmatmul(x, w, cfg=cfg_x)
+        yp = qmatmul(x, w, cfg=cfg_p)
+        np.testing.assert_allclose(np.asarray(yx), np.asarray(yp),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,146 @@
+"""FP8 quantization numerics: bit-exactness, SR unbiasedness, paper Table 1."""
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fp8_formats as F
+from repro.core import quantize as Q
+
+
+class TestTable1:
+    """Paper Table 1 dynamic ranges, exactly."""
+
+    def test_e5m2(self):
+        assert F.E5M2.max_normal == 57344.0
+        assert F.E5M2.min_normal == 6.103515625e-05
+        assert F.E5M2.min_subnormal == 1.52587890625e-05
+        assert F.E5M2.eps == 0.25
+
+    def test_fp16(self):
+        assert F.FP16.max_normal == 65504.0
+        assert F.FP16.min_subnormal == 5.960464477539063e-08
+
+    def test_fp32(self):
+        assert np.isclose(F.FP32.max_normal, 3.4028235e38)
+
+    def test_against_ml_dtypes(self):
+        fi = ml_dtypes.finfo(ml_dtypes.float8_e5m2)
+        assert float(fi.max) == F.E5M2.max_normal
+        assert float(fi.smallest_normal) == F.E5M2.min_normal
+        assert float(fi.smallest_subnormal) == F.E5M2.min_subnormal
+        fi4 = ml_dtypes.finfo(ml_dtypes.float8_e4m3fn)
+        assert float(fi4.max) == F.E4M3.max_normal
+
+
+class TestRNE:
+    @pytest.mark.parametrize("fmt,mldt", [
+        (F.E5M2, ml_dtypes.float8_e5m2),
+        (F.E4M3, ml_dtypes.float8_e4m3fn),
+    ])
+    def test_bit_exact_vs_ml_dtypes(self, fmt, mldt):
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal(20000)
+             * np.exp(rng.uniform(-14, 10, 20000))).astype(np.float32)
+        ours = np.asarray(Q.quantize_rne(jnp.array(x), fmt, saturate=True)
+                          ).astype(np.float32)
+        ref = np.clip(x, -fmt.max_normal, fmt.max_normal).astype(mldt)\
+            .astype(np.float32)
+        np.testing.assert_array_equal(ours, ref)
+
+    def test_overflow_to_inf_when_not_saturating(self):
+        x = jnp.array([1e6, -1e6, 60000.0], jnp.float32)
+        q = Q.quantize_rne(x, F.E5M2, saturate=False).astype(jnp.float32)
+        assert np.isinf(q[0]) and np.isinf(q[1])
+        assert q[0] > 0 and q[1] < 0
+
+    def test_nan_passthrough(self):
+        q = Q.quantize_rne(jnp.array([np.nan]), F.E5M2).astype(jnp.float32)
+        assert np.isnan(q[0])
+
+
+class TestStochasticRounding:
+    def test_exact_values_unchanged(self):
+        vals = jnp.array([0.0, 1.0, -1.25, 0.5, 57344.0, 6.103515625e-05,
+                          1.52587890625e-05], jnp.float32)
+        q = Q.quantize_sr_e5m2(vals, jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                      np.asarray(vals))
+
+    @pytest.mark.parametrize("val,lo,hi", [
+        (1.1, 1.0, 1.25),
+        (-3.3, -3.5, -3.0),
+        (2.2e-5, 1.52587890625e-05, 3.0517578125e-05),  # subnormal regime
+    ])
+    def test_rounds_to_neighbors_and_unbiased(self, val, lo, hi):
+        n = 200_000
+        q = Q.quantize_sr_e5m2(jnp.full((n,), val, jnp.float32),
+                               jax.random.PRNGKey(1)).astype(jnp.float32)
+        vals = np.unique(np.asarray(q))
+        assert set(vals).issubset({np.float32(lo), np.float32(hi)})
+        mean = float(q.mean())
+        se = (hi - lo) / np.sqrt(n) * 3
+        assert abs(mean - val) < se + 1e-7 * abs(val), (mean, val)
+
+    def test_saturate_clamps_everything(self):
+        x = jnp.array([60000.0, 70000.0, 1e20, -1e20], jnp.float32)
+        q = Q.quantize_sr_e5m2(x, jax.random.PRNGKey(0), saturate=True)
+        assert np.abs(np.asarray(q, np.float32)).max() <= 57344.0
+
+    def test_no_saturate_overflows_to_inf(self):
+        x = jnp.full((1000,), 60000.0, jnp.float32)
+        q = Q.quantize_sr_e5m2(x, jax.random.PRNGKey(0), saturate=False)
+        q = np.asarray(q, np.float32)
+        # 60000 lies between 57344 and inf: SR must produce both.
+        assert np.isinf(q).any() and np.isfinite(q).any()
+
+    def test_grid_sr_e4m3_unbiased(self):
+        n = 200_000
+        q = Q.quantize_sr_grid(jnp.full((n,), 1.05, jnp.float32), F.E4M3,
+                               jax.random.PRNGKey(2)).astype(jnp.float32)
+        assert abs(float(q.mean()) - 1.05) < 3 * 0.125 / np.sqrt(n)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(min_value=-5e4, max_value=5e4,
+                     allow_nan=False, allow_infinity=False))
+    def test_sr_lands_on_e5m2_grid(self, val):
+        """Property: SR output is always exactly representable in e5m2."""
+        q = Q.quantize_sr_e5m2(jnp.array([val], jnp.float32),
+                               jax.random.PRNGKey(3)).astype(jnp.float32)
+        back = np.asarray(q).astype(ml_dtypes.float8_e5m2).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(q), back)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(min_value=1e-6, max_value=5e4,
+                     allow_nan=False, allow_infinity=False))
+    def test_sr_bounded_by_neighbors(self, val):
+        """Property: SR never moves more than one e5m2 ulp."""
+        q = np.asarray(Q.quantize_sr_e5m2(
+            jnp.full((64,), val, jnp.float32),
+            jax.random.PRNGKey(4))).astype(np.float32)
+        down = np.float32(val).astype(ml_dtypes.float8_e5m2).astype(np.float32)
+        # neighbors of the RNE value bound the SR outputs
+        ulp = max(abs(down) * 0.25, F.E5M2.min_subnormal)
+        assert np.all(np.abs(q - val) <= ulp + 1e-12)
+
+
+class TestScaledQuant:
+    def test_amax_scale_uses_full_range(self):
+        x = jnp.array([1e-3, -5e-4, 2e-3], jnp.float32)
+        qt = Q.quantize(x, F.E5M2, use_amax_scale=True)
+        deq = Q.dequantize(qt)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(x), rtol=0.13)
+
+    def test_fake_quant_idempotent(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+        once = Q.fake_quant(x, "e5m2")
+        twice = Q.fake_quant(once, "e5m2")
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    def test_qtensor_pytree(self):
+        qt = Q.quantize(jnp.ones((4,)), F.E5M2)
+        leaves = jax.tree_util.tree_leaves(qt)
+        assert len(leaves) == 2
