@@ -38,8 +38,18 @@ class QuantConfig:
     grad_rounding: str = "sr"
     saturate_fwd: bool = True
     saturate_bwd: bool = False    # keep inf -> dynamic loss scaling sees it
-    # Beyond-paper: per-tensor just-in-time amax scaling (cf. FP8-LM); the
-    # paper relies on global loss scaling only.
+    # Per-tensor scaling mode (beyond-paper; the paper relies on global loss
+    # scaling only):
+    #   "none"     — scale 1.0 everywhere (the paper's recipe).
+    #   "jit_amax" — just-in-time per-tensor amax scaling: an extra
+    #                full-tensor reduction on every quantize (cf. FP8-LM).
+    #   "delayed"  — stateful delayed scaling: scales come from a ScaleState
+    #                history of recent amax observations (repro.scaling),
+    #                removing the in-line reduction from the hot path
+    #                (cf. Transformer Engine).
+    scaling: str = "none"
+    # Deprecated back-compat shim for the old per-direction bools; setting
+    # either forces scaling="jit_amax" (see __post_init__).
     amax_scale_fwd: bool = False
     amax_scale_bwd: bool = False
     compute_dtype: str = "bfloat16"   # MXU operand dtype after dequant
@@ -48,6 +58,13 @@ class QuantConfig:
     backend: str = "xla"              # xla | pallas | pallas_interpret
     # Whether activation-activation GEMMs (attention QK^T / PV) are quantized.
     quantize_attention: bool = True
+
+    def __post_init__(self):
+        if self.scaling not in ("none", "jit_amax", "delayed"):
+            raise ValueError(f"unknown scaling mode {self.scaling!r}")
+        if self.scaling == "none" and (self.amax_scale_fwd
+                                       or self.amax_scale_bwd):
+            object.__setattr__(self, "scaling", "jit_amax")
 
     # -- helpers ------------------------------------------------------------
     def rounding_for(self, cls: str) -> str:
@@ -61,7 +78,18 @@ class QuantConfig:
         return self.saturate_fwd if cls in (WEIGHT, ACT) else self.saturate_bwd
 
     def amax_for(self, cls: str) -> bool:
-        return self.amax_scale_fwd if cls in (WEIGHT, ACT) else self.amax_scale_bwd
+        """Just-in-time amax scaling for `cls`? (delayed mode never computes
+        amax inline — scales come from ScaleState history instead)."""
+        if self.scaling != "jit_amax":
+            return False
+        if not (self.amax_scale_fwd or self.amax_scale_bwd):
+            return True   # scaling="jit_amax" given directly: all classes
+        return self.amax_scale_fwd if cls in (WEIGHT, ACT) \
+            else self.amax_scale_bwd
+
+    @property
+    def delayed(self) -> bool:
+        return self.scaling == "delayed"
 
     @property
     def needs_key(self) -> bool:
@@ -85,6 +113,8 @@ PAPER_FP8_RNE = dataclasses.replace(            # ablation: RNE-only (Fig. 3)
 BASELINE = QuantConfig(enabled=False)          # FP32/BF16 baseline
 AMAX_FP8 = dataclasses.replace(                # beyond-paper per-tensor scaling
     PAPER_FP8, amax_scale_fwd=True, amax_scale_bwd=True)
+DELAYED_FP8 = dataclasses.replace(              # history-based delayed scaling
+    PAPER_FP8, scaling="delayed")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,8 +32,11 @@ def conv_init(key, kh: int, kw: int, c_in: int, c_out: int, *,
 
 def qconv2d(x: Array, w: Array, *, stride: Tuple[int, int] = (1, 1),
             padding: str = "SAME", key: Optional[Array] = None,
-            cfg: QuantConfig = PAPER_FP8) -> Array:
-    """x: (B, H, W, C_in), w: (kh, kw, C_in, C_out) -> (B, H', W', C_out)."""
+            cfg: QuantConfig = PAPER_FP8,
+            site: Optional[str] = None) -> Array:
+    """x: (B, H, W, C_in), w: (kh, kw, C_in, C_out) -> (B, H', W', C_out).
+
+    site: delayed-scaling site name for the implicit GEMM (see qeinsum)."""
     kh, kw, c_in, c_out = w.shape
     patches = jax.lax.conv_general_dilated_patches(
         x, (kh, kw), stride, padding,
@@ -42,5 +45,5 @@ def qconv2d(x: Array, w: Array, *, stride: Tuple[int, int] = (1, 1),
     # on the last axis; reorder the filter to match.
     w_flat = w.transpose(2, 0, 1, 3).reshape(c_in * kh * kw, c_out)
     b, ho, wo, _ = patches.shape
-    y = qeinsum("bhwk,kn->bhwn", patches, w_flat, key=key, cfg=cfg)
+    y = qeinsum("bhwk,kn->bhwn", patches, w_flat, key=key, cfg=cfg, site=site)
     return y

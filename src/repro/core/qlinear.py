@@ -31,12 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import QTensor
+from repro.core.quantize import QTensor, fp8_amax_bits
 from repro.core.quantize import dequantize as _dequantize
 from repro.core.quantize import quantize as _quantize
 from repro.core.fp8_formats import get_format
 from repro.core.precision_policy import (ACT, ERROR, GRAD, WEIGHT, PAPER_FP8,
                                          QuantConfig, dtype_of)
+from repro.scaling import context as scale_ctx
 
 Array = jax.Array
 
@@ -78,8 +79,20 @@ def adjoint_specs(spec: str) -> Tuple[str, str]:
 # operand quantization + fp8 compute
 # ---------------------------------------------------------------------------
 
-def _quant_operand(x: Array, cls: str, cfg: QuantConfig, key: Array) -> QTensor:
+def _quant_operand(x: Array, cls: str, cfg: QuantConfig, key: Array,
+                   scale: Optional[Array] = None) -> QTensor:
+    """Quantize one operand. With delayed scaling, `scale` is the
+    history-derived per-site scale (an explicit input — no amax reduction
+    over x happens here); otherwise the legacy jit-amax / unit-scale path."""
     fmt = get_format(cfg.format_for(cls))
+    if cfg.delayed:
+        return _quantize(
+            x, fmt,
+            rounding=cfg.rounding_for(cls),
+            key=key,
+            scale=jnp.float32(1.0) if scale is None else scale,
+            saturate=cfg.saturate_for(cls),
+        )
     return _quantize(
         x, fmt,
         rounding=cfg.rounding_for(cls),
@@ -125,47 +138,77 @@ def _plain_einsum(spec: str, a: Array, b: Array, cfg: QuantConfig) -> Array:
 # custom_vjp core
 # ---------------------------------------------------------------------------
 
+def _observe(q: QTensor, cfg: QuantConfig) -> Array:
+    """Observed amax of a quantized operand, from the FP8 payload's bit
+    patterns (uint8 reduce — no pass over the high-precision tensor)."""
+    if not cfg.delayed:
+        return jnp.float32(0.0)
+    return fp8_amax_bits(q.data) * q.scale.astype(jnp.float32)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
 def _qeinsum(spec: str, classes: Tuple[str, str], cfg: QuantConfig,
-             a: Array, b: Array, key: Array) -> Array:
-    out, _ = _qeinsum_fwd(spec, classes, cfg, a, b, key)
+             a: Array, b: Array, key: Array, scales: Array,
+             token: Array) -> Tuple[Array, Array]:
+    """Returns (y, fwd_obs) where fwd_obs = [amax_a, amax_b] (zeros unless
+    cfg.scaling == 'delayed').
+
+    scales: f32[4] per-site quantization scales [a, b, E, G] (history-derived
+    under delayed scaling; ones otherwise). token: f32[2] observation channel
+    whose *cotangent* is defined as [amax_E, amax_G] — the backward-pass
+    observations ride the gradient of this input out of value_and_grad.
+    """
+    out, _ = _qeinsum_fwd(spec, classes, cfg, a, b, key, scales, token)
     return out
 
 
-def _qeinsum_fwd(spec, classes, cfg, a, b, key):
+def _qeinsum_fwd(spec, classes, cfg, a, b, key, scales, token):
     k_a, k_b, k_bwd = jax.random.split(key, 3)
-    qa = _quant_operand(a, classes[0], cfg, k_a)
-    qb = _quant_operand(b, classes[1], cfg, k_b)
+    qa = _quant_operand(a, classes[0], cfg, k_a, scale=scales[0])
+    qb = _quant_operand(b, classes[1], cfg, k_b, scale=scales[1])
     y = _compute(spec, qa, qb, cfg)
+    obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg)])
     # Zero-size dtype witnesses so bwd can emit cotangents in primal dtypes.
-    return y, (qa, qb, k_bwd, jnp.zeros((0,), a.dtype), jnp.zeros((0,), b.dtype))
+    return (y, obs), (qa, qb, k_bwd, scales,
+                      jnp.zeros((0,), a.dtype), jnp.zeros((0,), b.dtype))
 
 
-def _qeinsum_bwd(spec, classes, cfg, res, dy):
-    qa, qb, k_bwd, a_wit, b_wit = res
+def _qeinsum_bwd(spec, classes, cfg, res, ct):
+    dy, _ = ct   # cotangent of the fwd_obs output is discarded
+    qa, qb, k_bwd, scales, a_wit, b_wit = res
     a_dtype, b_dtype = a_wit.dtype, b_wit.dtype
     k_e, k_ga, k_gb = jax.random.split(k_bwd, 3)
-    qdy = _quant_operand(dy, ERROR, cfg, k_e)
+    qdy = _quant_operand(dy, ERROR, cfg, k_e, scale=scales[2])
     da_spec, db_spec = adjoint_specs(spec)
     da = _compute(da_spec, qdy, qb, cfg)
     db = _compute(db_spec, qa, qdy, cfg)
     # Weight gradients are stored in FP8 (tensor class G, paper Fig. 1b).
     # Implemented as fake-quant here; the optimizer unscales in FP32.
+    obs_g = jnp.float32(0.0)
     if classes[0] == WEIGHT:
-        da = _fake_quant_grad(da, cfg, k_ga)
+        da, og = _fake_quant_grad(da, cfg, k_ga, scale=scales[3])
+        obs_g = jnp.maximum(obs_g, og)
     if classes[1] == WEIGHT:
-        db = _fake_quant_grad(db, cfg, k_gb)
+        db, og = _fake_quant_grad(db, cfg, k_gb, scale=scales[3])
+        obs_g = jnp.maximum(obs_g, og)
+    token_ct = jnp.stack([_observe(qdy, cfg), obs_g])
     # Cotangents match primal dtypes; the integer PRNG key gets float0 zeros.
     return (da.astype(a_dtype), db.astype(b_dtype),
-            np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0))
+            np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
+            jnp.zeros((4,), jnp.float32), token_ct)
 
 
-def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array) -> Array:
+def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array,
+                     scale: Optional[Array] = None) -> Tuple[Array, Array]:
     fmt = get_format(cfg.format_for(GRAD))
-    q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
-                    use_amax_scale=cfg.amax_for(GRAD),
-                    saturate=cfg.saturate_for(GRAD))
-    return _dequantize(q, dtype=g.dtype)
+    if cfg.delayed:
+        q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
+                      scale=scale, saturate=cfg.saturate_for(GRAD))
+    else:
+        q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
+                      use_amax_scale=cfg.amax_for(GRAD),
+                      saturate=cfg.saturate_for(GRAD))
+    return _dequantize(q, dtype=g.dtype), _observe(q, cfg)
 
 
 _qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
@@ -178,10 +221,20 @@ _qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
 def qeinsum(spec: str, a: Array, b: Array, *,
             key: Optional[Array] = None,
             cfg: QuantConfig = PAPER_FP8,
-            classes: Tuple[str, str] = (ACT, WEIGHT)) -> Array:
+            classes: Tuple[str, str] = (ACT, WEIGHT),
+            site: Optional[str] = None) -> Array:
     """Quantized einsum (see module docstring). classes tags each operand as
     'act' or 'weight', selecting its rounding/format and whether its gradient
-    is additionally stored as FP8 (weights only)."""
+    is additionally stored as FP8 (weights only).
+
+    site: stable name of this call site (scoped by scaling.context.scope).
+    Under cfg.scaling == 'delayed' with an active ScaleContext, the operand
+    scales are read from ScaleState history for this site and the observed
+    amaxes are recorded back (forward classes via the context/aux channel,
+    error/grad classes via the site token's cotangent). Without a site or
+    context, delayed mode degrades to unit scales (the paper's global-loss-
+    scale recipe).
+    """
     parse_spec(spec)  # validate early
     if not cfg.enabled:
         return _plain_einsum(spec, a, b, cfg)
@@ -191,15 +244,36 @@ def qeinsum(spec: str, a: Array, b: Array, *,
                 f"QuantConfig uses stochastic rounding; qeinsum({spec!r}) "
                 "needs a PRNG key")
         key = jax.random.PRNGKey(0)
-    return _qeinsum(spec, tuple(classes), cfg, a, b, key)
+    classes = tuple(classes)
+    ctx = scale_ctx.current()
+    if cfg.delayed and ctx is not None and site is not None:
+        skey = ctx.site_key(site)
+        keys = scale_ctx.operand_keys(skey, classes)
+        ctx.register(keys["a"])
+        ctx.register(keys["b"])
+        ctx.register(keys["E"])
+        if WEIGHT in classes:
+            ctx.register(keys["G"])
+        scales = jnp.stack([
+            ctx.scale_for(keys["a"]), ctx.scale_for(keys["b"]),
+            ctx.scale_for(keys["E"]), ctx.scale_for(keys["G"])])
+        token = ctx.token_for(skey)
+        y, obs = _qeinsum(spec, classes, cfg, a, b, key, scales, token)
+        ctx.record(keys["a"], obs[0])
+        ctx.record(keys["b"], obs[1])
+        return y
+    y, _ = _qeinsum(spec, classes, cfg, a, b, key,
+                    jnp.ones((4,), jnp.float32), jnp.zeros((2,), jnp.float32))
+    return y
 
 
 def qmatmul(a: Array, w: Array, *, key: Optional[Array] = None,
-            cfg: QuantConfig = PAPER_FP8) -> Array:
+            cfg: QuantConfig = PAPER_FP8,
+            site: Optional[str] = None) -> Array:
     """x @ w for x: (..., K), w: (K, N) — the layer-projection fast path."""
     if a.ndim == 2:
-        return qeinsum("mk,kn->mn", a, w, key=key, cfg=cfg)
+        return qeinsum("mk,kn->mn", a, w, key=key, cfg=cfg, site=site)
     if a.ndim == 3:
-        return qeinsum("bsk,kn->bsn", a, w, key=key, cfg=cfg)
+        return qeinsum("bsk,kn->bsn", a, w, key=key, cfg=cfg, site=site)
     lead = "abcdefg"[: a.ndim - 1]
-    return qeinsum(f"{lead}k,kn->{lead}n", a, w, key=key, cfg=cfg)
+    return qeinsum(f"{lead}k,kn->{lead}n", a, w, key=key, cfg=cfg, site=site)

@@ -64,6 +64,24 @@ def rne_overflow_threshold(fmt: FloatFormat) -> float:
     return (fmt.max_normal + 2.0 ** (fmt.max_exp + 1)) / 2.0
 
 
+def _rne_on_grid_f32(x: Array, fmt: FloatFormat) -> Array:
+    """Correctly-rounded (single-rounding) RNE of f32 onto fmt's value grid.
+
+    XLA lowers f32 -> fp8 casts through an f16 intermediate, which double-
+    rounds values near fp8 halfway points (~0.1% of a log-uniform sample).
+    This decomposes |x| into (ulp, multiple-of-ulp) exactly — ulp is a power
+    of two and the multiple fits in the f32 mantissa — and applies
+    ties-to-even on the exact ratio, matching ml_dtypes bit-for-bit. The
+    returned value is on-grid (or the next power of two on binade carry), so
+    the subsequent storage-dtype cast is exact."""
+    xf = x.astype(jnp.float32)
+    ax = jnp.abs(xf)
+    xb = jax.lax.bitcast_convert_type(ax, jnp.uint32)
+    e = jnp.maximum((xb >> 23).astype(jnp.int32) - 127, fmt.min_exp)
+    ulp = jnp.exp2((e - fmt.man_bits).astype(jnp.float32))
+    return jnp.sign(xf) * jnp.round(ax / ulp) * ulp
+
+
 def quantize_rne(x: Array, fmt: FloatFormat = E5M2, *, saturate: bool = True) -> Array:
     """Round-to-nearest-even down-conversion into `fmt`'s storage dtype.
 
@@ -79,13 +97,24 @@ def quantize_rne(x: Array, fmt: FloatFormat = E5M2, *, saturate: bool = True) ->
     # grid bounds are exactly representable in bf16/f16/f32.
     if not jnp.issubdtype(x.dtype, jnp.floating):
         x = x.astype(jnp.float32)
-    q = x.astype(fmt.dtype)
+    if x.dtype in (jnp.float16, jnp.bfloat16):
+        # Narrow inputs convert correctly through XLA's cast chain (bf16 ->
+        # f16 is exact at fp8-surviving magnitudes, f16 -> fp8 rounds once).
+        q = x.astype(fmt.dtype)
+        rounded = x   # clamping below re-rounds via the same exact chain
+    else:
+        # Wide inputs need the explicit single-rounding grid path (XLA's
+        # cast would double-round through f16 — see _rne_on_grid_f32).
+        on_grid = _rne_on_grid_f32(x, fmt)
+        rounded = jnp.where(jnp.isfinite(x), on_grid, x.astype(jnp.float32))
+        q = rounded.astype(fmt.dtype)
     if saturate:
         # XLA's f32->f8 conversion saturates for e5m2 and produces NaN for
-        # e4m3fn overflow; normalize both to explicit clamping.
-        lo = jnp.asarray(-fmt.max_normal, x.dtype)
-        hi = jnp.asarray(fmt.max_normal, x.dtype)
-        clamped = jnp.clip(x, lo, hi)
+        # e4m3fn overflow; normalize both to explicit clamping (of the
+        # already-rounded value, so clamping never re-rounds inexactly).
+        lo = jnp.asarray(-fmt.max_normal, rounded.dtype)
+        hi = jnp.asarray(fmt.max_normal, rounded.dtype)
+        clamped = jnp.clip(rounded, lo, hi)
         q = jnp.where(jnp.isfinite(x), clamped.astype(fmt.dtype), q)
     else:
         thresh = jnp.asarray(rne_overflow_threshold(fmt), jnp.float32)
@@ -210,6 +239,19 @@ class QTensor:
             self.data.astype(jnp.float32) * self.scale[..., None].astype(jnp.float32)
 
 
+def fp8_amax_bits(data: Array) -> Array:
+    """amax of an FP8 tensor via its bit patterns — the delayed-scaling
+    observation primitive. For sign-cleared fp8 encodings the bit pattern is
+    monotone in magnitude, so the max over uint8 views IS the max magnitude:
+    the reduction runs on 1-byte integers (no float upcast pass over the
+    tensor, and in the jaxpr no reduce_max over a >=16-bit float appears —
+    the property the hot-path op-count test checks). NaN payloads sort above
+    inf and therefore propagate, which the history update guards against."""
+    bits = jax.lax.bitcast_convert_type(data, jnp.uint8) & jnp.uint8(0x7F)
+    return jax.lax.bitcast_convert_type(jnp.max(bits), data.dtype) \
+        .astype(jnp.float32)
+
+
 def amax_scale(x: Array, fmt: FloatFormat, *, margin: float = 1.0) -> Array:
     """Per-tensor scale mapping amax -> fmt.max_normal / margin. The abs/max
     reduce stays in x's dtype (no f32 copy); only the scalar is f32."""
@@ -229,11 +271,15 @@ def quantize(x: Array, fmt: Union[str, FloatFormat] = E5M2, *,
         fmt = get_format(fmt)
     if not jnp.issubdtype(x.dtype, jnp.floating):
         x = x.astype(jnp.float32)
+    explicit_scale = scale is not None
     if scale is None:
         scale = amax_scale(x, fmt) if use_amax_scale \
             else jnp.asarray(1.0, jnp.float32)
     scale = jnp.asarray(scale, jnp.float32)
-    if use_amax_scale or (hasattr(scale, "shape") and scale.shape != ()):
+    if use_amax_scale or explicit_scale \
+            or (hasattr(scale, "shape") and scale.shape != ()):
+        # Reciprocal-multiply path — shared by jit-amax and delayed scaling
+        # so the two modes are bitwise identical given the same scale value.
         xs = x * (1.0 / scale).astype(x.dtype)
     else:
         # scale may be the static 1.0 default: keep the division but in

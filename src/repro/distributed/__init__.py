@@ -1,4 +1,7 @@
+from repro.distributed.amax_sync import (all_reduce_amax, host_amax_sync,
+                                         make_amax_sync)
 from repro.distributed.sharding import (batch_specs, param_specs,
                                         state_specs, zero1_specs)
 
-__all__ = ["batch_specs", "param_specs", "state_specs", "zero1_specs"]
+__all__ = ["batch_specs", "param_specs", "state_specs", "zero1_specs",
+           "all_reduce_amax", "host_amax_sync", "make_amax_sync"]

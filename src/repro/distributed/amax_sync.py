@@ -1,0 +1,53 @@
+"""Cross-replica amax synchronization for delayed scaling.
+
+Under data parallelism every replica observes amaxes from its own shard of
+the batch; scales must stay identical across replicas or the quantized
+networks diverge (and checkpointed ScaleStates become replica-dependent).
+The sync is ONE fused element-wise pmax over the dense (n_sites,)
+observation vector per step — not one collective per site — inserted by
+DelayedScaling.update(..., sync=make_amax_sync(axis)).
+
+Two flavors:
+ * make_amax_sync(axis_name)  — inside pmap/shard_map: lax.pmax over the
+   named axis (compiles to a single small all-reduce).
+ * host_amax_sync             — outside any mapped axis (jit-of-sharded or
+   multi-controller): element-wise max across processes via
+   multihost_utils.process_allgather; degrades to identity on one process.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def all_reduce_amax(obs: Array,
+                    axis_name: Union[str, Sequence[str]]) -> Array:
+    """Element-wise max of the observation vector over mapped axes."""
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    for name in names:
+        obs = jax.lax.pmax(obs, name)
+    return obs
+
+
+def make_amax_sync(axis_name: Optional[Union[str, Sequence[str]]]
+                   ) -> Optional[Callable[[Array], Array]]:
+    """Sync hook for DelayedScaling.update. None axis -> no sync (single
+    replica / scales already consistent by construction)."""
+    if axis_name is None:
+        return None
+    return functools.partial(all_reduce_amax, axis_name=axis_name)
+
+
+def host_amax_sync(obs: Array) -> Array:
+    """Process-level max for multi-controller runs (no mapped axis needed).
+    Identity on a single process."""
+    if jax.process_count() <= 1:
+        return obs
+    from jax.experimental import multihost_utils
+    gathered = multihost_utils.process_allgather(obs)
+    return jnp.max(gathered, axis=0)

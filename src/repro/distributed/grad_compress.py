@@ -47,7 +47,10 @@ def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
     Returns (mean, dequantized_local_contribution) — the caller computes the
     error-feedback residual as y - dequantized_local_contribution.
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size is newer-JAX; psum of a python 1 is the classic
+    # spelling and constant-folds to a static int under shard_map/pmap.
+    n = jax.lax.axis_size(axis_name) \
+        if hasattr(jax.lax, "axis_size") else jax.lax.psum(1, axis_name)
     scale = jax.lax.pmax(_amax(y), axis_name) / E5M2.max_normal
     scale = jnp.maximum(scale, 1e-30)
     q = quantize_rne(y / scale, E5M2, saturate=True)        # local fp8

@@ -149,6 +149,18 @@ def replicated(tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda _: P(), tree)
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """shard_map across JAX versions (jax.shard_map + check_vma in newer
+    releases, jax.experimental.shard_map + check_rep in older ones)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
 # ---------------------------------------------------------------------------
 # activation sharding constraints (logical-axis style, divisibility-checked)
 # ---------------------------------------------------------------------------
@@ -161,7 +173,20 @@ def constrain(x, *logical_spec):
     axes do not divide the corresponding dim degrades to None. No-op outside
     a mesh context — models stay runnable on a single CPU device.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    # jax.sharding.get_abstract_mesh only exists in newer JAX; older versions
+    # install the ambient mesh via `with mesh:` and expose it through the
+    # thread-resources env. Fall back to "no mesh" (constraints become a
+    # no-op and the model stays runnable on a single device).
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_mesh is not None:
+        mesh = get_mesh()
+    else:
+        try:
+            from jax._src.mesh import thread_resources
+            pm = thread_resources.env.physical_mesh
+            mesh = None if pm.empty else pm
+        except Exception:
+            mesh = None
     if mesh is None or not mesh.axis_names:
         return x
     if not isinstance(x, jax.core.Tracer):

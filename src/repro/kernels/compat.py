@@ -1,0 +1,7 @@
+"""JAX-version compat shared by the Pallas kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# Renamed across JAX versions (TPUCompilerParams -> CompilerParams);
+# accept both so the kernels run on either API generation.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantize import sr_e5m2_from_bits
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 DEFAULT_BM = 256
 DEFAULT_BK = 512
@@ -61,30 +62,73 @@ def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
                                     rounding=rounding, saturate=saturate)
 
 
+def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
+               rounding: str, saturate: bool, n_k: int):
+    """_body plus a per-tile amax epilogue output for delayed scaling: the
+    observed amax of the quantized tile is computed from the f32 values
+    while they are STILL IN VMEM — the observation costs no extra pass over
+    HBM (the alternative, a separate amax op, re-reads the whole output)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.bfloat16)
+    b = b_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        inv = 1.0 / scale_ref[0]
+        q = _quantize_tile(acc_ref[...], rand_ref[...], inv,
+                           rounding=rounding, saturate=saturate)
+        o_ref[...] = q
+        # amax of the *quantized* values, de-scaled back to real units —
+        # exactly what ScaleState history records.
+        amax_ref[0, 0] = jnp.max(jnp.abs(q.astype(jnp.float32))) \
+            * scale_ref[0]
+
+
 def fused_quant_matmul_kernel(a, b, rand8, scale, *,
                               bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN,
                               rounding: str = "sr", saturate: bool = True,
+                              with_amax: bool = False,
                               interpret: bool = False):
     """a: (M,K) fp8, b: (K,N) fp8, rand8: (M,N) u8, scale: (1,) f32
-    -> (M,N) e5m2 quantized output (value semantics: Q((a@b)/scale))."""
+    -> (M,N) e5m2 quantized output (value semantics: Q((a@b)/scale)).
+    with_amax=True additionally returns a (grid_m, grid_n) f32 array of
+    per-tile observed amaxes (reduce with jnp.max for the scalar)."""
     m, k = a.shape
     _, n = b.shape
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
-    return pl.pallas_call(
-        functools.partial(_body, rounding=rounding, saturate=saturate,
-                          n_k=grid[2]),
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+    ]
+    common = dict(
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        in_specs=in_specs,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )
+    if not with_amax:
+        return pl.pallas_call(
+            functools.partial(_body, rounding=rounding, saturate=saturate,
+                              n_k=grid[2]),
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+            **common,
+        )(a, b, rand8, scale)
+    return pl.pallas_call(
+        functools.partial(_body_amax, rounding=rounding, saturate=saturate,
+                          n_k=grid[2]),
+        out_specs=(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+                   jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32)),
+        **common,
     )(a, b, rand8, scale)

@@ -18,12 +18,18 @@ def _pad_to(x, mult0, mult1):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "rounding",
-                                             "saturate", "interpret"))
+                                             "saturate", "with_amax",
+                                             "interpret"))
 def fused_quant_matmul(a, b, key, scale=None, *,
                        bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
                        rounding: str = "sr", saturate: bool = True,
+                       with_amax: bool = False,
                        interpret: bool = False):
-    """Q((a @ b) / scale) -> e5m2, with the Q node fused into the epilogue."""
+    """Q((a @ b) / scale) -> e5m2, with the Q node fused into the epilogue.
+
+    with_amax=True returns (out, amax): the observed amax of the quantized
+    output (delayed-scaling observation), computed in the epilogue while the
+    tile is still in VMEM — no extra pass over HBM."""
     m, n = a.shape[0], b.shape[1]
     if scale is None:
         scale = jnp.ones((1,), jnp.float32)
@@ -39,5 +45,9 @@ def fused_quant_matmul(a, b, key, scale=None, *,
     out = _k.fused_quant_matmul_kernel(ap, bp, rand8, scale,
                                        bm=bm_, bk=bk_, bn=bn_,
                                        rounding=rounding, saturate=saturate,
+                                       with_amax=with_amax,
                                        interpret=interpret)
+    if with_amax:
+        out, tile_amax = out
+        return out[:m, :n], jnp.max(tile_amax)
     return out[:m, :n]

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantize import sr_e5m2_from_bits
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 # Block shape: 8x128 VPU lanes; 512x1024 f32 = 2 MiB in + 0.5 MiB out per
 # block — comfortably inside a 16 MiB VMEM with double buffering.
@@ -71,7 +72,7 @@ def sr_quantize_kernel(x, rand8, scale, *, block=DEFAULT_BLOCK,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(x, rand8, scale)
 
@@ -92,6 +93,6 @@ def sr_quantize_kernel_onchip(x, seed, scale, *, block=DEFAULT_BLOCK,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(seed, x, scale)

@@ -27,7 +27,8 @@ from pathlib import Path
 
 import jax
 
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (enter_mesh, jit_shardings,
+                               make_production_mesh)
 from repro.launch.specs import GRID_ARCHS, SHAPES, build_cell, cell_supported
 
 COLLECTIVE_RE = re.compile(
@@ -96,14 +97,14 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
         unroll = True
         rec["unroll"] = True
     try:
-        with jax.set_mesh(mesh):
+        with enter_mesh(mesh):
             cell = build_cell(arch, shape, mesh, unroll_layers=unroll,
                               overrides=overrides)
             rec["meta"] = cell["meta"]
             lowered = jax.jit(
                 cell["fn"],
-                in_shardings=cell["in_shardings"],
-                out_shardings=cell["out_shardings"],
+                in_shardings=jit_shardings(mesh, cell["in_shardings"]),
+                out_shardings=jit_shardings(mesh, cell["out_shardings"]),
                 donate_argnums=cell.get("donate_argnums", ()),
             ).lower(*cell["args"])
             rec["lower_s"] = round(time.time() - t0, 2)

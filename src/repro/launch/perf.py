@@ -19,7 +19,8 @@ from pathlib import Path
 import jax
 
 from repro.launch.dryrun import parse_collectives
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (enter_mesh, jit_shardings,
+                               make_production_mesh)
 from repro.launch.specs import build_cell
 from repro.roofline.analysis import analyze_record
 
@@ -32,13 +33,14 @@ def run_variant(arch: str, shape: str, variant: str, overrides: dict, *,
                n_devices=mesh.devices.size, status="pending")
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with enter_mesh(mesh):
             cell = build_cell(arch, shape, mesh, unroll_layers=unroll,
                               overrides=overrides)
             rec["meta"] = cell["meta"]
             compiled = jax.jit(
-                cell["fn"], in_shardings=cell["in_shardings"],
-                out_shardings=cell["out_shardings"],
+                cell["fn"],
+                in_shardings=jit_shardings(mesh, cell["in_shardings"]),
+                out_shardings=jit_shardings(mesh, cell["out_shardings"]),
                 donate_argnums=cell.get("donate_argnums", ()),
             ).lower(*cell["args"]).compile()
             ma = compiled.memory_analysis()

@@ -27,6 +27,7 @@ from repro.core.qlinear import qeinsum
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init, subkey
+from repro.scaling import context as scale_ctx
 
 Array = jax.Array
 
@@ -77,15 +78,31 @@ def _store_dtype(cache_layer):
     return cache_layer["k"].dtype
 
 
-def _to_cache_dtype(x: Array, dtype) -> Array:
+def _to_cache_dtype(x: Array, dtype, scale: float = 1.0) -> Array:
     if dtype in (jnp.float8_e5m2, jnp.float8_e4m3fn):
         # RNE, saturating — inference-side quantization (no SR at eval).
-        return jnp.clip(x.astype(jnp.float32), -57344.0, 57344.0).astype(dtype)
+        # `scale` is a calibrated frozen per-site scale (python float, burned
+        # in as a constant) mapping the KV range onto the FP8 grid.
+        lim = 57344.0 if dtype == jnp.float8_e5m2 else 448.0
+        xs = x.astype(jnp.float32) * (1.0 / scale)
+        return jnp.clip(xs, -lim, lim).astype(dtype)
     return x.astype(dtype)
 
 
-def _from_cache_dtype(x: Array, dtype=jnp.bfloat16) -> Array:
+def _from_cache_dtype(x: Array, dtype=jnp.bfloat16, scale: float = 1.0) -> Array:
+    if scale != 1.0:
+        return (x.astype(jnp.float32) * scale).astype(dtype)
     return x.astype(dtype)
+
+
+def _kv_scales(cfg: ModelConfig) -> Tuple[float, float]:
+    """Frozen per-site KV-cache scales from the active scaling context
+    (1.0 outside frozen serving)."""
+    ctx = scale_ctx.current()
+    if ctx is None or cfg.policy.kv_cache_format is None:
+        return 1.0, 1.0
+    return (ctx.frozen_scale(ctx.site_key("kv/k") + "#A"),
+            ctx.frozen_scale(ctx.site_key("kv/v") + "#A"))
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +113,7 @@ def _qk_scores(q: Array, k: Array, qcfg: QuantConfig, qkey, op: int) -> Array:
     """q: (B,H,Q,dh) x k: (B,H,K,dh) -> (B,H,Q,K) f32."""
     if qcfg.enabled and qcfg.quantize_attention:
         s = qeinsum("bhqd,bhkd->bhqk", q, k, key=subkey(qkey, op), cfg=qcfg,
-                    classes=("act", "act"))
+                    classes=("act", "act"), site="qk")
     else:
         s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.bfloat16),
                        k.astype(jnp.bfloat16),
@@ -107,7 +124,8 @@ def _qk_scores(q: Array, k: Array, qcfg: QuantConfig, qkey, op: int) -> Array:
 def _pv(probs: Array, v: Array, qcfg: QuantConfig, qkey, op: int) -> Array:
     if qcfg.enabled and qcfg.quantize_attention:
         return qeinsum("bhqk,bhkd->bhqd", probs.astype(jnp.bfloat16), v,
-                       key=subkey(qkey, op), cfg=qcfg, classes=("act", "act"))
+                       key=subkey(qkey, op), cfg=qcfg, classes=("act", "act"),
+                       site="pv")
     return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(jnp.bfloat16),
                       v.astype(jnp.bfloat16),
                       preferred_element_type=jnp.float32).astype(jnp.bfloat16)
@@ -144,7 +162,9 @@ def chunked_causal_attention(q, k, v, *, chunk: int, scale: float,
     n_chunks = max(1, (s + chunk - 1) // chunk)
 
     def one_chunk(qc, kc, vc, mask):
-        return _sdpa(qc, kc, vc, mask, scale, qcfg, qkey, 10)
+        o = _sdpa(qc, kc, vc, mask, scale, qcfg, qkey, 10)
+        # Drain amax observations inside the remat trace; re-recorded below.
+        return o, scale_ctx.drain_raw()
 
     if remat:
         one_chunk = jax.checkpoint(one_chunk)
@@ -161,7 +181,9 @@ def chunked_causal_attention(q, k, v, *, chunk: int, scale: float,
         mask = kpos <= qpos
         if window:
             mask &= kpos > qpos - window
-        outs.append(one_chunk(qc, kc, vc, mask[None, None]))
+        o, obs = one_chunk(qc, kc, vc, mask[None, None])
+        scale_ctx.re_record(obs)
+        outs.append(o)
     return jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
 
 
@@ -193,10 +215,13 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     scale = 1.0 / (dh ** 0.5)
 
-    q = qeinsum("bsd,dn->bsn", x, params["wq"], key=subkey(qkey, 0), cfg=qcfg)
+    q = qeinsum("bsd,dn->bsn", x, params["wq"], key=subkey(qkey, 0), cfg=qcfg,
+                site="wq")
     src = kv_x if kv_x is not None else x
-    k = qeinsum("bsd,dn->bsn", src, params["wk"], key=subkey(qkey, 1), cfg=qcfg)
-    v = qeinsum("bsd,dn->bsn", src, params["wv"], key=subkey(qkey, 2), cfg=qcfg)
+    k = qeinsum("bsd,dn->bsn", src, params["wk"], key=subkey(qkey, 1),
+                cfg=qcfg, site="wk")
+    v = qeinsum("bsd,dn->bsn", src, params["wv"], key=subkey(qkey, 2),
+                cfg=qcfg, site="wv")
     if cfg.qkv_bias:
         q = q + params["bq"].astype(q.dtype)
         k = k + params["bk"].astype(k.dtype)
@@ -212,6 +237,19 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             k = apply_rope(k, positions, cfg.rope_theta)
         else:
             k = apply_rope(k, positions, cfg.rope_theta)  # single position
+
+    # KV-cache range observation (calibration only — this full-tensor reduce
+    # is deliberately kept out of the training hot path) and frozen-scale
+    # lookup for calibrated FP8 KV serving.
+    ctx = scale_ctx.current()
+    if ctx is not None and cfg.policy.kv_cache_format is not None:
+        kk, vk = ctx.site_key("kv/k") + "#A", ctx.site_key("kv/v") + "#A"
+        ctx.register(kk)
+        ctx.register(vk)
+        if ctx.mode == "calibrate":
+            ctx.record(kk, jnp.max(jnp.abs(k.astype(jnp.float32))))
+            ctx.record(vk, jnp.max(jnp.abs(v.astype(jnp.float32))))
+    k_scale, v_scale = _kv_scales(cfg)
 
     # (B, S, H, dh) -> (B, H, S, dh); shard heads over 'model' (falls back to
     # replication when H does not divide the axis, e.g. qwen2's 12 heads).
@@ -238,13 +276,17 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 mask = (qpos[None, :, None] >= qpos[None, None, :])[:, None]
                 o = _sdpa(qt, kt, vt, mask, scale, qcfg, qkey, 30)
         if mode == "prefill" and cache_layer is not None:
-            new_cache = _prefill_cache(cache_layer, k, v, positions)
+            new_cache = _prefill_cache(cache_layer, k, v, positions,
+                                       k_scale=k_scale, v_scale=v_scale)
     elif mode == "decode":
         assert cache_layer is not None
-        new_cache = _append_cache(cache_layer, k, v, positions)
+        new_cache = _append_cache(cache_layer, k, v, positions,
+                                  k_scale=k_scale, v_scale=v_scale)
         dt = jnp.bfloat16
-        kt = _from_cache_dtype(new_cache["k"], dt).transpose(0, 2, 1, 3)
-        vt = _from_cache_dtype(new_cache["v"], dt).transpose(0, 2, 1, 3)
+        kt = _from_cache_dtype(new_cache["k"], dt,
+                               k_scale).transpose(0, 2, 1, 3)
+        vt = _from_cache_dtype(new_cache["v"], dt,
+                               v_scale).transpose(0, 2, 1, 3)
         kt = constrain(_repeat_kv(kt, h // hkv), "dp", "model", None, None)
         vt = constrain(_repeat_kv(vt, h // hkv), "dp", "model", None, None)
         # Validity: slot filled and within window (if any).
@@ -258,7 +300,8 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
         raise ValueError(f"unknown attention mode {mode!r}")
 
     o = o.transpose(0, 2, 1, 3).reshape(b, sq, h * dh)
-    y = qeinsum("bsn,nd->bsd", o, params["wo"], key=subkey(qkey, 3), cfg=qcfg)
+    y = qeinsum("bsn,nd->bsd", o, params["wo"], key=subkey(qkey, 3), cfg=qcfg,
+                site="wo")
     return y, new_cache
 
 
@@ -266,14 +309,15 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
 # cache plumbing
 # ---------------------------------------------------------------------------
 
-def _prefill_cache(cache_layer, k, v, positions):
+def _prefill_cache(cache_layer, k, v, positions, *, k_scale: float = 1.0,
+                   v_scale: float = 1.0):
     """Write the first S entries (or last `window` for ring caches)."""
     dtype = _store_dtype(cache_layer)
     cap = cache_layer["k"].shape[1]
     s = k.shape[1]
     if s <= cap:
-        kq = _to_cache_dtype(k, dtype)
-        vq = _to_cache_dtype(v, dtype)
+        kq = _to_cache_dtype(k, dtype, k_scale)
+        vq = _to_cache_dtype(v, dtype, v_scale)
         new_k = jax.lax.dynamic_update_slice(
             cache_layer["k"], kq, (0, 0, 0, 0))
         new_v = jax.lax.dynamic_update_slice(
@@ -283,8 +327,8 @@ def _prefill_cache(cache_layer, k, v, positions):
                                             (0, 0))
     else:
         # Ring cache smaller than the prompt: keep the last `cap` tokens.
-        kq = _to_cache_dtype(k[:, -cap:], dtype)
-        vq = _to_cache_dtype(v[:, -cap:], dtype)
+        kq = _to_cache_dtype(k[:, -cap:], dtype, k_scale)
+        vq = _to_cache_dtype(v[:, -cap:], dtype, v_scale)
         new_k, new_v = kq, vq
         slot = positions[:, -cap:].astype(jnp.int32)
     length = jnp.minimum(
@@ -292,14 +336,15 @@ def _prefill_cache(cache_layer, k, v, positions):
     return {"k": new_k, "v": new_v, "slot_pos": slot, "length": length}
 
 
-def _append_cache(cache_layer, k, v, positions):
+def _append_cache(cache_layer, k, v, positions, *, k_scale: float = 1.0,
+                  v_scale: float = 1.0):
     """Insert one token at position pos (ring index pos % capacity)."""
     dtype = _store_dtype(cache_layer)
     cap = cache_layer["k"].shape[1]
     pos = positions[:, -1]                      # (B,)
     idx = pos % cap                             # ring slot per batch element
-    kq = _to_cache_dtype(k, dtype)              # (B, 1, Hkv, dh)
-    vq = _to_cache_dtype(v, dtype)
+    kq = _to_cache_dtype(k, dtype, k_scale)     # (B, 1, Hkv, dh)
+    vq = _to_cache_dtype(v, dtype, v_scale)
     b_idx = jnp.arange(k.shape[0])
     new_k = cache_layer["k"].at[b_idx, idx].set(kq[:, 0])
     new_v = cache_layer["v"].at[b_idx, idx].set(vq[:, 0])

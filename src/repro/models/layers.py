@@ -126,15 +126,16 @@ def mlp(params, x: Array, *, act: str, qcfg: QuantConfig,
         qkey: Optional[Array]) -> Array:
     """(Gated) MLP with all three GEMMs in FP8."""
     a = activation(act)
-    up = qeinsum("bsd,df->bsf", x, params["up"], key=subkey(qkey, 1), cfg=qcfg)
+    up = qeinsum("bsd,df->bsf", x, params["up"], key=subkey(qkey, 1),
+                 cfg=qcfg, site="up")
     if "gate" in params:
         gate = qeinsum("bsd,df->bsf", x, params["gate"],
-                       key=subkey(qkey, 2), cfg=qcfg)
+                       key=subkey(qkey, 2), cfg=qcfg, site="gate")
         h = a(gate.astype(jnp.float32)).astype(up.dtype) * up
     else:
         h = a(up.astype(jnp.float32)).astype(up.dtype)
     return qeinsum("bsf,fd->bsd", h, params["down"],
-                   key=subkey(qkey, 3), cfg=qcfg)
+                   key=subkey(qkey, 3), cfg=qcfg, site="down")
 
 
 # ---------------------------------------------------------------------------
@@ -161,4 +162,5 @@ def logits_head(params, x: Array, *, qcfg: QuantConfig,
         w = params["head"]
     else:
         w = params["table"].T  # tied embeddings
-    return qeinsum("bsd,dv->bsv", x, w, key=subkey(qkey, 4), cfg=qcfg)
+    return qeinsum("bsd,dv->bsv", x, w, key=subkey(qkey, 4), cfg=qcfg,
+                   site="head")

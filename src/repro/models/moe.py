@@ -101,12 +101,12 @@ def moe_ffn(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
 
     # ---- expert GEMMs (FP8, per the paper) ----------------------------------
     g = qeinsum("ecd,edf->ecf", xe, params["w_gate"],
-                key=subkey(qkey, 50), cfg=qcfg)
+                key=subkey(qkey, 50), cfg=qcfg, site="w_gate")
     u = qeinsum("ecd,edf->ecf", xe, params["w_up"],
-                key=subkey(qkey, 51), cfg=qcfg)
+                key=subkey(qkey, 51), cfg=qcfg, site="w_up")
     h = (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u)
     ye = qeinsum("ecf,efd->ecd", h, params["w_down"],
-                 key=subkey(qkey, 52), cfg=qcfg)
+                 key=subkey(qkey, 52), cfg=qcfg, site="w_down")
     ye = constrain(ye, "model", None, None)
 
     # ---- combine: gather each pair's expert output, weight, segment-sum -----
@@ -170,12 +170,12 @@ def moe_ffn_per_sample(params, x: Array, *, cfg: ModelConfig,
 
     # ---- expert GEMMs (FP8, per the paper) -----------------------------------
     g = qeinsum("ebcd,edf->ebcf", xe, params["w_gate"],
-                key=subkey(qkey, 50), cfg=qcfg)
+                key=subkey(qkey, 50), cfg=qcfg, site="w_gate")
     u = qeinsum("ebcd,edf->ebcf", xe, params["w_up"],
-                key=subkey(qkey, 51), cfg=qcfg)
+                key=subkey(qkey, 51), cfg=qcfg, site="w_up")
     h = (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u)
     ye = qeinsum("ebcf,efd->ebcd", h, params["w_down"],
-                 key=subkey(qkey, 52), cfg=qcfg)
+                 key=subkey(qkey, 52), cfg=qcfg, site="w_down")
     ye = constrain(ye, "model", "dp", None, None)
 
     # ---- combine (per-sample gather + scatter-add) ----------------------------

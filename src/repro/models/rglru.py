@@ -84,17 +84,18 @@ def rglru_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 qkey, mode: str = "train",
                 state: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
     """x: (B,S,D) -> (y, new_state). state = {'h': (B,W), 'conv': (B,3,W)}."""
-    xi = qeinsum("bsd,dw->bsw", x, params["wx"], key=subkey(qkey, 60), cfg=qcfg)
+    xi = qeinsum("bsd,dw->bsw", x, params["wx"], key=subkey(qkey, 60),
+                 cfg=qcfg, site="wx")
     gate = qeinsum("bsd,dw->bsw", x, params["wg"], key=subkey(qkey, 61),
-                   cfg=qcfg)
+                   cfg=qcfg, site="wg")
     conv_state = None if state is None else state.get("conv")
     xi, new_conv = _causal_conv(xi, params["conv"], conv_state)
 
     r = jax.nn.sigmoid(qeinsum("bsw,wv->bsv", xi, params["wa"],
-                               key=subkey(qkey, 62), cfg=qcfg)
+                               key=subkey(qkey, 62), cfg=qcfg, site="wa")
                        .astype(jnp.float32))
     i = jax.nn.sigmoid(qeinsum("bsw,wv->bsv", xi, params["wi"],
-                               key=subkey(qkey, 63), cfg=qcfg)
+                               key=subkey(qkey, 63), cfg=qcfg, site="wi")
                        .astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(params["lam"]) * r    # (B,S,W) f32
     a = jnp.exp(log_a)
@@ -116,7 +117,7 @@ def rglru_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     merged = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)
                                               ).astype(x.dtype)
     y = qeinsum("bsw,wd->bsd", merged, params["wo"], key=subkey(qkey, 64),
-                cfg=qcfg)
+                cfg=qcfg, site="wo")
     return y, new_state
 
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 
 from repro.core.precision_policy import QuantConfig
 from repro.distributed.sharding import constrain
+from repro.scaling import context as scale_ctx
+from repro.scaling.context import AMAX_PREFIX
 from repro.models.attention import attention, init_attention
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_norm, embed, init_embedding, init_mlp,
@@ -83,6 +85,18 @@ def init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
     raise ValueError(kind)
 
 
+def _merge_aux(dst: Dict[str, Array], src: Dict[str, Array]):
+    """Accumulate aux entries: amax observations combine by max (they are
+    range statistics), everything else (aux losses) by sum."""
+    for k, v in src.items():
+        if k in dst:
+            dst[k] = jnp.maximum(dst[k], v) if k.startswith(AMAX_PREFIX) \
+                else dst[k] + v
+        else:
+            dst[k] = v
+    return dst
+
+
 def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
                 qcfg: QuantConfig, qkey, positions: Array, mode: str,
                 state=None, enc_out: Optional[Array] = None):
@@ -102,29 +116,33 @@ def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
                      "decode": "decode"}[mode]
         if kind == "enc_attn":
             attn_mode = "encode"
-        a, new_cache = attention(
-            p["attn"], apply_norm(p["norm1"], h, eps=cfg.norm_eps),
-            cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 100), positions=positions,
-            mode=attn_mode,
-            cache_layer=None if state is None else state.get("kv"),
-            window=window)
+        with scale_ctx.scope("attn"):
+            a, new_cache = attention(
+                p["attn"], apply_norm(p["norm1"], h, eps=cfg.norm_eps),
+                cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 100),
+                positions=positions, mode=attn_mode,
+                cache_layer=None if state is None else state.get("kv"),
+                window=window)
         h = h + a
         if "cross_attn" in p and enc_out is not None:
-            ca, _ = attention(
-                p["cross_attn"], apply_norm(p["cross_norm"], h,
-                                            eps=cfg.norm_eps),
-                cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 101),
-                positions=positions, mode="cross", kv_x=enc_out)
+            with scale_ctx.scope("cross_attn"):
+                ca, _ = attention(
+                    p["cross_attn"], apply_norm(p["cross_norm"], h,
+                                                eps=cfg.norm_eps),
+                    cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 101),
+                    positions=positions, mode="cross", kv_x=enc_out)
             h = h + ca
         if "moe" in p:
-            f, moe_aux = moe_ffn(p["moe"],
-                                 apply_norm(p["norm2"], h, eps=cfg.norm_eps),
-                                 cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 102))
+            with scale_ctx.scope("moe"):
+                f, moe_aux = moe_ffn(
+                    p["moe"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                    cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 102))
             aux.update(moe_aux)
             h = h + f
         elif "mlp" in p:
-            f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
-                    act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 102))
+            with scale_ctx.scope("mlp"):
+                f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                        act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 102))
             h = h + f
         if new_cache is not None:
             new_state = {"kv": new_cache}
@@ -136,8 +154,9 @@ def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
                              state=None if state is None else state.get("rec"))
         h = h + r
         if "mlp" in p:
-            f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
-                    act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 104))
+            with scale_ctx.scope("mlp"):
+                f = mlp(p["mlp"], apply_norm(p["norm2"], h, eps=cfg.norm_eps),
+                        act=cfg.act, qcfg=qcfg, qkey=subkey(qkey, 104))
             h = h + f
         if rec is not None:
             new_state = {"rec": rec}
@@ -161,6 +180,10 @@ def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
             new_state = {"rec": rec}
     else:
         raise ValueError(kind)
+    # Drain delayed-scaling amax observations INTO this layer's aux: when the
+    # stack is scanned, this is the point where the traced observations exit
+    # the scan body functionally (via the aux ys).
+    aux = _merge_aux(aux, scale_ctx.drain_aux())
     return h, new_state, aux
 
 
@@ -235,8 +258,7 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     aux_total: Dict[str, Array] = {}
 
     def add_aux(aux):
-        for k, v in aux.items():
-            aux_total[k] = aux_total.get(k, 0.0) + v
+        _merge_aux(aux_total, aux)
 
     new_states: Dict[str, Any] = {}
     scanned = cfg.scan_layers and n_groups > 1
@@ -257,13 +279,16 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             for p, kind in enumerate(pat):
                 lkey = None if qkey is None else jax.random.fold_in(
                     qkey, key_base + gi * len(pat) + p)
-                hh, ns, aux = apply_layer(
-                    gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg, qkey=lkey,
-                    positions=positions, mode=mode, state=gs[p],
-                    enc_out=enc_out)
+                # Scanned groups share one scaling site per stack position:
+                # every scan iteration reads the same per-site scale and the
+                # observations are max-combined over the scan axis below.
+                with scale_ctx.scope(f"stack_{p}"):
+                    hh, ns, aux = apply_layer(
+                        gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg, qkey=lkey,
+                        positions=positions, mode=mode, state=gs[p],
+                        enc_out=enc_out)
                 outs.append(ns)
-                for k, v in aux.items():
-                    all_aux[k] = all_aux.get(k, 0.0) + v
+                _merge_aux(all_aux, aux)
             if cfg.sequence_parallel and mode in ("train", "prefill"):
                 # Keep the scan carry (= the saved remat residual)
                 # sequence-sharded; applied at body END so the stored value
@@ -277,10 +302,19 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             else body
         xs = (stacked_params,) if states is None \
             else (stacked_params, stacked_states)
+        # Token-use accounting: the body is traced once but runs n_groups
+        # times, so E/G token cotangents of sites inside it accumulate over
+        # the whole group — record the multiplicity for normalization.
+        use_snap = scale_ctx.token_use_snapshot()
         (h, _), (out_states, aux_stack) = jax.lax.scan(body_fn, (h, 0), xs)
+        scale_ctx.amplify_token_uses(use_snap, n_groups)
         for k, v in aux_stack.items():
-            if k != "_":
-                aux_total[k] = aux_total.get(k, 0.0) + v.sum()
+            if k == "_":
+                continue
+            # Reduce over the scan (layer-group) axis: amax observations by
+            # max (shared site across the group), aux losses by sum.
+            red = v.max() if k.startswith(AMAX_PREFIX) else v.sum()
+            add_aux({k: red})
         if states is not None:
             for p in range(len(pat)):
                 new_states[f"stack_{p}"] = out_states[p]
@@ -290,10 +324,11 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             lkey = None if qkey is None else jax.random.fold_in(
                 qkey, key_base + i)
             st = None if states is None else states[f"layer_{i}"]
-            h, ns, aux = apply_layer(params[f"layer_{i}"], h, kind=kind,
-                                     cfg=cfg, qcfg=qcfg, qkey=lkey,
-                                     positions=positions, mode=mode,
-                                     state=st, enc_out=enc_out)
+            with scale_ctx.scope(f"layer_{i}"):
+                h, ns, aux = apply_layer(params[f"layer_{i}"], h, kind=kind,
+                                         cfg=cfg, qcfg=qcfg, qkey=lkey,
+                                         positions=positions, mode=mode,
+                                         state=st, enc_out=enc_out)
             add_aux(aux)
             if states is not None and ns is not None:
                 new_states[f"layer_{i}"] = ns
@@ -304,9 +339,11 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
         lkey = None if qkey is None else jax.random.fold_in(
             qkey, key_base + base + i)
         st = None if states is None else states[f"rem_{i}"]
-        h, ns, aux = apply_layer(params[f"rem_{i}"], h, kind=kind, cfg=cfg,
-                                 qcfg=qcfg, qkey=lkey, positions=positions,
-                                 mode=mode, state=st, enc_out=enc_out)
+        with scale_ctx.scope(f"rem_{i}"):
+            h, ns, aux = apply_layer(params[f"rem_{i}"], h, kind=kind,
+                                     cfg=cfg, qcfg=qcfg, qkey=lkey,
+                                     positions=positions, mode=mode,
+                                     state=st, enc_out=enc_out)
         add_aux(aux)
         if states is not None and ns is not None:
             new_states[f"rem_{i}"] = ns
@@ -334,18 +371,22 @@ def init_lm(key, cfg: ModelConfig):
     return params
 
 
-def encode(params, enc_inputs: Array, *, cfg: ModelConfig, qkey=None) -> Array:
+def encode(params, enc_inputs: Array, *, cfg: ModelConfig, qkey=None,
+           with_aux: bool = False):
     """Encoder forward (seamless): enc_inputs are precomputed frame
-    embeddings (B, T, D) from the stub frontend."""
+    embeddings (B, T, D) from the stub frontend. with_aux=True additionally
+    returns the stack aux (amax observations for delayed scaling)."""
     qcfg = cfg.policy.quant
     b, t, _ = enc_inputs.shape
     positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
     h = enc_inputs.astype(jnp.bfloat16)
-    h, _, _ = apply_stack(params["encoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
-                          positions=positions, mode="train", states=None,
-                          n_layers=cfg.n_encoder_layers, kinds=("enc_attn",),
-                          key_base=500)
-    return apply_norm(params["enc_norm"], h, eps=cfg.norm_eps)
+    with scale_ctx.scope("encoder"):
+        h, _, aux = apply_stack(params["encoder"], h, cfg=cfg, qcfg=qcfg,
+                                qkey=qkey, positions=positions, mode="train",
+                                states=None, n_layers=cfg.n_encoder_layers,
+                                kinds=("enc_attn",), key_base=500)
+    out = apply_norm(params["enc_norm"], h, eps=cfg.norm_eps)
+    return (out, aux) if with_aux else out
 
 
 def forward(params, tokens: Array, *, cfg: ModelConfig, qkey=None,
@@ -367,10 +408,11 @@ def forward(params, tokens: Array, *, cfg: ModelConfig, qkey=None,
     b, s, _ = h.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-    h, new_states, aux = apply_stack(
-        params["decoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
-        positions=positions, mode=mode, states=states, enc_out=enc_out,
-        n_layers=cfg.n_layers)
+    with scale_ctx.scope("decoder"):
+        h, new_states, aux = apply_stack(
+            params["decoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
+            positions=positions, mode=mode, states=states, enc_out=enc_out,
+            n_layers=cfg.n_layers)
     if last_only:
         h = h[:, -1:]
     h = apply_norm(params["final_norm"], h, eps=cfg.norm_eps)
@@ -390,15 +432,19 @@ def _chunked_ce(params, h, labels, mask, *, cfg, head_cfg, qkey, chunk: int):
             lf = jnp.where(col < cfg.vocab_size, lf, -1e30)
         logz = jax.nn.logsumexp(lf, axis=-1)
         gold = jnp.take_along_axis(lf, lc[..., None], axis=-1)[..., 0]
-        return jnp.sum((logz - gold) * mc)
+        # Drain inside the remat'd chunk so any head amax observations exit
+        # the checkpoint trace functionally (re-recorded by the caller).
+        return jnp.sum((logz - gold) * mc), scale_ctx.drain_raw()
 
     chunk_loss = jax.checkpoint(chunk_loss)
     s = h.shape[1]
     total = jnp.asarray(0.0, jnp.float32)
     for c0 in range(0, s, chunk):
         c1 = min(c0 + chunk, s)
-        total = total + chunk_loss(h[:, c0:c1], labels[:, c0:c1],
-                                   mask[:, c0:c1])
+        part, obs = chunk_loss(h[:, c0:c1], labels[:, c0:c1],
+                               mask[:, c0:c1])
+        scale_ctx.re_record(obs)
+        total = total + part
     return total
 
 
@@ -410,8 +456,10 @@ def lm_loss(params, batch: Dict[str, Array], *, cfg: ModelConfig, qkey=None,
     qcfg = cfg.policy.quant
     head_cfg = cfg.policy.quant_for_layer(is_head=True)
     enc_out = None
+    enc_aux: Dict[str, Array] = {}
     if cfg.is_encoder_decoder:
-        enc_out = encode(params, batch["enc_inputs"], cfg=cfg, qkey=qkey)
+        enc_out, enc_aux = encode(params, batch["enc_inputs"], cfg=cfg,
+                                  qkey=qkey, with_aux=True)
     tokens = batch["tokens"]
     labels = batch["labels"]
     mask = batch.get("loss_mask")
@@ -427,10 +475,11 @@ def lm_loss(params, batch: Dict[str, Array], *, cfg: ModelConfig, qkey=None,
         mask = jnp.pad(mask, ((0, 0), (extra.shape[1], 0)))
     b, s, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-    h, _, aux = apply_stack(params["decoder"], h, cfg=cfg, qcfg=qcfg,
-                            qkey=qkey, positions=positions, mode="train",
-                            states=None, enc_out=enc_out,
-                            n_layers=cfg.n_layers)
+    with scale_ctx.scope("decoder"):
+        h, _, aux = apply_stack(params["decoder"], h, cfg=cfg, qcfg=qcfg,
+                                qkey=qkey, positions=positions, mode="train",
+                                states=None, enc_out=enc_out,
+                                n_layers=cfg.n_layers)
     h = apply_norm(params["final_norm"], h, eps=cfg.norm_eps)
 
     denom = jnp.maximum(mask.sum(), 1.0)
@@ -438,8 +487,11 @@ def lm_loss(params, batch: Dict[str, Array], *, cfg: ModelConfig, qkey=None,
                           head_cfg=head_cfg, qkey=qkey,
                           chunk=min(s, cfg.attn_chunk_size))
     loss = nll_sum / denom
-    for v in aux.values():
-        loss = loss + v
+    aux = _merge_aux(aux, enc_aux)
+    aux = _merge_aux(aux, scale_ctx.drain_aux())   # head + any stragglers
+    for k, v in aux.items():
+        if not k.startswith(AMAX_PREFIX):   # amax entries are observations,
+            loss = loss + v                 # not aux losses
     metrics = {"nll": nll_sum / denom, **aux}
     if loss_scale is not None:
         loss = loss * loss_scale.astype(loss.dtype)

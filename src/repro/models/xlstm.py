@@ -149,17 +149,20 @@ def mlstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     dh = inner // h_heads
 
     up = qeinsum("bsd,di->bsi", x, params["w_up"], key=subkey(qkey, 70),
-                 cfg=qcfg)
+                 cfg=qcfg, site="w_up")
     gate = qeinsum("bsd,di->bsi", x, params["w_gate"], key=subkey(qkey, 71),
-                   cfg=qcfg)
+                   cfg=qcfg, site="w_gate")
     q = qeinsum("bsi,ij->bsj", up, params["wq"], key=subkey(qkey, 72),
-                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+                cfg=qcfg, site="wq") \
+        .reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
     k = qeinsum("bsi,ij->bsj", up, params["wk"], key=subkey(qkey, 73),
-                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+                cfg=qcfg, site="wk") \
+        .reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
     v = qeinsum("bsi,ij->bsj", up, params["wv"], key=subkey(qkey, 74),
-                cfg=qcfg).reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
+                cfg=qcfg, site="wv") \
+        .reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3)
     gates = qeinsum("bsi,ig->bsg", up, params["w_if"], key=subkey(qkey, 75),
-                    cfg=qcfg).astype(jnp.float32)       # (B,S,2H)
+                    cfg=qcfg, site="w_if").astype(jnp.float32)       # (B,S,2H)
     i_raw = gates[..., :h_heads].transpose(0, 2, 1)     # (B,H,S)
     f_raw = gates[..., h_heads:].transpose(0, 2, 1) + 1.0  # forget bias init
 
@@ -180,7 +183,7 @@ def mlstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     h = apply_norm(params["norm"], h, eps=cfg.norm_eps)
     h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
     return qeinsum("bsi,id->bsd", h, params["w_down"], key=subkey(qkey, 76),
-                   cfg=qcfg), new_state
+                   cfg=qcfg, site="w_down"), new_state
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int):
@@ -249,7 +252,7 @@ def slstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 state: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
     b, s, d = x.shape
     z_in = qeinsum("bsd,dz->bsz", x, params["w_zifo"], key=subkey(qkey, 80),
-                   cfg=qcfg)
+                   cfg=qcfg, site="w_zifo")
     if state is None:
         zeros = jnp.zeros((b, d), jnp.float32)
         carry0 = (zeros, zeros, zeros, zeros)
@@ -261,12 +264,12 @@ def slstm_block(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
 
     y = apply_norm(params["norm"], hs.astype(x.dtype), eps=cfg.norm_eps)
     up = qeinsum("bsd,df->bsf", y, params["w_up"], key=subkey(qkey, 81),
-                 cfg=qcfg)
+                 cfg=qcfg, site="ff_up")
     gate = qeinsum("bsd,df->bsf", y, params["w_gate"], key=subkey(qkey, 82),
-                   cfg=qcfg)
+                   cfg=qcfg, site="ff_gate")
     hff = jax.nn.gelu(gate.astype(jnp.float32)).astype(up.dtype) * up
     return qeinsum("bsf,fd->bsd", hff, params["w_down"], key=subkey(qkey, 83),
-                   cfg=qcfg), new_state
+                   cfg=qcfg, site="ff_down"), new_state
 
 
 def init_slstm_state(cfg: ModelConfig, batch: int):

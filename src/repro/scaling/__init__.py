@@ -1,0 +1,25 @@
+"""Delayed per-tensor scaling subsystem.
+
+Scales for FP8 quantization derived from a *history* of amax observations
+(per site = layer x tensor-class W/A/E/G) instead of the current tensor:
+no full-tensor amax reduction in the quantize hot path, cross-replica
+synchronization via a single fused pmax, and a calibrate->freeze path for
+deterministic quantized serving. See scaling.state and scaling.context.
+"""
+from repro.scaling.calibrate import (calibrate, discover_lm_sites,
+                                     discover_sites, freeze, load_frozen,
+                                     save_frozen)
+from repro.scaling.context import (activate, collect_context,
+                                   discover_context, frozen_context, scope)
+from repro.scaling.state import (DelayedScaling, ScaleState, ScalingConfig,
+                                 SiteRegistry, amax_from_history,
+                                 split_observations)
+
+__all__ = [
+    "DelayedScaling", "ScaleState", "ScalingConfig", "SiteRegistry",
+    "amax_from_history", "split_observations",
+    "calibrate", "discover_sites", "discover_lm_sites", "freeze",
+    "save_frozen", "load_frozen",
+    "activate", "collect_context", "discover_context", "frozen_context",
+    "scope",
+]

@@ -1,0 +1,138 @@
+"""Calibration + freeze: from amax history to deterministic FP8 serving.
+
+The serving path must be deterministic across batches — a just-in-time amax
+scale changes with every batch's content, so two identical requests batched
+with different neighbors would decode differently. The calibration flow
+removes that data dependence:
+
+ 1. `discover_sites` abstractly traces the model once and registers every
+    quantization site (including the FP8 KV cache sites).
+ 2. `calibrate` runs N forward batches under a calibration context: scales
+    start at 1.0 and converge as the amax history fills (exactly the
+    training-side delayed-scaling loop, forward-only, RNE/deterministic).
+ 3. `freeze` emits {site_key: float scale} — plain python floats that
+    serve/engine.py burns into the jitted prefill/decode as constants.
+
+Frozen scales round-trip through checkpoint/ (`save_frozen`/`load_frozen`
+write a json sidecar; ScaleState itself is a pytree and checkpoints through
+the ordinary Checkpointer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.scaling import context as scale_ctx
+from repro.scaling.state import (DelayedScaling, ScaleState, ScalingConfig,
+                                 SiteRegistry)
+
+FROZEN_SCALES_FILE = "frozen_scales.json"
+
+
+def _delayed_eval_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Deterministic (RNE, saturating) config with delayed scaling on."""
+    quant = cfg.policy.quant.eval_mode()
+    quant = dataclasses.replace(quant, scaling="delayed")
+    pol = dataclasses.replace(cfg.policy, quant=quant)
+    return cfg.replace(policy=pol)
+
+
+def discover_sites(fn: Callable, *args) -> SiteRegistry:
+    """Abstractly trace `fn(*args)` (jax.eval_shape — no FLOPs) with a
+    discovery context; returns the registry of every site it quantizes."""
+    ctx = scale_ctx.discover_context()
+    with scale_ctx.activate(ctx):
+        jax.eval_shape(fn, *args)
+    return SiteRegistry(ctx.discovered, ctx.discovered_token_sites)
+
+
+def discover_lm_sites(cfg: ModelConfig, params, batch) -> SiteRegistry:
+    """Site registry for an LM: traces the training loss (covers W/A/E/G
+    sites) with the delayed config."""
+    from repro.models.transformer import lm_loss
+    dcfg = _delayed_quant_model(cfg)
+
+    def fn(p, b):
+        key = jax.random.PRNGKey(0)
+        return lm_loss(p, b, cfg=dcfg, qkey=key)
+
+    return discover_sites(fn, params, batch)
+
+
+def _delayed_quant_model(cfg: ModelConfig) -> ModelConfig:
+    quant = dataclasses.replace(cfg.policy.quant, scaling="delayed")
+    pol = dataclasses.replace(cfg.policy, quant=quant)
+    return cfg.replace(policy=pol)
+
+
+def calibrate(params, cfg: ModelConfig, batches: Iterable, *,
+              scaling_cfg: ScalingConfig = ScalingConfig(),
+              registry: Optional[SiteRegistry] = None,
+              sync: Optional[Callable] = None
+              ) -> Tuple[DelayedScaling, ScaleState]:
+    """Populate amax history from N forward batches (deterministic eval
+    path). batches: iterable of {"tokens": (B, S) int32} dicts —
+    encoder-decoder models additionally need "enc_inputs" (B, T, D) so the
+    encoder and cross-attention sites are observed too. Returns the
+    DelayedScaling bundle and the converged ScaleState."""
+    from repro.models.transformer import encode, forward
+    ecfg = _delayed_eval_cfg(cfg)
+    batches = list(batches)
+    if ecfg.is_encoder_decoder and "enc_inputs" not in batches[0]:
+        raise ValueError(
+            "encoder-decoder calibration needs 'enc_inputs' in each batch "
+            "(otherwise the encoder/cross-attention sites stay uncalibrated "
+            "and serve with unit scales)")
+
+    def _fwd(p, b):
+        enc_out, enc_aux = None, {}
+        if ecfg.is_encoder_decoder:
+            enc_out, enc_aux = encode(p, b["enc_inputs"], cfg=ecfg,
+                                      with_aux=True)
+        _, _, aux = forward(p, b["tokens"], cfg=ecfg, mode="train",
+                            enc_out=enc_out)
+        aux = dict(aux)
+        aux.update(enc_aux)
+        return aux
+
+    if registry is None:
+        registry = discover_sites(_fwd, params, batches[0])
+
+    ds = DelayedScaling(registry, config=scaling_cfg, qcfg=ecfg.policy.quant)
+    state = ds.init()
+
+    def observe(p, b, scale_vec):
+        scales = {k: scale_vec[i] for k, i in registry.index.items()}
+        with scale_ctx.activate(scale_ctx.calibrate_context(scales)):
+            aux = _fwd(p, b)
+            aux.update(scale_ctx.drain_aux())
+        return {k[len(scale_ctx.AMAX_PREFIX):]: v for k, v in aux.items()
+                if k.startswith(scale_ctx.AMAX_PREFIX)}
+
+    observe_jit = jax.jit(observe)
+    for b in batches:
+        observed = observe_jit(params, b, state.scale)
+        state = ds.update(state, observed, sync=sync)
+    return ds, state
+
+
+def freeze(ds: DelayedScaling, state: ScaleState) -> Dict[str, float]:
+    """Frozen per-site scales for serving (forward classes only)."""
+    return ds.freeze(state)
+
+
+def save_frozen(directory, scales: Dict[str, float]):
+    p = Path(directory)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / FROZEN_SCALES_FILE).write_text(json.dumps(scales, indent=1,
+                                                   sort_keys=True))
+
+
+def load_frozen(directory) -> Dict[str, float]:
+    return json.loads((Path(directory) / FROZEN_SCALES_FILE).read_text())

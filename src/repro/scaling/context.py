@@ -1,0 +1,223 @@
+"""Trace-time plumbing for delayed per-tensor scaling.
+
+A `ScaleContext` carries per-site scales *into* the quantization call sites
+(core.qlinear / core.qconv / models.attention) and collects observed amaxes
+*out of* them, without changing every model-function signature. The context
+is pure plumbing: every value that crosses a jit/scan boundary still flows
+functionally (scales enter as traced function inputs; collected amaxes are
+drained into the layer `aux` dict inside the scan body, and error/grad
+amaxes ride the cotangent of per-site token inputs). The context object only
+routes trace-time references — it holds no state across traces.
+
+Site keys
+---------
+A qeinsum call at scoped site S with operand classes (Ca, Cb) produces
+registry keys:
+
+    "{S}#a.{W|A}"   — operand a (forward observation)
+    "{S}#b.{W|A}"   — operand b (forward observation)
+    "{S}#E"         — the error tensor dY quantized in backward
+    "{S}#G"         — the FP8-stored weight gradient (if a weight operand)
+
+Raw (non-qeinsum) sites — the FP8 KV cache — use "{S}#A".
+
+Modes
+-----
+    discover  — abstract trace (jax.eval_shape) that registers site keys;
+                scales read as 1.0, nothing is recorded.
+    collect   — training: scales come from ScaleState, forward amaxes are
+                recorded (from the already-materialized FP8 data — no extra
+                pass over the high-precision tensor).
+    calibrate — like collect, plus KV-cache range observation (an offline
+                full-tensor reduce that is deliberately NOT done in the
+                training hot path).
+    frozen    — serving: scales are python floats (burned into the jitted
+                program as constants); nothing is recorded.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Set
+
+import jax.numpy as jnp
+
+_CLASS_LETTER = {"weight": "W", "act": "A", "error": "E", "grad": "G"}
+
+AMAX_PREFIX = "amax/"
+
+
+@dataclasses.dataclass
+class ScaleContext:
+    mode: str                                   # discover|collect|calibrate|frozen
+    scales: Mapping[str, Any]                   # key -> f32 scalar / float
+    tokens: Mapping[str, Any]                   # site -> f32[2] (E/G channel)
+    discovered: Set[str] = dataclasses.field(default_factory=set)
+    discovered_token_sites: Set[str] = dataclasses.field(default_factory=set)
+    collected: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Trace-time count of token uses per site. A site token used N times
+    # (chunked attention, chunked CE, scanned layer groups) accumulates the
+    # SUM of N per-use amaxes in its cotangent; the consumer divides by this
+    # count to recover the mean (see ScaleState docs — the saturation-growth
+    # guard corrects any residual underestimate upward).
+    token_uses: Dict[str, int] = dataclasses.field(default_factory=dict)
+    use_sink: Optional[Dict[str, int]] = None
+    _scope: List[str] = dataclasses.field(default_factory=list)
+
+    # -- scoping -------------------------------------------------------------
+    def site_key(self, site: str) -> str:
+        return "/".join(self._scope + [site])
+
+    # -- registry ------------------------------------------------------------
+    def register(self, key: str):
+        if self.mode == "discover":
+            self.discovered.add(key)
+
+    def register_token_site(self, site_key: str):
+        if self.mode == "discover":
+            self.discovered_token_sites.add(site_key)
+
+    # -- scale lookup --------------------------------------------------------
+    def scale_for(self, key: str, default: float = 1.0):
+        s = self.scales.get(key)
+        if s is None:
+            return jnp.asarray(default, jnp.float32)
+        return jnp.asarray(s, jnp.float32)
+
+    def frozen_scale(self, key: str, default: float = 1.0) -> float:
+        """Python-float lookup (frozen serving; burned in as a constant)."""
+        if self.mode != "frozen":
+            return default
+        return float(self.scales.get(key, default))
+
+    # -- tokens (backward E/G observation channel) ---------------------------
+    def token_for(self, site_key: str):
+        self.register_token_site(site_key)
+        self.token_uses[site_key] = self.token_uses.get(site_key, 0) + 1
+        t = self.tokens.get(site_key)
+        if t is None:
+            return jnp.zeros((2,), jnp.float32)
+        return t
+
+    # -- forward observation -------------------------------------------------
+    def record(self, key: str, amax):
+        self.register(key)
+        if self.mode in ("collect", "calibrate"):
+            prev = self.collected.get(key)
+            self.collected[key] = amax if prev is None \
+                else jnp.maximum(prev, amax)
+
+    def drain_aux(self) -> Dict[str, Any]:
+        """Pull collected amaxes as aux entries. Must be called inside the
+        same scan body that recorded them (apply_layer does this) so the
+        traced values exit the scan functionally via the aux ys."""
+        out = {AMAX_PREFIX + k: v for k, v in self.collected.items()}
+        self.collected.clear()
+        return out
+
+
+_ACTIVE: Optional[ScaleContext] = None
+
+
+def current() -> Optional[ScaleContext]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def activate(ctx: ScaleContext):
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a ScaleContext is already active")
+    _ACTIVE = ctx
+    try:
+        yield ctx
+    finally:
+        _ACTIVE = None
+        if ctx.use_sink is not None:
+            ctx.use_sink.clear()
+            ctx.use_sink.update(ctx.token_uses)
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    """Push a site-scope segment (no-op when no context is active)."""
+    ctx = _ACTIVE
+    if ctx is None:
+        yield
+        return
+    ctx._scope.append(name)
+    try:
+        yield
+    finally:
+        ctx._scope.pop()
+
+
+def drain_aux() -> Dict[str, Any]:
+    ctx = _ACTIVE
+    return ctx.drain_aux() if ctx is not None else {}
+
+
+def drain_raw() -> Dict[str, Any]:
+    """Drain collected amaxes with raw (unprefixed) keys. Use inside a
+    jax.checkpoint-wrapped function so the observations exit the remat trace
+    through the function's outputs; pair with re_record() at the call site."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return {}
+    out = dict(ctx.collected)
+    ctx.collected.clear()
+    return out
+
+
+def re_record(obs: Dict[str, Any]):
+    """Re-inject observations drained from an inner (remat/chunk) trace."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return
+    for k, v in obs.items():
+        ctx.record(k, v)
+
+
+def token_use_snapshot() -> Optional[Set[str]]:
+    """Sites with token uses recorded so far (None when no context)."""
+    ctx = _ACTIVE
+    return None if ctx is None else set(ctx.token_uses)
+
+
+def amplify_token_uses(snapshot: Optional[Set[str]], factor: int):
+    """Multiply the use count of sites first touched since `snapshot` by
+    `factor`. Called by apply_stack after lax.scan: the scan body is traced
+    once, but its token cotangents accumulate over all `factor` iterations
+    at runtime."""
+    ctx = _ACTIVE
+    if ctx is None or snapshot is None or factor <= 1:
+        return
+    for k in ctx.token_uses:
+        if k not in snapshot:
+            ctx.token_uses[k] *= factor
+
+
+# Convenience constructors ----------------------------------------------------
+
+def discover_context() -> ScaleContext:
+    return ScaleContext(mode="discover", scales={}, tokens={})
+
+
+def collect_context(scales: Mapping[str, Any],
+                    tokens: Mapping[str, Any]) -> ScaleContext:
+    return ScaleContext(mode="collect", scales=scales, tokens=tokens)
+
+
+def calibrate_context(scales: Mapping[str, Any]) -> ScaleContext:
+    return ScaleContext(mode="calibrate", scales=scales, tokens={})
+
+
+def frozen_context(scales: Mapping[str, float]) -> ScaleContext:
+    return ScaleContext(mode="frozen", scales=dict(scales), tokens={})
+
+
+def operand_keys(site_key: str, classes) -> Dict[str, str]:
+    """Registry keys for one qeinsum call site."""
+    ca, cb = _CLASS_LETTER[classes[0]], _CLASS_LETTER[classes[1]]
+    return {"a": f"{site_key}#a.{ca}", "b": f"{site_key}#b.{cb}",
+            "E": f"{site_key}#E", "G": f"{site_key}#G"}

@@ -1,0 +1,226 @@
+"""Delayed-scaling state: per-site amax ring buffers and derived scales.
+
+The subsystem's core object is `ScaleState`, a registered-dataclass pytree
+holding, for every registered tensor site (layer x tensor-class W/A/E/G, see
+scaling.context for the key grammar):
+
+    amax_history : (n_sites, history_len) f32 ring buffer of recent amax
+                   observations (most-recent-first; rolled every update)
+    scale        : (n_sites,) f32 derived dequantization scales
+                   (x ~= fp8_data * scale; quantize divides by scale)
+    step         : i32 update counter
+
+Scales are derived from *history*, not the current tensor — the delayed-
+scaling contract (cf. Transformer Engine; Noune et al. 2206.02915): the
+quantize hot path never reduces over the full tensor, it just multiplies by
+a precomputed 1/scale. Observation feeds back one step later.
+
+Because observations are taken from the already-quantized FP8 payload
+(bit-pattern max — see core.quantize.fp8_amax_bits), an observation can
+never exceed scale * fmt_max. Range growth therefore needs an explicit
+escape hatch: an observation at the representable ceiling (saturation) is
+bumped by `growth` before entering history, probing the range upward the
+same way dynamic loss scaling backs off downward. `margin` keeps steady-
+state tensors strictly inside the ceiling so the probe only fires on real
+range jumps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fp8_formats import get_format
+from repro.core.precision_policy import QuantConfig
+from repro.scaling import context as scale_ctx
+
+Array = jax.Array
+
+_SAT_TOL = 1.0 - 2.0 ** -8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScaleState:
+    amax_history: Array   # (n_sites, history_len) f32, col 0 = most recent
+    scale: Array          # (n_sites,) f32
+    step: Array           # i32 scalar
+
+    @classmethod
+    def create(cls, n_sites: int, history_len: int) -> "ScaleState":
+        return cls(
+            amax_history=jnp.zeros((n_sites, history_len), jnp.float32),
+            scale=jnp.ones((n_sites,), jnp.float32),
+            step=jnp.asarray(0, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingConfig:
+    """Static policy for deriving scales from amax history."""
+    history_len: int = 16
+    policy: str = "max"          # max | most_recent | ema
+    margin: float = 2.0          # headroom factor; >1 keeps steady-state
+    #                              tensors off the ceiling (stable feedback)
+    growth: float = 2.0          # range probe on saturation / overflow
+    ema_decay: float = 0.75      # for policy="ema"
+
+
+def amax_from_history(history: Array, cfg: ScalingConfig) -> Array:
+    """(S, H) history -> (S,) representative amax, per policy."""
+    if cfg.policy == "max":
+        return history.max(axis=1)
+    if cfg.policy == "most_recent":
+        return history[:, 0]
+    if cfg.policy == "ema":
+        h = history.shape[1]
+        w = (1.0 - cfg.ema_decay) * cfg.ema_decay ** np.arange(h)
+        w = jnp.asarray(w / w.sum(), jnp.float32)
+        # Normalize over the populated prefix only: zero rows contribute 0.
+        populated = (history > 0).astype(jnp.float32)
+        denom = jnp.maximum((populated * w[None, :]).sum(axis=1), 1e-30)
+        return (history * w[None, :]).sum(axis=1) / denom
+    raise ValueError(f"unknown history policy {cfg.policy!r}")
+
+
+class SiteRegistry:
+    """Stable key -> row mapping for ScaleState vectors (static, not a pytree).
+
+    Keys follow scaling.context's grammar. `token_sites` are the sites with a
+    backward E/G observation channel.
+    """
+
+    def __init__(self, keys: Iterable[str], token_sites: Iterable[str] = ()):
+        self.keys: Tuple[str, ...] = tuple(sorted(set(keys)))
+        self.index: Dict[str, int] = {k: i for i, k in enumerate(self.keys)}
+        self.token_sites: Tuple[str, ...] = tuple(sorted(set(token_sites)))
+        # Filled in (python-side) during the training trace: how many times
+        # each site's token is used, so summed E/G cotangents can be
+        # normalized back to a mean (see context.token_uses).
+        self.token_uses: Dict[str, int] = {}
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def class_letter(self, key: str) -> str:
+        return key.rsplit("#", 1)[1][-1]   # W | A | E | G
+
+    def fmt_max_vector(self, qcfg: QuantConfig) -> np.ndarray:
+        fwd = get_format(qcfg.fwd_format).max_normal
+        bwd = get_format(qcfg.bwd_format).max_normal
+        return np.asarray([fwd if self.class_letter(k) in ("W", "A") else bwd
+                           for k in self.keys], np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedScaling:
+    """Bundles a SiteRegistry + policies into the subsystem's public API."""
+    registry: SiteRegistry
+    config: ScalingConfig = ScalingConfig()
+    qcfg: QuantConfig = QuantConfig(scaling="delayed")
+
+    # -- state ---------------------------------------------------------------
+    def init(self) -> ScaleState:
+        return ScaleState.create(len(self.registry), self.config.history_len)
+
+    def zero_tokens(self) -> Dict[str, Array]:
+        """Per-site E/G cotangent tokens; pass as a differentiated input of
+        the loss, the token 'gradients' come back as observed bwd amaxes."""
+        return {s: jnp.zeros((2,), jnp.float32)
+                for s in self.registry.token_sites}
+
+    def scales_dict(self, state: ScaleState) -> Dict[str, Array]:
+        return {k: state.scale[i] for k, i in self.registry.index.items()}
+
+    # -- contexts ------------------------------------------------------------
+    def collect(self, state: ScaleState, tokens: Mapping[str, Array]):
+        ctx = scale_ctx.collect_context(self.scales_dict(state), tokens)
+        ctx.use_sink = self.registry.token_uses
+        return scale_ctx.activate(ctx)
+
+    def calibrate_ctx(self, state: ScaleState):
+        return scale_ctx.activate(
+            scale_ctx.calibrate_context(self.scales_dict(state)))
+
+    # -- update --------------------------------------------------------------
+    def update(self, state: ScaleState, observed: Mapping[str, Array], *,
+               sync: Optional[Callable[[Array], Array]] = None) -> ScaleState:
+        """Fold one step of observations into history and re-derive scales.
+
+        observed: key -> f32 amax scalar (any subset of registry keys; sites
+        not observed this step carry their most recent history value
+        forward). sync: optional cross-replica reduction (e.g.
+        distributed.amax_sync.make_amax_sync('data')) applied to the dense
+        observation vector — a single fused pmax instead of one collective
+        per site.
+        """
+        prev = state.amax_history[:, 0]
+        rows = []
+        seen = np.zeros((len(self.registry),), bool)
+        for i, k in enumerate(self.registry.keys):
+            v = observed.get(k)
+            if v is None:
+                rows.append(prev[i])
+            else:
+                seen[i] = True
+                rows.append(jnp.asarray(v, jnp.float32).reshape(()))
+        obs = jnp.stack(rows)
+        if sync is not None:
+            obs = sync(obs)
+        fmax = jnp.asarray(self.registry.fmt_max_vector(self.qcfg))
+        cap = state.scale * fmax
+        # Overflow (inf/nan from non-saturating error tensors) and saturation
+        # (observation pinned at the representable ceiling) both mean "the
+        # range was too small": probe upward by `growth`.
+        obs = jnp.where(jnp.isfinite(obs), obs, cap * self.config.growth)
+        seen_mask = jnp.asarray(seen)
+        # Pinned AT the ceiling => the true amax was clipped away: probe
+        # upward. Strictly beyond it (a raw, unclipped observation — e.g. KV
+        # calibration) is exact and enters history as-is.
+        saturated = seen_mask & (obs >= cap * _SAT_TOL) \
+            & (obs <= cap / _SAT_TOL)
+        obs = jnp.where(saturated, obs * self.config.growth, obs)
+        hist = jnp.concatenate([obs[:, None], state.amax_history[:, :-1]],
+                               axis=1)
+        amax = amax_from_history(hist, self.config)
+        scale = jnp.where(amax > 0, amax * self.config.margin / fmax, 1.0)
+        return ScaleState(amax_history=hist, scale=scale.astype(jnp.float32),
+                          step=state.step + 1)
+
+    # -- freeze (calibrated serving) -----------------------------------------
+    def freeze(self, state: ScaleState) -> Dict[str, float]:
+        """Emit frozen per-site scales for deterministic quantized serving.
+        Only forward-path classes (W/A) matter at inference; E/G rows are
+        excluded."""
+        scales = np.asarray(state.scale)
+        return {k: float(scales[i]) for k, i in self.registry.index.items()
+                if self.registry.class_letter(k) in ("W", "A")}
+
+
+def split_observations(metrics: Dict[str, Array],
+                       token_grads: Mapping[str, Array],
+                       registry: SiteRegistry) -> Dict[str, Array]:
+    """Assemble the per-key observation dict for DelayedScaling.update from
+    (a) forward amax aux entries riding in `metrics` (popped in place) and
+    (b) the cotangents of the E/G tokens.
+
+    Token cotangents SUM over every use of a shared site (scan iterations,
+    attention/CE chunks); dividing by the trace-time use count recovers the
+    mean per-use amax. A mean can understate a heterogeneous group's max,
+    which the saturation-growth guard in DelayedScaling.update then probes
+    back up — whereas an uncorrected sum would overstate scales with no
+    mechanism pulling them back down.
+    """
+    observed: Dict[str, Array] = {}
+    for k in [k for k in metrics if k.startswith(scale_ctx.AMAX_PREFIX)]:
+        observed[k[len(scale_ctx.AMAX_PREFIX):]] = metrics.pop(k)
+    for site, tok in token_grads.items():
+        inv = 1.0 / max(1, registry.token_uses.get(site, 1))
+        ek, gk = f"{site}#E", f"{site}#G"
+        if ek in registry.index:
+            observed[ek] = tok[0] * inv
+        if gk in registry.index:
+            observed[gk] = tok[1] * inv
+    return observed

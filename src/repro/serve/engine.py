@@ -45,12 +45,17 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
+                 frozen_scales: Optional[Dict[str, float]] = None):
+        """frozen_scales: calibrated per-site scales (scaling.calibrate
+        freeze/load_frozen) — enables deterministic calibrated FP8 inference;
+        the FP8 KV cache consumes its per-layer scales from the same dict."""
         self.cfg = cfg
         self.params = params
         self.serve = serve
-        self._prefill = jax.jit(make_serve_prefill(cfg))
-        self._decode = jax.jit(make_serve_decode(cfg))
+        self.frozen_scales = frozen_scales
+        self._prefill = jax.jit(make_serve_prefill(cfg, frozen_scales))
+        self._decode = jax.jit(make_serve_decode(cfg, frozen_scales))
         b, ml = serve.max_batch, serve.max_len
         self.states = init_stack_state(cfg, b, max_len=ml,
                                        n_layers=cfg.n_layers)

@@ -32,6 +32,7 @@ from repro.checkpoint import Checkpointer
 from repro.core.master_weights import MixedPrecisionOptimizer
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm
+from repro.scaling.state import DelayedScaling
 from repro.train.step import make_train_step
 
 Array = jax.Array
@@ -54,18 +55,25 @@ class TrainLoop:
     def __init__(self, cfg: ModelConfig, optimizer: MixedPrecisionOptimizer,
                  data: Iterator[Dict[str, np.ndarray]],
                  loop: LoopConfig, *, seed: int = 0,
-                 on_straggler: Optional[Callable[[int, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float], None]] = None,
+                 scaling: Optional[DelayedScaling] = None,
+                 amax_sync=None):
+        """scaling: optional DelayedScaling bundle (delayed per-tensor FP8
+        scaling). Its ScaleState rides through the jitted step and is
+        checkpointed/restored next to the optimizer state."""
         self.cfg = cfg
         self.optimizer = optimizer
         self.data = data
         self.loop = loop
         self.seed = seed
         self.on_straggler = on_straggler
+        self.scaling = scaling
         self.ckpt = Checkpointer(loop.checkpoint_dir,
                                  keep_last_k=loop.keep_last_k)
         self._stop = False
         self._step_fn = jax.jit(make_train_step(
-            cfg, optimizer, n_microbatches=loop.n_microbatches))
+            cfg, optimizer, n_microbatches=loop.n_microbatches,
+            scaling=scaling, amax_sync=amax_sync))
         self._metrics_f = None
         if loop.metrics_path:
             Path(loop.metrics_path).parent.mkdir(parents=True, exist_ok=True)
@@ -81,14 +89,27 @@ class TrainLoop:
         signal.signal(signal.SIGINT, handler)
 
     # -- main -----------------------------------------------------------------
+    def _pack(self, state, scale_state):
+        if self.scaling is None:
+            return state
+        return {"train": state, "amax_scales": scale_state}
+
+    def _unpack(self, tree):
+        if self.scaling is None:
+            return tree, None
+        return tree["train"], tree["amax_scales"]
+
     def run(self) -> Dict[str, Any]:
         params = init_lm(jax.random.PRNGKey(self.seed), self.cfg)
         state = self.optimizer.init(params)
+        scale_state = self.scaling.init() if self.scaling else None
         del params
         start_step = 0
         if self.ckpt.latest_step() is not None:
-            proto = jax.eval_shape(lambda s: s, state)
-            state, start_step = self.ckpt.restore(proto)
+            proto = jax.eval_shape(lambda s: s,
+                                   self._pack(state, scale_state))
+            tree, start_step = self.ckpt.restore(proto)
+            state, scale_state = self._unpack(tree)
             print(f"[train] restored checkpoint at step {start_step}")
             # Fast-forward the data stream so a resumed run consumes exactly
             # the batches an uninterrupted run would have (bit-identical
@@ -108,9 +129,13 @@ class TrainLoop:
         for step in range(start_step, self.loop.total_steps):
             batch = next(self.data)
             t0 = time.time()
-            state, metrics = self._step_fn(
-                state, batch, jax.random.fold_in(
-                    jax.random.PRNGKey(self.seed + 17), step))
+            step_key = jax.random.fold_in(
+                jax.random.PRNGKey(self.seed + 17), step)
+            if self.scaling is None:
+                state, metrics = self._step_fn(state, batch, step_key)
+            else:
+                (state, scale_state), metrics = self._step_fn(
+                    state, scale_state, batch, step_key)
             metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
             dt = time.time() - t0
             # straggler detection (skip the compile step)
@@ -137,10 +162,11 @@ class TrainLoop:
             done = step + 1 >= self.loop.total_steps
             if self._stop or done or \
                     (step + 1) % self.loop.checkpoint_every == 0:
-                self.ckpt.save(step + 1, state)
+                self.ckpt.save(step + 1, self._pack(state, scale_state))
                 if self._stop:
                     print(f"[train] preempted: checkpointed at {step + 1}")
                     break
         self.ckpt.wait()
-        return {"state": state, "last_step": step + 1,
+        return {"state": state, "scale_state": scale_state,
+                "last_step": step + 1,
                 "metrics": last_metrics, "stragglers": stragglers}

@@ -22,6 +22,9 @@ from repro.core.master_weights import MixedPrecisionOptimizer, MixedPrecisionSta
 from repro.models.config import ModelConfig
 from repro.models.transformer import encode, forward, lm_loss
 from repro.optim import make_optimizer
+from repro.scaling import context as scale_ctx
+from repro.scaling.context import AMAX_PREFIX
+from repro.scaling.state import DelayedScaling, ScaleState, split_observations
 
 Array = jax.Array
 
@@ -42,12 +45,24 @@ def make_optimizer_for(cfg: ModelConfig, *, name: str = "adam",
 
 
 def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
-                    n_microbatches: int = 1, grad_shardings=None):
+                    n_microbatches: int = 1, grad_shardings=None,
+                    scaling: Optional[DelayedScaling] = None,
+                    amax_sync=None):
     """Returns train_step(state, batch, step_key) -> (state, metrics).
 
     grad_shardings: optional PartitionSpec pytree (params-shaped). Applied to
     the gradients / accumulator so the f32 grad buffer is ZeRO-sharded like
     the master weights instead of ballooning to a model-sharded-only copy.
+
+    scaling: optional DelayedScaling bundle. When given, the returned step is
+        train_step(state, scale_state, batch, step_key)
+            -> ((state, scale_state), metrics)
+    — the ScaleState pytree rides through the jitted step next to
+    LossScaleState: per-site scales feed the quantize sites via the scaling
+    context, forward amax observations come back through the loss aux,
+    error/grad observations through the cotangents of per-site tokens, and
+    the history is updated post-step (optionally cross-replica-synced via
+    `amax_sync`, e.g. distributed.amax_sync.make_amax_sync('data')).
     """
 
     def constrain_grads(g):
@@ -57,42 +72,53 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
             lambda x, s: jax.lax.with_sharding_constraint(x, s),
             g, grad_shardings)
 
-    def loss_fn(params, batch, step_key, scale):
-        return lm_loss(params, batch, cfg=cfg, qkey=step_key,
-                       loss_scale=scale)
+    def loss_fn(params, tokens, batch, step_key, scale, scale_state):
+        if scaling is None:
+            return lm_loss(params, batch, cfg=cfg, qkey=step_key,
+                           loss_scale=scale)
+        with scaling.collect(scale_state, tokens):
+            return lm_loss(params, batch, cfg=cfg, qkey=step_key,
+                           loss_scale=scale)
 
-    def train_step(state: MixedPrecisionState, batch: Dict[str, Array],
-                   step_key: Array) -> Tuple[MixedPrecisionState, Dict]:
-        params = optimizer.compute_params(state)
-        scale = state.loss_scale.scale
+    def _grads_and_metrics(params, batch, step_key, scale, scale_state):
+        tokens = scaling.zero_tokens() if scaling is not None else {}
 
         if n_microbatches <= 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch, step_key, scale)
-            grads = constrain_grads(grads)
-        else:
-            def reshape_mb(x):
-                return x.reshape((n_microbatches,
-                                  x.shape[0] // n_microbatches) + x.shape[1:])
-            mb_batch = jax.tree_util.tree_map(reshape_mb, batch)
+            (loss, metrics), (grads, tok_grads) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, tokens, batch, step_key, scale, scale_state)
+            return loss, metrics, constrain_grads(grads), tok_grads
 
-            def mb_body(carry, mb):
-                acc, i = carry
-                mkey = jax.random.fold_in(step_key, i)
-                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    params, mb, mkey, scale)
-                acc = jax.tree_util.tree_map(
-                    lambda a, gg: a + gg.astype(jnp.float32) / n_microbatches,
-                    acc, g)
-                return (constrain_grads(acc), i + 1), (l, m)
+        def reshape_mb(x):
+            return x.reshape((n_microbatches,
+                              x.shape[0] // n_microbatches) + x.shape[1:])
+        mb_batch = jax.tree_util.tree_map(reshape_mb, batch)
 
-            zero = constrain_grads(jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params))
-            (grads, _), (losses, metricses) = jax.lax.scan(
-                mb_body, (zero, 0), mb_batch)
-            loss = losses.mean()
-            metrics = jax.tree_util.tree_map(lambda x: x.mean(), metricses)
+        def mb_body(carry, mb):
+            acc, tacc, i = carry
+            mkey = jax.random.fold_in(step_key, i)
+            (l, m), (g, tg) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, tokens, mb, mkey, scale, scale_state)
+            acc = jax.tree_util.tree_map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n_microbatches,
+                acc, g)
+            tacc = jax.tree_util.tree_map(lambda a, gg: jnp.maximum(a, gg),
+                                          tacc, tg)
+            return (constrain_grads(acc), tacc, i + 1), (l, m)
 
+        zero = constrain_grads(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        tzero = jax.tree_util.tree_map(jnp.zeros_like, tokens)
+        (grads, tok_grads, _), (losses, metricses) = jax.lax.scan(
+            mb_body, (zero, tzero, 0), mb_batch)
+        loss = losses.mean()
+        # Microbatch reduction: amax observations by max, losses by mean.
+        metrics = {k: (v.max() if k.startswith(AMAX_PREFIX) else v.mean())
+                   for k, v in metricses.items()}
+        return loss, metrics, grads, tok_grads
+
+    def _finish(state, grads, loss, metrics, scale):
         new_state, opt_metrics = optimizer.apply_gradients(state, grads)
         inv = 1.0 / jnp.maximum(scale, 1e-9)
         out = {"loss": loss.astype(jnp.float32) * inv,
@@ -100,7 +126,27 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
                **{k: v for k, v in metrics.items()}, **opt_metrics}
         return new_state, out
 
-    return train_step
+    def train_step(state: MixedPrecisionState, batch: Dict[str, Array],
+                   step_key: Array) -> Tuple[MixedPrecisionState, Dict]:
+        params = optimizer.compute_params(state)
+        scale = state.loss_scale.scale
+        loss, metrics, grads, _ = _grads_and_metrics(
+            params, batch, step_key, scale, None)
+        return _finish(state, grads, loss, metrics, scale)
+
+    def train_step_scaled(state: MixedPrecisionState, scale_state: ScaleState,
+                          batch: Dict[str, Array], step_key: Array):
+        params = optimizer.compute_params(state)
+        scale = state.loss_scale.scale
+        loss, metrics, grads, tok_grads = _grads_and_metrics(
+            params, batch, step_key, scale, scale_state)
+        observed = split_observations(metrics, tok_grads, scaling.registry)
+        new_scale_state = scaling.update(scale_state, observed,
+                                         sync=amax_sync)
+        new_state, out = _finish(state, grads, loss, metrics, scale)
+        return (new_state, new_scale_state), out
+
+    return train_step if scaling is None else train_step_scaled
 
 
 def optax_safe_norm(tree) -> Array:
@@ -113,35 +159,52 @@ def optax_safe_norm(tree) -> Array:
 # serving steps (deterministic eval: RNE, saturating)
 # ---------------------------------------------------------------------------
 
-def _eval_cfg(cfg: ModelConfig) -> ModelConfig:
-    pol = dataclasses.replace(cfg.policy, quant=cfg.policy.quant.eval_mode())
+def _eval_cfg(cfg: ModelConfig, frozen_scales=None) -> ModelConfig:
+    quant = cfg.policy.quant.eval_mode()
+    if frozen_scales is not None:
+        # Calibrated serving: per-site scales come from the frozen dict
+        # (python floats burned into the jitted program as constants).
+        quant = dataclasses.replace(quant, scaling="delayed")
+    pol = dataclasses.replace(cfg.policy, quant=quant)
     return cfg.replace(policy=pol)
 
 
-def make_serve_prefill(cfg: ModelConfig):
-    ecfg = _eval_cfg(cfg)
+def _maybe_frozen(frozen_scales):
+    if frozen_scales is None:
+        import contextlib
+        return contextlib.nullcontext()
+    return scale_ctx.activate(scale_ctx.frozen_context(frozen_scales))
+
+
+def make_serve_prefill(cfg: ModelConfig, frozen_scales=None):
+    """frozen_scales: optional {site_key: scale} dict from
+    scaling.calibrate.freeze — enables deterministic calibrated FP8
+    inference (including FP8 KV-cache scales)."""
+    ecfg = _eval_cfg(cfg, frozen_scales)
 
     def prefill(params, batch, states):
-        enc_out = None
-        if ecfg.is_encoder_decoder:
-            enc_out = encode(params, batch["enc_inputs"], cfg=ecfg)
-        logits, new_states, _ = forward(
-            params, batch["tokens"], cfg=ecfg, mode="prefill", states=states,
-            extra_embeds=batch.get("extra_embeds"), enc_out=enc_out,
-            last_only=True)
+        with _maybe_frozen(frozen_scales):
+            enc_out = None
+            if ecfg.is_encoder_decoder:
+                enc_out = encode(params, batch["enc_inputs"], cfg=ecfg)
+            logits, new_states, _ = forward(
+                params, batch["tokens"], cfg=ecfg, mode="prefill",
+                states=states, extra_embeds=batch.get("extra_embeds"),
+                enc_out=enc_out, last_only=True)
         return logits, new_states
 
     return prefill
 
 
-def make_serve_decode(cfg: ModelConfig):
-    ecfg = _eval_cfg(cfg)
+def make_serve_decode(cfg: ModelConfig, frozen_scales=None):
+    ecfg = _eval_cfg(cfg, frozen_scales)
 
     def decode(params, batch, states):
-        enc_out = batch.get("enc_out")
-        logits, new_states, _ = forward(
-            params, batch["tokens"], cfg=ecfg, mode="decode", states=states,
-            positions=batch["positions"], enc_out=enc_out)
+        with _maybe_frozen(frozen_scales):
+            enc_out = batch.get("enc_out")
+            logits, new_states, _ = forward(
+                params, batch["tokens"], cfg=ecfg, mode="decode",
+                states=states, positions=batch["positions"], enc_out=enc_out)
         return logits[:, -1:], new_states
 
     return decode

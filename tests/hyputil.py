@@ -1,0 +1,25 @@
+"""Optional-hypothesis shim shared by the property-based test modules.
+
+`from hyputil import given, settings, st`: with hypothesis installed these
+are the real decorators/strategies; without it, @given marks the test
+skipped and `st` accepts any strategy expression at decoration time so
+collection still succeeds.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

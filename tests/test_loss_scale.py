@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyputil import given, settings, st
 
 from repro.core.loss_scale import (LossScaler, all_finite, convnet_scaler,
                                    gnmt_scaler, underflow_fraction)

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyputil import given, settings, st
 
 from repro.core import fp8_formats as F
 from repro.core import quantize as Q
