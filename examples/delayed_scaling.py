@@ -1,12 +1,23 @@
 """End-to-end delayed per-tensor scaling: train -> calibrate -> serve.
 
-Demonstrates the scaling/ subsystem:
+Demonstrates the scaling/ subsystem with the HYBRID format recipe:
  1. discover the site registry with an abstract trace,
- 2. train a tiny LM with QuantConfig(scaling="delayed") — per-site scales
-    come from amax history, no inline amax reductions in the hot path,
- 3. calibrate + freeze scales, and
+ 2. train a tiny LM with QuantConfig(recipe="hybrid", scaling="delayed") —
+    e4m3 W/A + e5m2 E/G, per-site scales from amax history, no inline amax
+    reductions in the hot path. The precision recipe per tensor class:
+
+        class          format  rounding  overflow
+        W weights      e4m3    rne       saturate (+-448)
+        A activations  e4m3    sr        saturate (+-448)
+        E errors       e5m2    sr        -> inf (loss scaler backs off)
+        G weight-grads e5m2    sr        -> inf
+
+    (print it from code: QuantConfig(recipe="hybrid").recipe_table())
+ 3. calibrate + freeze scales — recording the FORMAT each scale was
+    calibrated under — and
  4. run bitwise-deterministic FP8 serving (incl. FP8 KV cache) from the
-    frozen scales.
+    frozen scales; the engine refuses scales whose calibration format does
+    not match its serving config.
 
 Run: PYTHONPATH=src python examples/delayed_scaling.py
 """
@@ -19,13 +30,15 @@ import numpy as np
 from repro.core.precision_policy import PrecisionPolicy, QuantConfig
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm
-from repro.scaling import DelayedScaling, calibrate, discover_lm_sites, freeze
+from repro.scaling import (DelayedScaling, calibrate, discover_lm_sites,
+                           freeze_with_formats)
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.train.step import make_optimizer_for, make_train_step
 
 
 def main():
-    quant = QuantConfig(scaling="delayed")
+    quant = QuantConfig(recipe="hybrid", scaling="delayed")
+    print("precision recipe:", quant.recipe_table())
     policy = PrecisionPolicy(quant=quant, kv_cache_format="e5m2")
     cfg = ModelConfig(arch="demo", n_layers=2, d_model=64, n_heads=2,
                       n_kv_heads=2, d_ff=128, vocab_size=256, max_seq_len=64,
@@ -53,18 +66,23 @@ def main():
     print(f"trained 10 steps, loss={float(m['loss']):.3f}, "
           f"{int((np.asarray(scale_state.scale) != 1.0).sum())} scales live")
 
-    # 3. calibrate on held-out batches and freeze
+    # 3. calibrate on held-out batches and freeze — scales AND the formats
+    #    they were calibrated under (e4m3 for W/A sites under the hybrid
+    #    recipe, e5m2 for the KV cache here)
     trained = opt.compute_params(state)
     calib = [{"tokens": jnp.asarray(rng.integers(0, 256, (B, S)), jnp.int32)}
              for _ in range(4)]
     ds2, cal_state = calibrate(trained, cfg, calib)
-    frozen = freeze(ds2, cal_state)
+    frozen, formats = freeze_with_formats(ds2, cal_state, cfg)
     kv = {k: v for k, v in frozen.items() if "kv/" in k}
-    print(f"frozen {len(frozen)} scales ({len(kv)} KV-cache sites)")
+    print(f"frozen {len(frozen)} scales ({len(kv)} KV-cache sites), "
+          f"formats: { {f: sum(1 for v in formats.values() if v == f) for f in set(formats.values())} }")
 
-    # 4. deterministic calibrated serving
+    # 4. deterministic calibrated serving; frozen_formats makes the engine
+    #    verify its serving config quantizes each site in the SAME format
+    #    the scale was calibrated for
     eng = ServeEngine(cfg, trained, ServeConfig(max_batch=2, max_len=48),
-                      frozen_scales=frozen)
+                      frozen_scales=frozen, frozen_formats=formats)
     uid = eng.add_request(np.array([1, 2, 3], np.int32), max_new_tokens=8)
     out = eng.run_to_completion()
     print("generated:", out[uid])

@@ -11,12 +11,15 @@ from repro.core.fp8_formats import (BF16, E4M3, E5M2, FP16, FP32, FORMATS,
 # below, which deliberately exclude the clashing name).
 from repro.core.quantize import (QTensor, amax_scale, dequantize, fake_quant,
                                  quantize_rne, quantize_sr, quantize_sr_e5m2,
-                                 quantize_sr_grid, sr_e5m2_from_bits)
+                                 quantize_sr_fp8, quantize_sr_grid,
+                                 sr_e5m2_from_bits, sr_fp8_from_bits,
+                                 sr_fp8_via_f16)
 from repro.core import quantize  # noqa: F401  (rebind name to the module)
 
 __all__ = [
     "BF16", "E4M3", "E5M2", "FP16", "FP32", "FORMATS", "FloatFormat",
     "get_format", "table1", "QTensor", "amax_scale", "dequantize",
     "fake_quant", "quantize", "quantize_rne", "quantize_sr",
-    "quantize_sr_e5m2", "quantize_sr_grid", "sr_e5m2_from_bits",
+    "quantize_sr_e5m2", "quantize_sr_fp8", "quantize_sr_grid",
+    "sr_e5m2_from_bits", "sr_fp8_from_bits", "sr_fp8_via_f16",
 ]

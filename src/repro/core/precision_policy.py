@@ -30,6 +30,18 @@ class QuantConfig:
     benchmarks).
     """
     enabled: bool = True
+    # Format recipe preset (per-tensor-class formats):
+    #   "paper_e5m2" — the paper's single-format recipe: e5m2 everywhere,
+    #                  surviving the 2-bit mantissa via loss scaling.
+    #   "hybrid"     — the accuracy-robust hybrid of the follow-on work
+    #                  (Noune et al. 2206.02915; Wang et al. 1812.08011):
+    #                  high-precision e4m3 for forward tensors (W/A), wide-
+    #                  range e5m2 for errors/gradients (E/G).
+    # The recipe OWNS fwd_format/bwd_format: __post_init__ pins both to the
+    # preset's values, so the recipe label and the actual formats can never
+    # disagree. Saturation semantics stay per-direction (the forward format
+    # saturates, e5m2 E/G keep propagating inf so the loss scaler sees it).
+    recipe: str = "paper_e5m2"
     fwd_format: str = "e5m2"      # W and A storage format
     bwd_format: str = "e5m2"      # E and G storage format
     weight_rounding: str = "rne"
@@ -60,6 +72,18 @@ class QuantConfig:
     quantize_attention: bool = True
 
     def __post_init__(self):
+        # The recipe OWNS the per-class formats (idempotent under
+        # dataclasses.replace, e.g. eval_mode()); switching recipe on an
+        # existing config therefore always re-pins both formats — a hybrid
+        # config replaced back to "paper_e5m2" returns to e5m2 everywhere.
+        if self.recipe == "paper_e5m2":
+            object.__setattr__(self, "fwd_format", "e5m2")
+            object.__setattr__(self, "bwd_format", "e5m2")
+        elif self.recipe == "hybrid":
+            object.__setattr__(self, "fwd_format", "e4m3")
+            object.__setattr__(self, "bwd_format", "e5m2")
+        else:
+            raise ValueError(f"unknown format recipe {self.recipe!r}")
         if self.scaling not in ("none", "jit_amax", "delayed"):
             raise ValueError(f"unknown scaling mode {self.scaling!r}")
         if self.scaling == "none" and (self.amax_scale_fwd
@@ -104,6 +128,14 @@ class QuantConfig:
     def baseline(self) -> "QuantConfig":
         return dataclasses.replace(self, enabled=False)
 
+    def recipe_table(self) -> dict:
+        """Per-tensor-class precision recipe: {class: (format, rounding,
+        saturate)} — the README's precision-recipe table, from code."""
+        return {cls: dict(format=self.format_for(cls),
+                          rounding=self.rounding_for(cls),
+                          saturate=self.saturate_for(cls))
+                for cls in (WEIGHT, ACT, ERROR, GRAD)}
+
 
 # Canonical configs ---------------------------------------------------------
 
@@ -115,6 +147,10 @@ AMAX_FP8 = dataclasses.replace(                # beyond-paper per-tensor scaling
     PAPER_FP8, amax_scale_fwd=True, amax_scale_bwd=True)
 DELAYED_FP8 = dataclasses.replace(              # history-based delayed scaling
     PAPER_FP8, scaling="delayed")
+HYBRID_FP8 = QuantConfig(recipe="hybrid")       # e4m3 W/A + e5m2 E/G
+HYBRID_DELAYED_FP8 = QuantConfig(               # the production recipe:
+    recipe="hybrid", scaling="delayed")         # hybrid formats over delayed
+#                                                 per-tensor scaling
 
 
 @dataclasses.dataclass(frozen=True)

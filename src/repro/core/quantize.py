@@ -11,14 +11,20 @@ next op. Two rounding modes, per paper §3.2:
    (x - floor(x))/eps. The paper applies SR to activations and gradients and
    recovers (slightly beats) the FP32 baseline.
 
-For E5M2 — the paper's format — SR is implemented *exactly* with the fp16
-bit-twiddle: e5m2 is the top byte of an IEEE fp16, so adding a uniform 8-bit
-integer to the fp16 bit pattern and truncating the low byte performs
-stochastic rounding on the real line (bit patterns are monotone in magnitude,
-and mantissa carries propagate into the exponent, handling binade crossings
-and the subnormal/normal boundary for free). This is also exactly what the
-Pallas kernel does on-TPU (kernels/stochastic_round), so ops and kernels are
-bit-identical by construction.
+SR is implemented *exactly* with an fp16 bit-twiddle for BOTH fp8 formats.
+E5M2 is the top byte of an IEEE fp16, so adding a uniform 8-bit integer to
+the fp16 bit pattern and truncating the low byte performs stochastic rounding
+on the real line (bit patterns are monotone in magnitude, and mantissa
+carries propagate into the exponent, handling binade crossings and the
+subnormal/normal boundary for free). E4M3 embeds the same way after a
+power-of-two prescale (x * 2^-8) that aligns its subnormal threshold with
+fp16's: every e4m3 grid point then maps to an fp16 pattern whose low 7 bits
+are zero — including the subnormals, which land in fp16's fixed-point
+subnormal range — so adding 7 uniform random bits and truncating is again
+exact SR. See `sr_fp8_from_bits` / `sr_fp8_via_f16`, the single bit-twiddle
+source of truth shared verbatim with the Pallas kernels
+(kernels/stochastic_round, kernels/fused_quant_matmul) and their ref
+oracles, so ops and kernels are bit-identical by construction.
 
 Note on double rounding: inputs are first converted f32->f16 with RNE, then
 stochastically rounded f16->e5m2. The intermediate RNE step contributes a
@@ -43,7 +49,6 @@ Array = jax.Array
 _F16_EXP_MASK = 0x7C00  # fp16 exponent field (all-ones => inf/nan)
 _F16_MAG_MASK = 0x7FFF
 _F16_SIGN_MASK = 0x8000
-_E5M2_MAX_F16_BITS = 0x7B00  # |57344| as fp16 bits — e5m2 max normal
 
 
 def _f16_bits(x: Array) -> Array:
@@ -79,7 +84,8 @@ def _rne_on_grid_f32(x: Array, fmt: FloatFormat) -> Array:
     xb = jax.lax.bitcast_convert_type(ax, jnp.uint32)
     e = jnp.maximum((xb >> 23).astype(jnp.int32) - 127, fmt.min_exp)
     ulp = jnp.exp2((e - fmt.man_bits).astype(jnp.float32))
-    return jnp.sign(xf) * jnp.round(ax / ulp) * ulp
+    # copysign (not sign*) so signed zero survives the round trip.
+    return jnp.copysign(jnp.round(ax / ulp) * ulp, xf)
 
 
 def quantize_rne(x: Array, fmt: FloatFormat = E5M2, *, saturate: bool = True) -> Array:
@@ -134,42 +140,106 @@ def quantize_rne(x: Array, fmt: FloatFormat = E5M2, *, saturate: bool = True) ->
 # Stochastic rounding
 # ---------------------------------------------------------------------------
 
-def sr_e5m2_from_bits(h_bits: Array, rand8: Array, *, saturate: bool = True) -> Array:
-    """Exact E5M2 stochastic rounding given fp16 bit patterns + 8 random bits.
+@dataclasses.dataclass(frozen=True)
+class SRSpec:
+    """fp16-embedding constants for exact SR into one fp8 format.
 
-    Pure uint16 math — shared verbatim with the Pallas kernel (ref oracle and
-    kernel body both call this). rand8 must be uniform in [0, 256).
+    An fp8 format with m mantissa bits embeds into fp16 under the
+    power-of-two prescale 2**pre_exp that moves its subnormal threshold onto
+    fp16's (min_exp -> -14): every grid point of the prescaled format is then
+    an fp16 bit pattern whose low (10 - m) bits are zero, subnormals
+    included, and SR = add (10 - m) uniform random bits + truncate.
     """
+    pre_exp: int      # prescale exponent: twiddle on bits of x * 2**pre_exp
+    drop_bits: int    # 10 - man_bits: random/truncated low mantissa bits
+    max_bits: int     # fp16 pattern of the prescaled fmt.max_normal
+    ovf_bits: int     # pattern on round-up past max: inf (IEEE) / NaN (fn)
+
+
+@functools.lru_cache(maxsize=None)
+def sr_spec(fmt: FloatFormat) -> SRSpec:
+    pre_exp = -14 - fmt.min_exp
+    if fmt.man_bits > 10 or fmt.max_normal * 2.0 ** pre_exp > 65504.0:
+        raise ValueError(f"format {fmt.name} does not embed in fp16")
+    max_bits = int(np.float16(fmt.max_normal * 2.0 ** pre_exp)
+                   .view(np.uint16))
+    return SRSpec(pre_exp=pre_exp, drop_bits=10 - fmt.man_bits,
+                  max_bits=max_bits,
+                  ovf_bits=_F16_EXP_MASK if fmt.has_inf else 0x7E00)
+
+
+def sr_fp8_from_bits(h_bits: Array, rand: Array, fmt: FloatFormat = E5M2, *,
+                     saturate: bool = True) -> Array:
+    """Exact fp8 stochastic rounding given *prescaled* fp16 bit patterns plus
+    random bits (only the low `drop_bits` are used; masking a wider uniform
+    draw is fine). Pure uint16 math — shared verbatim with the Pallas
+    kernels (ref oracles and kernel bodies all call this). The result is the
+    prescaled fp16 pattern; undo the prescale before casting to fmt.dtype
+    (`sr_fp8_via_f16` does both ends).
+    """
+    spec = sr_spec(fmt)
+    mask = jnp.uint16((1 << spec.drop_bits) - 1)
     h_bits = h_bits.astype(jnp.uint16)
     sign = h_bits & _F16_SIGN_MASK
     mag = h_bits & _F16_MAG_MASK
     finite = mag < _F16_EXP_MASK
-    bumped = mag + (rand8.astype(jnp.uint16) & jnp.uint16(0xFF))
-    trunc = bumped & jnp.uint16(0xFF00)
+    bumped = mag + (rand.astype(jnp.uint16) & mask)
+    trunc = bumped & ~mask
     if saturate:
-        trunc = jnp.minimum(trunc, jnp.uint16(_E5M2_MAX_F16_BITS))
+        trunc = jnp.minimum(trunc, jnp.uint16(spec.max_bits))
     else:
-        # Rounding up past max normal lands exactly on the inf pattern 0x7C00.
-        trunc = jnp.minimum(trunc, jnp.uint16(_F16_EXP_MASK))
-    out_mag = jnp.where(finite, trunc, mag & jnp.uint16(0xFF00) | (mag & jnp.uint16(0x0200)))
+        # Rounding up past max normal overflows: to the inf pattern for IEEE
+        # formats (e5m2: 0x7B00 + 0x100 lands exactly on 0x7C00), to a NaN
+        # pattern for the inf-less fn formats (e4m3).
+        trunc = jnp.where(trunc > jnp.uint16(spec.max_bits),
+                          jnp.uint16(spec.ovf_bits), trunc)
+    out_mag = jnp.where(finite, trunc, mag & ~mask | (mag & jnp.uint16(0x0200)))
     # (non-finite: preserve inf/nan; keep a nan-signalling mantissa bit)
     return sign | out_mag
 
 
-def quantize_sr_e5m2(x: Array, key: Array, *, saturate: bool = True) -> Array:
-    """Stochastically round into e5m2 (the paper's SR, exact on the fp16 grid)."""
+def sr_e5m2_from_bits(h_bits: Array, rand8: Array, *,
+                      saturate: bool = True) -> Array:
+    """Back-compat alias for the e5m2-hardwired helper name."""
+    return sr_fp8_from_bits(h_bits, rand8, E5M2, saturate=saturate)
+
+
+def sr_fp8_via_f16(x: Array, rand: Array, fmt: FloatFormat = E5M2, *,
+                   saturate: bool = True) -> Array:
+    """Stochastically round `x` into fmt.dtype via the exact fp16 bit-twiddle
+    (prescale -> twiddle -> unscale -> storage cast). `rand` supplies the
+    random bits (uint; low `sr_spec(fmt).drop_bits` used)."""
+    spec = sr_spec(fmt)
     if saturate:
         # Clamp before the f16 step so |x| beyond fp16 range cannot escape to
         # inf around the bit-twiddle's finite-only path. Dtype-preserving:
-        # 57344 is exact in bf16/f16/f32.
-        lo = jnp.asarray(-E5M2.max_normal, x.dtype)
-        hi = jnp.asarray(E5M2.max_normal, x.dtype)
+        # the fp8 max normals are exact in bf16/f16/f32.
+        lo = jnp.asarray(-fmt.max_normal, x.dtype)
+        hi = jnp.asarray(fmt.max_normal, x.dtype)
         x = jnp.where(jnp.isnan(x), x, jnp.clip(x, lo, hi))
+    if spec.pre_exp:
+        x = x * jnp.asarray(2.0 ** spec.pre_exp, x.dtype)
     h = x.astype(jnp.float16)
-    bits = _f16_bits(h)
-    rand8 = jax.random.bits(key, bits.shape, jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, rand8, saturate=saturate)
-    return _bits_f16(out_bits).astype(jnp.float8_e5m2)
+    out_bits = sr_fp8_from_bits(_f16_bits(h), rand, fmt, saturate=saturate)
+    out = _bits_f16(out_bits)
+    if spec.pre_exp:
+        # Exact: every prescaled grid point times 2**-pre_exp is on the fmt
+        # grid and representable in fp16 (max_normal <= 448 <= f16 max).
+        out = out * jnp.float16(2.0 ** -spec.pre_exp)
+    return out.astype(fmt.dtype)
+
+
+def quantize_sr_fp8(x: Array, key: Array, fmt: FloatFormat = E5M2, *,
+                    saturate: bool = True) -> Array:
+    """Stochastically round into an fp16-embeddable fp8 format (exact on the
+    fp16 grid — the paper's SR, format-generalized)."""
+    rand = jax.random.bits(key, x.shape, jnp.uint16)
+    return sr_fp8_via_f16(x, rand, fmt, saturate=saturate)
+
+
+def quantize_sr_e5m2(x: Array, key: Array, *, saturate: bool = True) -> Array:
+    """Back-compat alias: SR into e5m2 (the paper's format)."""
+    return quantize_sr_fp8(x, key, E5M2, saturate=saturate)
 
 
 def quantize_sr_grid(x: Array, fmt: FloatFormat, key: Array, *,
@@ -203,8 +273,11 @@ def quantize_sr_grid(x: Array, fmt: FloatFormat, key: Array, *,
 
 def quantize_sr(x: Array, fmt: FloatFormat, key: Array, *,
                 saturate: bool = True) -> Array:
-    if fmt.name == "e5m2":
-        return quantize_sr_e5m2(x, key, saturate=saturate)
+    # Both fp8 storage formats use the exact fp16 bit-twiddle (one source of
+    # truth with the Pallas kernels); the float grid path covers formats
+    # without an fp16 embedding (emulation-only ablations).
+    if fmt.name in ("e5m2", "e4m3"):
+        return quantize_sr_fp8(x, key, fmt, saturate=saturate)
     return quantize_sr_grid(x, fmt, key, saturate=saturate)
 
 

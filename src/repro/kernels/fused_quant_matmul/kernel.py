@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantize import sr_e5m2_from_bits
+from repro.core.fp8_formats import get_format
+from repro.core.quantize import sr_fp8_via_f16
 from repro.kernels.compat import CompilerParams as _CompilerParams
 
 DEFAULT_BM = 256
@@ -31,22 +32,19 @@ DEFAULT_BK = 512
 DEFAULT_BN = 256
 
 
-def _quantize_tile(acc, rand8, inv_scale, *, rounding: str, saturate: bool):
+def _quantize_tile(acc, rand8, inv_scale, *, fmt_name: str, rounding: str,
+                   saturate: bool):
+    fmt = get_format(fmt_name)
     y = acc * inv_scale
     if rounding == "rne":
         if saturate:
-            y = jnp.clip(y, -57344.0, 57344.0)
-        return y.astype(jnp.float8_e5m2)
-    h = y.astype(jnp.float16)
-    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, rand8.astype(jnp.uint16),
-                                 saturate=saturate)
-    return jax.lax.bitcast_convert_type(out_bits, jnp.float16).astype(
-        jnp.float8_e5m2)
+            y = jnp.clip(y, -fmt.max_normal, fmt.max_normal)
+        return y.astype(fmt.dtype)
+    return sr_fp8_via_f16(y, rand8, fmt, saturate=saturate)
 
 
 def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
-          rounding: str, saturate: bool, n_k: int):
+          fmt_name: str, rounding: str, saturate: bool, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -59,11 +57,12 @@ def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
     def _epilogue():
         inv = 1.0 / scale_ref[0]
         o_ref[...] = _quantize_tile(acc_ref[...], rand_ref[...], inv,
-                                    rounding=rounding, saturate=saturate)
+                                    fmt_name=fmt_name, rounding=rounding,
+                                    saturate=saturate)
 
 
 def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
-               rounding: str, saturate: bool, n_k: int):
+               fmt_name: str, rounding: str, saturate: bool, n_k: int):
     """_body plus a per-tile amax epilogue output for delayed scaling: the
     observed amax of the quantized tile is computed from the f32 values
     while they are STILL IN VMEM — the observation costs no extra pass over
@@ -80,7 +79,8 @@ def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
     def _epilogue():
         inv = 1.0 / scale_ref[0]
         q = _quantize_tile(acc_ref[...], rand_ref[...], inv,
-                           rounding=rounding, saturate=saturate)
+                           fmt_name=fmt_name, rounding=rounding,
+                           saturate=saturate)
         o_ref[...] = q
         # amax of the *quantized* values, de-scaled back to real units —
         # exactly what ScaleState history records.
@@ -90,11 +90,12 @@ def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
 
 def fused_quant_matmul_kernel(a, b, rand8, scale, *,
                               bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN,
+                              out_format: str = "e5m2",
                               rounding: str = "sr", saturate: bool = True,
                               with_amax: bool = False,
                               interpret: bool = False):
     """a: (M,K) fp8, b: (K,N) fp8, rand8: (M,N) u8, scale: (1,) f32
-    -> (M,N) e5m2 quantized output (value semantics: Q((a@b)/scale)).
+    -> (M,N) fp8 output in `out_format` (value semantics: Q((a@b)/scale)).
     with_amax=True additionally returns a (grid_m, grid_n) f32 array of
     per-tile observed amaxes (reduce with jnp.max for the scalar)."""
     m, k = a.shape
@@ -115,20 +116,21 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )
+    out_dtype = get_format(out_format).dtype
     if not with_amax:
         return pl.pallas_call(
-            functools.partial(_body, rounding=rounding, saturate=saturate,
-                              n_k=grid[2]),
+            functools.partial(_body, fmt_name=out_format, rounding=rounding,
+                              saturate=saturate, n_k=grid[2]),
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
             **common,
         )(a, b, rand8, scale)
     return pl.pallas_call(
-        functools.partial(_body_amax, rounding=rounding, saturate=saturate,
-                          n_k=grid[2]),
+        functools.partial(_body_amax, fmt_name=out_format, rounding=rounding,
+                          saturate=saturate, n_k=grid[2]),
         out_specs=(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
                    pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))),
-        out_shape=(jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        out_shape=(jax.ShapeDtypeStruct((m, n), out_dtype),
                    jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32)),
         **common,
     )(a, b, rand8, scale)

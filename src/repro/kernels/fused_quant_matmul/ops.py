@@ -17,15 +17,17 @@ def _pad_to(x, mult0, mult1):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "rounding",
-                                             "saturate", "with_amax",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_format",
+                                             "rounding", "saturate",
+                                             "with_amax", "interpret"))
 def fused_quant_matmul(a, b, key, scale=None, *,
                        bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
+                       out_format: str = "e5m2",
                        rounding: str = "sr", saturate: bool = True,
                        with_amax: bool = False,
                        interpret: bool = False):
-    """Q((a @ b) / scale) -> e5m2, with the Q node fused into the epilogue.
+    """Q((a @ b) / scale) -> fp8 in `out_format` ('e5m2' | 'e4m3'), with the
+    Q node fused into the epilogue.
 
     with_amax=True returns (out, amax): the observed amax of the quantized
     output (delayed-scaling observation), computed in the epilogue while the
@@ -44,6 +46,7 @@ def fused_quant_matmul(a, b, key, scale=None, *,
         else jnp.zeros((mp, np_), jnp.uint8)
     out = _k.fused_quant_matmul_kernel(ap, bp, rand8, scale,
                                        bm=bm_, bk=bk_, bn=bn_,
+                                       out_format=out_format,
                                        rounding=rounding, saturate=saturate,
                                        with_amax=with_amax,
                                        interpret=interpret)

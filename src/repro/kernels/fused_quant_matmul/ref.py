@@ -4,21 +4,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import sr_e5m2_from_bits
+from repro.core.fp8_formats import get_format
+from repro.core.quantize import sr_fp8_via_f16
 
 
-def fused_quant_matmul_ref(a, b, rand8, scale, *, rounding: str = "sr",
-                           saturate: bool = True):
+def fused_quant_matmul_ref(a, b, rand8, scale, *, out_format: str = "e5m2",
+                           rounding: str = "sr", saturate: bool = True):
+    fmt = get_format(out_format)
     acc = jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
                   preferred_element_type=jnp.float32)
     y = acc * (1.0 / scale.reshape(()))
     if rounding == "rne":
         if saturate:
-            y = jnp.clip(y, -57344.0, 57344.0)
-        return y.astype(jnp.float8_e5m2)
-    h = y.astype(jnp.float16)
-    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, rand8.astype(jnp.uint16),
-                                 saturate=saturate)
-    return jax.lax.bitcast_convert_type(out_bits, jnp.float16).astype(
-        jnp.float8_e5m2)
+            y = jnp.clip(y, -fmt.max_normal, fmt.max_normal)
+        return y.astype(fmt.dtype)
+    return sr_fp8_via_f16(y, rand8, fmt, saturate=saturate)

@@ -1,4 +1,7 @@
-from repro.kernels.stochastic_round.ops import stochastic_round_e5m2
-from repro.kernels.stochastic_round.ref import stochastic_round_e5m2_ref
+from repro.kernels.stochastic_round.ops import (stochastic_round_e5m2,
+                                                stochastic_round_fp8)
+from repro.kernels.stochastic_round.ref import (stochastic_round_e5m2_ref,
+                                                stochastic_round_fp8_ref)
 
-__all__ = ["stochastic_round_e5m2", "stochastic_round_e5m2_ref"]
+__all__ = ["stochastic_round_fp8", "stochastic_round_fp8_ref",
+           "stochastic_round_e5m2", "stochastic_round_e5m2_ref"]

@@ -1,10 +1,12 @@
-"""Pallas TPU kernel: stochastic rounding f32/bf16 -> e5m2 (paper §3.2).
+"""Pallas TPU kernel: stochastic rounding f32/bf16 -> fp8 (paper §3.2).
 
 TPU adaptation of the paper's SR: the paper argues SR belongs in the
 *epilogue*, not in the MAC path — on TPU that means a VPU pass over the
 output tile while it is still in VMEM. The rounding itself is the exact
-fp16 bit-twiddle (add 8 uniform random bits below the e5m2 mantissa, then
-truncate), shared bit-for-bit with repro.core.quantize.sr_e5m2_from_bits.
+fp16 bit-twiddle (add uniform random bits below the kept mantissa, then
+truncate; e4m3 goes through a power-of-two prescale first), shared
+bit-for-bit with repro.core.quantize.sr_fp8_via_f16 — the kernel is
+format-parameterized over float8_e5m2 and float8_e4m3fn.
 
 Randomness: two sources, selected at trace time —
  * rand operand (uint8 tile streamed from HBM) — validated in interpret mode
@@ -23,7 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantize import sr_e5m2_from_bits
+from repro.core.fp8_formats import get_format
+from repro.core.quantize import sr_fp8_via_f16
 from repro.kernels.compat import CompilerParams as _CompilerParams
 
 # Block shape: 8x128 VPU lanes; 512x1024 f32 = 2 MiB in + 0.5 MiB out per
@@ -31,38 +34,36 @@ from repro.kernels.compat import CompilerParams as _CompilerParams
 DEFAULT_BLOCK = (512, 1024)
 
 
-def _sr_body(x_ref, rand_ref, scale_ref, o_ref, *, saturate: bool):
+def _sr_body(x_ref, rand_ref, scale_ref, o_ref, *, fmt_name: str,
+             saturate: bool):
+    fmt = get_format(fmt_name)
     inv = 1.0 / scale_ref[0]
-    h = (x_ref[...].astype(jnp.float32) * inv).astype(jnp.float16)
-    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
-    r8 = rand_ref[...].astype(jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, r8, saturate=saturate)
-    o_ref[...] = jax.lax.bitcast_convert_type(
-        out_bits, jnp.float16).astype(jnp.float8_e5m2)
+    y = x_ref[...].astype(jnp.float32) * inv
+    o_ref[...] = sr_fp8_via_f16(y, rand_ref[...], fmt, saturate=saturate)
 
 
-def _sr_body_onchip(seed_ref, x_ref, scale_ref, o_ref, *, saturate: bool):
+def _sr_body_onchip(seed_ref, x_ref, scale_ref, o_ref, *, fmt_name: str,
+                    saturate: bool):
+    fmt = get_format(fmt_name)
     # Per-block seed decorrelation: fold the grid position into the seed.
     i, j = pl.program_id(0), pl.program_id(1)
     pltpu.prng_seed(seed_ref[0] + i * pl.num_programs(1) + j)
     r = pltpu.prng_random_bits(x_ref.shape)
     r8 = (r & 0xFF).astype(jnp.uint16)
     inv = 1.0 / scale_ref[0]
-    h = (x_ref[...].astype(jnp.float32) * inv).astype(jnp.float16)
-    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, r8, saturate=saturate)
-    o_ref[...] = jax.lax.bitcast_convert_type(
-        out_bits, jnp.float16).astype(jnp.float8_e5m2)
+    y = x_ref[...].astype(jnp.float32) * inv
+    o_ref[...] = sr_fp8_via_f16(y, r8, fmt, saturate=saturate)
 
 
 def sr_quantize_kernel(x, rand8, scale, *, block=DEFAULT_BLOCK,
-                       saturate: bool = True, interpret: bool = False):
-    """x: (M, N) float; rand8: (M, N) uint8; scale: (1,) f32 -> (M, N) e5m2."""
+                       fmt: str = "e5m2", saturate: bool = True,
+                       interpret: bool = False):
+    """x: (M, N) float; rand8: (M, N) uint8; scale: (1,) f32 -> (M, N) fp8."""
     m, n = x.shape
     bm, bn = min(block[0], m), min(block[1], n)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
     return pl.pallas_call(
-        functools.partial(_sr_body, saturate=saturate),
+        functools.partial(_sr_body, fmt_name=fmt, saturate=saturate),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
@@ -70,7 +71,7 @@ def sr_quantize_kernel(x, rand8, scale, *, block=DEFAULT_BLOCK,
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        out_shape=jax.ShapeDtypeStruct((m, n), get_format(fmt).dtype),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
@@ -78,13 +79,13 @@ def sr_quantize_kernel(x, rand8, scale, *, block=DEFAULT_BLOCK,
 
 
 def sr_quantize_kernel_onchip(x, seed, scale, *, block=DEFAULT_BLOCK,
-                              saturate: bool = True):
+                              fmt: str = "e5m2", saturate: bool = True):
     """Production TPU variant using the on-chip PRNG (no rand operand)."""
     m, n = x.shape
     bm, bn = min(block[0], m), min(block[1], n)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
     return pl.pallas_call(
-        functools.partial(_sr_body_onchip, saturate=saturate),
+        functools.partial(_sr_body_onchip, fmt_name=fmt, saturate=saturate),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -92,7 +93,7 @@ def sr_quantize_kernel_onchip(x, seed, scale, *, block=DEFAULT_BLOCK,
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        out_shape=jax.ShapeDtypeStruct((m, n), get_format(fmt).dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(seed, x, scale)

@@ -4,15 +4,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import sr_e5m2_from_bits
+from repro.core.fp8_formats import get_format
+from repro.core.quantize import sr_fp8_via_f16
+
+
+def stochastic_round_fp8_ref(x, rand8, scale, *, fmt: str = "e5m2",
+                             saturate: bool = True):
+    """Bit-exact reference: same math as the kernel, no tiling."""
+    inv = (1.0 / scale.reshape(())).astype(jnp.float32)
+    y = x.astype(jnp.float32) * inv
+    return sr_fp8_via_f16(y, rand8, get_format(fmt), saturate=saturate)
 
 
 def stochastic_round_e5m2_ref(x, rand8, scale, *, saturate: bool = True):
-    """Bit-exact reference: same math as the kernel, no tiling."""
-    inv = (1.0 / scale.reshape(())).astype(jnp.float32)
-    h = (x.astype(jnp.float32) * inv).astype(jnp.float16)
-    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
-    out_bits = sr_e5m2_from_bits(bits, rand8.astype(jnp.uint16),
-                                 saturate=saturate)
-    return jax.lax.bitcast_convert_type(out_bits, jnp.float16).astype(
-        jnp.float8_e5m2)
+    """Back-compat alias for the e5m2-hardwired name."""
+    return stochastic_round_fp8_ref(x, rand8, scale, fmt="e5m2",
+                                    saturate=saturate)

@@ -29,7 +29,8 @@ import jax
 
 from repro.launch.mesh import (enter_mesh, jit_shardings,
                                make_production_mesh)
-from repro.launch.specs import GRID_ARCHS, SHAPES, build_cell, cell_supported
+from repro.launch.specs import (GRID_ARCHS, SHAPES, build_cell,
+                               cell_supported, parse_overrides)
 
 COLLECTIVE_RE = re.compile(
     r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
@@ -76,7 +77,7 @@ def parse_collectives(hlo_text: str) -> dict:
 
 def run_cell(arch: str, shape: str, mesh_kind: str, *,
              unroll: bool = False, out_dir: Path,
-             probe_groups: int = 0) -> dict:
+             probe_groups: int = 0, overrides: dict = None) -> dict:
     """probe_groups > 0: compile an UNROLLED variant with that many pattern
     groups of layers (n_layers = groups * len(pattern)) — two probes give
     per-group cost deltas that the roofline analysis extrapolates to full
@@ -86,16 +87,18 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
                probe_groups=probe_groups,
                n_devices=mesh.devices.size, status="pending")
     t0 = time.time()
-    overrides = None
+    overrides = dict(overrides or {})
+    rec["overrides"] = overrides
     if probe_groups:
         from repro.models.registry import build_config
         full = build_config(arch)
         plen = len(full.pattern())
-        overrides = {"n_layers": probe_groups * plen}
+        overrides["n_layers"] = probe_groups * plen
         if full.is_encoder_decoder:
             overrides["n_encoder_layers"] = probe_groups
         unroll = True
         rec["unroll"] = True
+    overrides = overrides or None
     try:
         with enter_mesh(mesh):
             cell = build_cell(arch, shape, mesh, unroll_layers=unroll,
@@ -163,8 +166,14 @@ def main():
     ap.add_argument("--probe", action="store_true",
                     help="compile 1-group and 2-group unrolled probes "
                          "(roofline extrapolation inputs)")
+    ap.add_argument("--set", nargs="*", default=[], dest="overrides",
+                    help="key=value ModelConfig/policy overrides, e.g. "
+                         "policy.quant.recipe=hybrid "
+                         "policy.quant.scaling=delayed")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    overrides = parse_overrides(args.overrides)
 
     out_dir = Path(args.out)
     archs = GRID_ARCHS if (args.all or not args.arch) else [args.arch]
@@ -188,11 +197,13 @@ def main():
                     for g in (1, 2):
                         results.append(run_cell(arch, shape, mk,
                                                 probe_groups=g,
-                                                out_dir=out_dir))
+                                                out_dir=out_dir,
+                                                overrides=overrides))
                 else:
                     results.append(run_cell(arch, shape, mk,
                                             unroll=args.unroll,
-                                            out_dir=out_dir))
+                                            out_dir=out_dir,
+                                            overrides=overrides))
     n_ok = sum(r["status"] == "ok" for r in results)
     print(f"[dryrun] {n_ok}/{len(results)} cells compiled")
     if results and n_ok < len(results):

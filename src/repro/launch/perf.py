@@ -21,7 +21,7 @@ import jax
 from repro.launch.dryrun import parse_collectives
 from repro.launch.mesh import (enter_mesh, jit_shardings,
                                make_production_mesh)
-from repro.launch.specs import build_cell
+from repro.launch.specs import build_cell, parse_overrides
 from repro.roofline.analysis import analyze_record
 
 
@@ -87,20 +87,7 @@ def main():
     ap.add_argument("--set", nargs="*", default=[],
                     help="key=value ModelConfig/policy overrides")
     args = ap.parse_args()
-    overrides = {}
-    for kv in args.set:
-        k, v = kv.split("=", 1)
-        for cast in (int, float):
-            try:
-                v = cast(v)
-                break
-            except ValueError:
-                continue
-        if v == "true":
-            v = True
-        elif v == "false":
-            v = False
-        overrides[k] = v
+    overrides = parse_overrides(args.set)
     run_variant(args.arch, args.shape, args.variant, overrides,
                 unroll=args.unroll)
 

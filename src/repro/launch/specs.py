@@ -53,6 +53,26 @@ GRID_ARCHS = [
 SUBQUADRATIC = ("ssm", "hybrid")
 
 
+def parse_overrides(pairs) -> Dict[str, Any]:
+    """`--set key=value` strings -> build_cell overrides dict (shared by the
+    dryrun and perf CLIs; int/float/bool coercion, strings otherwise)."""
+    overrides: Dict[str, Any] = {}
+    for kv in pairs:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v == "true":
+            v = True
+        elif v == "false":
+            v = False
+        overrides[k] = v
+    return overrides
+
+
 def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
     cfg = build_config(arch, smoke=True)   # family lookup only
     if shape == "long_500k" and cfg.family not in SUBQUADRATIC:
@@ -202,8 +222,35 @@ def build_cell(arch: str, shape: str, mesh, *,
                 and force_sp is not False:
             cfg = cfg.replace(sequence_parallel=True)
             meta["sequence_parallel"] = True
+        # Delayed per-tensor scaling at production shapes: when the cell's
+        # QuantConfig asks for it (e.g. overrides {'policy.quant.scaling':
+        # 'delayed', 'policy.quant.recipe': 'hybrid'}), discover the site
+        # registry from one abstract trace and thread a ScaleState through
+        # the step — the dry-run then proves the hybrid delayed recipe
+        # lowers, shards, and fits alongside everything else.
+        scaling = None
+        meta["recipe"] = cfg.policy.quant.recipe
+        meta["scaling"] = cfg.policy.quant.scaling
+        if cfg.policy.quant.scaling == "delayed":
+            from repro.scaling.calibrate import discover_lm_sites
+            from repro.scaling.state import DelayedScaling
+            registry = discover_lm_sites(cfg, params_s, batch_s)
+            scaling = DelayedScaling(registry, qcfg=cfg.policy.quant)
+            meta["scale_rows"] = len(registry)
         fn = make_train_step(cfg, opt, n_microbatches=n_mb,
-                             grad_shardings=mspecs)
+                             grad_shardings=mspecs, scaling=scaling)
+        if scaling is not None:
+            sstate_s = _shaped(scaling.init)
+            metrics_s = _shaped(fn, state_s, sstate_s, batch_s,
+                                jax.random.PRNGKey(0))[1]
+            return dict(
+                fn=fn, args=(state_s, sstate_s, batch_s, key_s),
+                in_shardings=(state_specs_tree, replicated(sstate_s),
+                              bspecs, P()),
+                out_shardings=((state_specs_tree, replicated(sstate_s)),
+                               replicated(metrics_s)),
+                donate_argnums=(0, 1),
+                meta=meta)
         metrics_s = _shaped(fn, state_s, batch_s, jax.random.PRNGKey(0))[1]
         return dict(
             fn=fn, args=(state_s, batch_s, key_s),

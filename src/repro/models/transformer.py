@@ -270,25 +270,47 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             stacked_states = tuple(states[f"stack_{p}"]
                                    for p in range(len(pat)))
 
+        # Per-layer scale sites: sites inside the scan body are registered
+        # with multiplicity n_groups (scope(..., layers=)), so the registry
+        # holds one ScaleState row per LAYER, not per stack position. The
+        # stacked (n_groups,) scale vectors and (n_groups, 2) E/G tokens of
+        # those sites are threaded through the scan as xs — each iteration
+        # reads ITS layer's scale slice (layer_view), and each iteration's
+        # observations exit per-layer through the aux ys / stacked token
+        # cotangents instead of being max-collapsed over the group.
+        ctx = scale_ctx.current()
+        thread_scales: Dict[str, Array] = {}
+        thread_tokens: Dict[str, Array] = {}
+        if ctx is not None and ctx.mode in ("collect", "calibrate"):
+            pfx = ctx.scope_prefix()
+            for k, v in ctx.scales.items():
+                if k.startswith(pfx) and k[len(pfx):].startswith("stack_") \
+                        and getattr(v, "ndim", 0) == 1 \
+                        and v.shape[0] == n_groups:
+                    thread_scales[k] = jnp.asarray(v, jnp.float32)
+            for s, t in ctx.tokens.items():
+                if s.startswith(pfx) and s[len(pfx):].startswith("stack_") \
+                        and getattr(t, "ndim", 0) == 2 \
+                        and t.shape[0] == n_groups:
+                    thread_tokens[s] = t
+
         def body(carry, xs):
             hh, gi = carry
-            gp = xs[0]
-            gs = xs[1] if states is not None else (None,) * len(pat)
+            gp = xs["params"]
+            gs = xs.get("states", (None,) * len(pat))
             outs = []
             all_aux = {}
-            for p, kind in enumerate(pat):
-                lkey = None if qkey is None else jax.random.fold_in(
-                    qkey, key_base + gi * len(pat) + p)
-                # Scanned groups share one scaling site per stack position:
-                # every scan iteration reads the same per-site scale and the
-                # observations are max-combined over the scan axis below.
-                with scale_ctx.scope(f"stack_{p}"):
-                    hh, ns, aux = apply_layer(
-                        gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg, qkey=lkey,
-                        positions=positions, mode=mode, state=gs[p],
-                        enc_out=enc_out)
-                outs.append(ns)
-                _merge_aux(all_aux, aux)
+            with scale_ctx.layer_view(xs["scales"], xs["tokens"]):
+                for p, kind in enumerate(pat):
+                    lkey = None if qkey is None else jax.random.fold_in(
+                        qkey, key_base + gi * len(pat) + p)
+                    with scale_ctx.scope(f"stack_{p}", layers=n_groups):
+                        hh, ns, aux = apply_layer(
+                            gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg,
+                            qkey=lkey, positions=positions, mode=mode,
+                            state=gs[p], enc_out=enc_out)
+                    outs.append(ns)
+                    _merge_aux(all_aux, aux)
             if cfg.sequence_parallel and mode in ("train", "prefill"):
                 # Keep the scan carry (= the saved remat residual)
                 # sequence-sharded; applied at body END so the stored value
@@ -300,20 +322,28 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
 
         body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") \
             else body
-        xs = (stacked_params,) if states is None \
-            else (stacked_params, stacked_states)
+        xs = {"params": stacked_params,
+              "scales": thread_scales, "tokens": thread_tokens}
+        if states is not None:
+            xs["states"] = stacked_states
         # Token-use accounting: the body is traced once but runs n_groups
         # times, so E/G token cotangents of sites inside it accumulate over
         # the whole group — record the multiplicity for normalization.
+        # Threaded (per-layer) sites are excluded: their cotangents come
+        # back stacked, one row per layer, never summed over the group.
         use_snap = scale_ctx.token_use_snapshot()
         (h, _), (out_states, aux_stack) = jax.lax.scan(body_fn, (h, 0), xs)
-        scale_ctx.amplify_token_uses(use_snap, n_groups)
+        scale_ctx.amplify_token_uses(use_snap, n_groups,
+                                     exclude=set(thread_tokens))
         for k, v in aux_stack.items():
             if k == "_":
                 continue
-            # Reduce over the scan (layer-group) axis: amax observations by
-            # max (shared site across the group), aux losses by sum.
-            red = v.max() if k.startswith(AMAX_PREFIX) else v.sum()
+            if k.startswith(AMAX_PREFIX):
+                # Per-layer threaded sites keep their (n_groups,) amax
+                # trajectory; legacy shared sites reduce by max as before.
+                red = v if k[len(AMAX_PREFIX):] in thread_scales else v.max()
+            else:
+                red = v.sum()   # aux losses sum over the group
             add_aux({k: red})
         if states is not None:
             for p in range(len(pat)):

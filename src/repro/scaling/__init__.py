@@ -7,10 +7,12 @@ synchronization via a single fused pmax, and a calibrate->freeze path for
 deterministic quantized serving. See scaling.state and scaling.context.
 """
 from repro.scaling.calibrate import (calibrate, discover_lm_sites,
-                                     discover_sites, freeze, load_frozen,
-                                     save_frozen)
+                                     discover_sites, freeze,
+                                     freeze_with_formats, load_frozen,
+                                     load_frozen_formats, save_frozen)
 from repro.scaling.context import (activate, collect_context,
-                                   discover_context, frozen_context, scope)
+                                   discover_context, frozen_context,
+                                   layer_view, scope)
 from repro.scaling.state import (DelayedScaling, ScaleState, ScalingConfig,
                                  SiteRegistry, amax_from_history,
                                  split_observations)
@@ -19,7 +21,8 @@ __all__ = [
     "DelayedScaling", "ScaleState", "ScalingConfig", "SiteRegistry",
     "amax_from_history", "split_observations",
     "calibrate", "discover_sites", "discover_lm_sites", "freeze",
-    "save_frozen", "load_frozen",
+    "freeze_with_formats", "save_frozen", "load_frozen",
+    "load_frozen_formats",
     "activate", "collect_context", "discover_context", "frozen_context",
-    "scope",
+    "layer_view", "scope",
 ]

@@ -45,11 +45,16 @@ def _delayed_eval_cfg(cfg: ModelConfig) -> ModelConfig:
 
 def discover_sites(fn: Callable, *args) -> SiteRegistry:
     """Abstractly trace `fn(*args)` (jax.eval_shape — no FLOPs) with a
-    discovery context; returns the registry of every site it quantizes."""
+    discovery context; returns the registry of every site it quantizes.
+    Sites inside scanned stacks carry their layer multiplicity, so the
+    registry allocates one ScaleState row per layer (not per stack
+    position)."""
     ctx = scale_ctx.discover_context()
     with scale_ctx.activate(ctx):
         jax.eval_shape(fn, *args)
-    return SiteRegistry(ctx.discovered, ctx.discovered_token_sites)
+    return SiteRegistry(ctx.discovered, ctx.discovered_token_sites,
+                        site_layers=ctx.discovered_layers,
+                        token_site_layers=ctx.discovered_token_layers)
 
 
 def discover_lm_sites(cfg: ModelConfig, params, batch) -> SiteRegistry:
@@ -108,7 +113,7 @@ def calibrate(params, cfg: ModelConfig, batches: Iterable, *,
     state = ds.init()
 
     def observe(p, b, scale_vec):
-        scales = {k: scale_vec[i] for k, i in registry.index.items()}
+        scales = registry.unpack(scale_vec)
         with scale_ctx.activate(scale_ctx.calibrate_context(scales)):
             aux = _fwd(p, b)
             aux.update(scale_ctx.drain_aux())
@@ -127,12 +132,43 @@ def freeze(ds: DelayedScaling, state: ScaleState) -> Dict[str, float]:
     return ds.freeze(state)
 
 
-def save_frozen(directory, scales: Dict[str, float]):
+def freeze_with_formats(ds: DelayedScaling, state: ScaleState,
+                        cfg: Optional[ModelConfig] = None
+                        ) -> Tuple[Dict[str, float], Dict[str, str]]:
+    """(frozen scales, per-site formats) — the formats record what each
+    scale was calibrated under, so serving can refuse a recipe/format
+    mismatch (see ServeEngine(frozen_formats=...))."""
+    kv_format = cfg.policy.kv_cache_format if cfg is not None else None
+    return ds.freeze(state), ds.frozen_formats(kv_format=kv_format)
+
+
+def save_frozen(directory, scales: Dict[str, float],
+                formats: Optional[Dict[str, str]] = None):
+    """Persist frozen scales (+ optionally the formats they were calibrated
+    under). Without `formats` the legacy plain-scales layout is written."""
     p = Path(directory)
     p.mkdir(parents=True, exist_ok=True)
-    (p / FROZEN_SCALES_FILE).write_text(json.dumps(scales, indent=1,
+    doc = scales if formats is None else {"scales": scales,
+                                          "formats": formats}
+    (p / FROZEN_SCALES_FILE).write_text(json.dumps(doc, indent=1,
                                                    sort_keys=True))
 
 
-def load_frozen(directory) -> Dict[str, float]:
+def _load_doc(directory) -> dict:
     return json.loads((Path(directory) / FROZEN_SCALES_FILE).read_text())
+
+
+def load_frozen(directory) -> Dict[str, float]:
+    doc = _load_doc(directory)
+    if isinstance(doc.get("scales"), dict):   # formats-annotated layout
+        return doc["scales"]
+    return doc
+
+
+def load_frozen_formats(directory) -> Dict[str, str]:
+    """Formats sidecar of a frozen-scales file ({} for legacy files that
+    predate format recording)."""
+    doc = _load_doc(directory)
+    if isinstance(doc.get("scales"), dict):
+        return doc.get("formats", {})
+    return {}

@@ -50,10 +50,20 @@ AMAX_PREFIX = "amax/"
 @dataclasses.dataclass
 class ScaleContext:
     mode: str                                   # discover|collect|calibrate|frozen
-    scales: Mapping[str, Any]                   # key -> f32 scalar / float
-    tokens: Mapping[str, Any]                   # site -> f32[2] (E/G channel)
+    scales: Mapping[str, Any]                   # key -> f32 scalar / float,
+    #                                             or (n_layers,) vector for
+    #                                             per-layer scanned-stack sites
+    tokens: Mapping[str, Any]                   # site -> f32[2] (E/G channel),
+    #                                             or f32[n_layers, 2] stacked
     discovered: Set[str] = dataclasses.field(default_factory=set)
     discovered_token_sites: Set[str] = dataclasses.field(default_factory=set)
+    # Per-layer multiplicity of sites registered inside a layered scope
+    # (scope(name, layers=N) — the scanned-stack body): key/site -> N. The
+    # registry allocates that many ScaleState rows per key, giving true
+    # per-layer sites even though the scan body is traced once.
+    discovered_layers: Dict[str, int] = dataclasses.field(default_factory=dict)
+    discovered_token_layers: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
     collected: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # Trace-time count of token uses per site. A site token used N times
     # (chunked attention, chunked CE, scanned layer groups) accumulates the
@@ -63,22 +73,50 @@ class ScaleContext:
     token_uses: Dict[str, int] = dataclasses.field(default_factory=dict)
     use_sink: Optional[Dict[str, int]] = None
     _scope: List[str] = dataclasses.field(default_factory=list)
+    _layers: List[int] = dataclasses.field(default_factory=list)
+    # Innermost-first stack of per-layer slice views pushed by the scan body
+    # (see layer_view): full-key -> this iteration's scalar scale / (2,)
+    # token, sliced from the stacked xs the caller threads through lax.scan.
+    _layer_scales: List[Mapping[str, Any]] = dataclasses.field(
+        default_factory=list)
+    _layer_tokens: List[Mapping[str, Any]] = dataclasses.field(
+        default_factory=list)
 
     # -- scoping -------------------------------------------------------------
     def site_key(self, site: str) -> str:
         return "/".join(self._scope + [site])
 
+    def scope_prefix(self) -> str:
+        """Current scope path with a trailing '/' (empty scope -> '')."""
+        return "/".join(self._scope + [""])
+
+    def _layer_count(self) -> int:
+        n = 1
+        for m in self._layers:
+            n *= m
+        return n
+
     # -- registry ------------------------------------------------------------
     def register(self, key: str):
         if self.mode == "discover":
             self.discovered.add(key)
+            n = self._layer_count()
+            if n > 1:
+                self.discovered_layers[key] = n
 
     def register_token_site(self, site_key: str):
         if self.mode == "discover":
             self.discovered_token_sites.add(site_key)
+            n = self._layer_count()
+            if n > 1:
+                self.discovered_token_layers[site_key] = n
 
     # -- scale lookup --------------------------------------------------------
     def scale_for(self, key: str, default: float = 1.0):
+        for view in reversed(self._layer_scales):
+            s = view.get(key)
+            if s is not None:
+                return jnp.asarray(s, jnp.float32)
         s = self.scales.get(key)
         if s is None:
             return jnp.asarray(default, jnp.float32)
@@ -94,6 +132,10 @@ class ScaleContext:
     def token_for(self, site_key: str):
         self.register_token_site(site_key)
         self.token_uses[site_key] = self.token_uses.get(site_key, 0) + 1
+        for view in reversed(self._layer_tokens):
+            t = view.get(site_key)
+            if t is not None:
+                return t
         t = self.tokens.get(site_key)
         if t is None:
             return jnp.zeros((2,), jnp.float32)
@@ -139,17 +181,49 @@ def activate(ctx: ScaleContext):
 
 
 @contextlib.contextmanager
-def scope(name: str):
-    """Push a site-scope segment (no-op when no context is active)."""
+def scope(name: str, *, layers: int = 1):
+    """Push a site-scope segment (no-op when no context is active).
+
+    layers > 1 marks a scanned-stack scope: the body is traced once but runs
+    `layers` times, and every site registered inside gets that multiplicity
+    in the registry — one ScaleState row per layer instead of one shared row
+    per stack position.
+    """
     ctx = _ACTIVE
     if ctx is None:
         yield
         return
     ctx._scope.append(name)
+    if layers > 1:
+        ctx._layers.append(layers)
     try:
         yield
     finally:
         ctx._scope.pop()
+        if layers > 1:
+            ctx._layers.pop()
+
+
+@contextlib.contextmanager
+def layer_view(scales: Mapping[str, Any], tokens: Mapping[str, Any]):
+    """Override per-layer sites with this scan iteration's slices.
+
+    The scanned stack threads stacked (n_layers,)-leading scale/token arrays
+    through lax.scan xs; the body pushes the per-iteration slices here so
+    scale_for/token_for resolve to the *current layer's* traced values while
+    everything else still falls through to the shared context mappings.
+    """
+    ctx = _ACTIVE
+    if ctx is None:
+        yield
+        return
+    ctx._layer_scales.append(scales)
+    ctx._layer_tokens.append(tokens)
+    try:
+        yield
+    finally:
+        ctx._layer_scales.pop()
+        ctx._layer_tokens.pop()
 
 
 def drain_aux() -> Dict[str, Any]:
@@ -184,16 +258,20 @@ def token_use_snapshot() -> Optional[Set[str]]:
     return None if ctx is None else set(ctx.token_uses)
 
 
-def amplify_token_uses(snapshot: Optional[Set[str]], factor: int):
+def amplify_token_uses(snapshot: Optional[Set[str]], factor: int,
+                       exclude: Optional[Set[str]] = None):
     """Multiply the use count of sites first touched since `snapshot` by
     `factor`. Called by apply_stack after lax.scan: the scan body is traced
     once, but its token cotangents accumulate over all `factor` iterations
-    at runtime."""
+    at runtime. Sites in `exclude` (per-layer sites whose tokens were
+    threaded through scan xs — their cotangents come back stacked, one row
+    per iteration, not summed over the group) keep their per-iteration
+    count."""
     ctx = _ACTIVE
     if ctx is None or snapshot is None or factor <= 1:
         return
     for k in ctx.token_uses:
-        if k not in snapshot:
+        if k not in snapshot and not (exclude and k in exclude):
             ctx.token_uses[k] *= factor
 
 

@@ -41,6 +41,28 @@ Array = jax.Array
 
 _SAT_TOL = 1.0 - 2.0 ** -8
 
+_CLASS_OF_LETTER = {"W": "weight", "A": "act", "E": "error", "G": "grad"}
+
+
+def format_for_site(key: str, qcfg: QuantConfig,
+                    kv_format: Optional[str] = None) -> Optional[str]:
+    """Storage format a site key quantizes with — THE site->format rule,
+    shared by the freeze side (DelayedScaling.frozen_formats) and the serve
+    side (ServeEngine's format check) so the two can never drift apart.
+
+    FP8 KV-cache sites ('.../kv/{k,v}#A') quantize with the policy's
+    kv_cache_format (returned verbatim — None means no FP8 KV cache);
+    everything else follows the recipe via its class letter."""
+    base = key.split("#", 1)[0]
+    if base.endswith(("kv/k", "kv/v")):
+        return kv_format
+    letter = key.rsplit("#", 1)[1][-1]
+    cls = _CLASS_OF_LETTER.get(letter)
+    if cls is None:
+        raise ValueError(f"unrecognized tensor class {letter!r} in site "
+                         f"key {key!r}")
+    return qcfg.format_for(cls)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -86,32 +108,71 @@ def amax_from_history(history: Array, cfg: ScalingConfig) -> Array:
 
 
 class SiteRegistry:
-    """Stable key -> row mapping for ScaleState vectors (static, not a pytree).
+    """Stable key -> row-span mapping for ScaleState vectors (static, not a
+    pytree).
 
     Keys follow scaling.context's grammar. `token_sites` are the sites with a
-    backward E/G observation channel.
+    backward E/G observation channel. `site_layers` / `token_site_layers`
+    give per-layer multiplicities for sites inside scanned stacks (discovered
+    via scope(..., layers=N)): such a key owns N consecutive ScaleState rows
+    — a true per-layer site even though the scan body is traced once —
+    and its scales/observations are (N,) vectors threaded through scan
+    xs/ys. `index[key]` is the first row; `n_rows[key]` the span (1 for
+    ordinary sites, so the single-row accesses of existing callers are
+    unchanged).
     """
 
-    def __init__(self, keys: Iterable[str], token_sites: Iterable[str] = ()):
+    def __init__(self, keys: Iterable[str], token_sites: Iterable[str] = (),
+                 site_layers: Optional[Mapping[str, int]] = None,
+                 token_site_layers: Optional[Mapping[str, int]] = None):
         self.keys: Tuple[str, ...] = tuple(sorted(set(keys)))
-        self.index: Dict[str, int] = {k: i for i, k in enumerate(self.keys)}
+        site_layers = dict(site_layers or {})
+        self.n_rows: Dict[str, int] = {k: max(1, int(site_layers.get(k, 1)))
+                                       for k in self.keys}
+        self.index: Dict[str, int] = {}
+        row = 0
+        for k in self.keys:
+            self.index[k] = row
+            row += self.n_rows[k]
+        self.total_rows: int = row
         self.token_sites: Tuple[str, ...] = tuple(sorted(set(token_sites)))
+        token_site_layers = dict(token_site_layers or {})
+        self.token_site_layers: Dict[str, int] = {
+            s: max(1, int(token_site_layers.get(s, 1)))
+            for s in self.token_sites}
         # Filled in (python-side) during the training trace: how many times
         # each site's token is used, so summed E/G cotangents can be
         # normalized back to a mean (see context.token_uses).
         self.token_uses: Dict[str, int] = {}
 
     def __len__(self) -> int:
-        return len(self.keys)
+        return self.total_rows
 
     def class_letter(self, key: str) -> str:
         return key.rsplit("#", 1)[1][-1]   # W | A | E | G
 
+    def format_for(self, key: str, qcfg: QuantConfig) -> str:
+        """Storage format a site quantizes with under `qcfg` (per the recipe:
+        W/A -> fwd_format, E/G -> bwd_format)."""
+        return qcfg.fwd_format if self.class_letter(key) in ("W", "A") \
+            else qcfg.bwd_format
+
     def fmt_max_vector(self, qcfg: QuantConfig) -> np.ndarray:
-        fwd = get_format(qcfg.fwd_format).max_normal
-        bwd = get_format(qcfg.bwd_format).max_normal
-        return np.asarray([fwd if self.class_letter(k) in ("W", "A") else bwd
-                           for k in self.keys], np.float32)
+        """(total_rows,) per-row format ceiling — the format-aware scale
+        target: each site's rows map amax onto ITS storage format's grid."""
+        vals = [get_format(self.format_for(k, qcfg)).max_normal
+                for k in self.keys]
+        return np.repeat(np.asarray(vals, np.float32),
+                         [self.n_rows[k] for k in self.keys])
+
+    def unpack(self, vec) -> Dict[str, object]:
+        """Split a (total_rows,) vector into per-key values: a scalar for
+        single-row sites, the (n_rows,) slice for per-layer sites."""
+        out: Dict[str, object] = {}
+        for k in self.keys:
+            i, n = self.index[k], self.n_rows[k]
+            out[k] = vec[i] if n == 1 else vec[i:i + n]
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,12 +188,17 @@ class DelayedScaling:
 
     def zero_tokens(self) -> Dict[str, Array]:
         """Per-site E/G cotangent tokens; pass as a differentiated input of
-        the loss, the token 'gradients' come back as observed bwd amaxes."""
-        return {s: jnp.zeros((2,), jnp.float32)
-                for s in self.registry.token_sites}
+        the loss, the token 'gradients' come back as observed bwd amaxes.
+        Per-layer (scanned-stack) sites get a stacked (n_layers, 2) token
+        whose rows are threaded through scan xs — their cotangents come back
+        one row per layer."""
+        return {s: jnp.zeros((n, 2) if n > 1 else (2,), jnp.float32)
+                for s, n in self.registry.token_site_layers.items()}
 
     def scales_dict(self, state: ScaleState) -> Dict[str, Array]:
-        return {k: state.scale[i] for k, i in self.registry.index.items()}
+        """key -> scale: scalar for ordinary sites, (n_layers,) vector for
+        per-layer scanned-stack sites."""
+        return self.registry.unpack(state.scale)
 
     # -- contexts ------------------------------------------------------------
     def collect(self, state: ScaleState, tokens: Mapping[str, Array]):
@@ -159,14 +225,20 @@ class DelayedScaling:
         prev = state.amax_history[:, 0]
         rows = []
         seen = np.zeros((len(self.registry),), bool)
-        for i, k in enumerate(self.registry.keys):
+        for k in self.registry.keys:
+            i, n = self.registry.index[k], self.registry.n_rows[k]
             v = observed.get(k)
             if v is None:
-                rows.append(prev[i])
+                rows.append(prev[i:i + n])
             else:
-                seen[i] = True
-                rows.append(jnp.asarray(v, jnp.float32).reshape(()))
-        obs = jnp.stack(rows)
+                seen[i:i + n] = True
+                vv = jnp.asarray(v, jnp.float32).reshape((-1,))
+                # Scalar observations of per-layer sites (e.g. an envelope
+                # from an external source) broadcast over the key's rows.
+                rows.append(jnp.broadcast_to(vv, (n,)) if vv.shape[0] != n
+                            else vv)
+        obs = jnp.concatenate(rows) if rows \
+            else jnp.zeros((0,), jnp.float32)
         if sync is not None:
             obs = sync(obs)
         fmax = jnp.asarray(self.registry.fmt_max_vector(self.qcfg))
@@ -193,10 +265,33 @@ class DelayedScaling:
     def freeze(self, state: ScaleState) -> Dict[str, float]:
         """Emit frozen per-site scales for deterministic quantized serving.
         Only forward-path classes (W/A) matter at inference; E/G rows are
-        excluded."""
+        excluded. Per-layer (scanned-stack) sites collapse to their MAX row
+        — the amax envelope over the layers the burned-in constant serves —
+        so serving keeps python-float scales baked into the jitted program.
+        """
         scales = np.asarray(state.scale)
-        return {k: float(scales[i]) for k, i in self.registry.index.items()
-                if self.registry.class_letter(k) in ("W", "A")}
+        out: Dict[str, float] = {}
+        for k in self.registry.keys:
+            if self.registry.class_letter(k) not in ("W", "A"):
+                continue
+            i, n = self.registry.index[k], self.registry.n_rows[k]
+            out[k] = float(scales[i:i + n].max())
+        return out
+
+    def frozen_formats(self, *,
+                       kv_format: Optional[str] = None) -> Dict[str, str]:
+        """Storage format each frozen (forward) site was calibrated under —
+        shipped alongside the frozen scales so serving can refuse a format
+        mismatch (a scale calibrated for the e4m3 grid is 128x off on e5m2).
+        FP8 KV-cache sites ('.../kv/{k,v}#A') quantize with the policy's
+        kv_cache_format, passed as `kv_format`."""
+        out: Dict[str, str] = {}
+        for k in self.registry.keys:
+            if self.registry.class_letter(k) not in ("W", "A"):
+                continue
+            fmt = format_for_site(k, self.qcfg, kv_format)
+            out[k] = fmt or self.registry.format_for(k, self.qcfg)
+        return out
 
 
 def split_observations(metrics: Dict[str, Array],
@@ -219,8 +314,11 @@ def split_observations(metrics: Dict[str, Array],
     for site, tok in token_grads.items():
         inv = 1.0 / max(1, registry.token_uses.get(site, 1))
         ek, gk = f"{site}#E", f"{site}#G"
+        # tok is (2,) for ordinary sites; (n_layers, 2) for per-layer
+        # scanned-stack sites (one cotangent row per scan iteration) —
+        # [..., c] handles both, yielding a scalar or (n_layers,) vector.
         if ek in registry.index:
-            observed[ek] = tok[0] * inv
+            observed[ek] = tok[..., 0] * inv
         if gk in registry.index:
-            observed[gk] = tok[1] * inv
+            observed[gk] = tok[..., 1] * inv
     return observed

@@ -46,14 +46,25 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
-                 frozen_scales: Optional[Dict[str, float]] = None):
+                 frozen_scales: Optional[Dict[str, float]] = None,
+                 frozen_formats: Optional[Dict[str, str]] = None):
         """frozen_scales: calibrated per-site scales (scaling.calibrate
         freeze/load_frozen) — enables deterministic calibrated FP8 inference;
-        the FP8 KV cache consumes its per-layer scales from the same dict."""
+        the FP8 KV cache consumes its per-layer scales from the same dict.
+
+        frozen_formats: per-site storage formats the scales were calibrated
+        under (scaling.calibrate freeze_with_formats / load_frozen_formats).
+        When given, serving refuses to start if this engine's QuantConfig /
+        KV-cache policy would quantize a site in a DIFFERENT format than it
+        was calibrated for — a scale targeting the e4m3 grid is 128x off on
+        the e5m2 grid, a silent-accuracy bug otherwise."""
         self.cfg = cfg
         self.params = params
         self.serve = serve
         self.frozen_scales = frozen_scales
+        self.frozen_formats = frozen_formats
+        if frozen_formats:
+            self._check_formats(frozen_formats)
         self._prefill = jax.jit(make_serve_prefill(cfg, frozen_scales))
         self._decode = jax.jit(make_serve_decode(cfg, frozen_scales))
         b, ml = serve.max_batch, serve.max_len
@@ -63,6 +74,21 @@ class ServeEngine:
         self.positions = np.zeros((b,), np.int64)
         self.last_token = np.zeros((b,), np.int32)
         self._uid = 0
+
+    def _check_formats(self, frozen_formats: Dict[str, str]):
+        from repro.scaling.state import format_for_site
+        quant = self.cfg.policy.quant
+        kv_fmt = self.cfg.policy.kv_cache_format
+        for key, calibrated in frozen_formats.items():
+            # the same site->format rule the freeze side used to record
+            serving = format_for_site(key, quant, kv_fmt)
+            if serving != calibrated:
+                raise ValueError(
+                    f"frozen scale for site {key!r} was calibrated under "
+                    f"format {calibrated!r} but this engine would quantize "
+                    f"it as {serving!r} (recipe={quant.recipe!r}, "
+                    f"kv_cache_format={kv_fmt!r}); recalibrate or fix the "
+                    "serving config")
 
     # -- slot management ------------------------------------------------------
     def free_slots(self) -> List[int]:

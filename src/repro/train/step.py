@@ -113,8 +113,12 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
         (grads, tok_grads, _), (losses, metricses) = jax.lax.scan(
             mb_body, (zero, tzero, 0), mb_batch)
         loss = losses.mean()
-        # Microbatch reduction: amax observations by max, losses by mean.
-        metrics = {k: (v.max() if k.startswith(AMAX_PREFIX) else v.mean())
+        # Microbatch reduction: amax observations by max, losses by mean —
+        # over the MICROBATCH axis only (axis 0): per-layer scanned-stack
+        # observations are (n_groups,) vectors whose layer axis must
+        # survive the reduction.
+        metrics = {k: (v.max(axis=0) if k.startswith(AMAX_PREFIX)
+                       else v.mean())
                    for k, v in metricses.items()}
         return loss, metrics, grads, tok_grads
 

@@ -405,6 +405,60 @@ class TestCalibratedServing:
         save_frozen(tmp_path, scales)
         assert load_frozen(tmp_path) == scales
 
+    def test_frozen_formats_round_trip_json(self, tmp_path):
+        from repro.scaling.calibrate import (load_frozen,
+                                             load_frozen_formats,
+                                             save_frozen)
+        scales = {"decoder/layer_0/attn/wq#a.A": 0.125,
+                  "decoder/layer_0/attn/kv/k#A": 3.5e-4}
+        formats = {"decoder/layer_0/attn/wq#a.A": "e4m3",
+                   "decoder/layer_0/attn/kv/k#A": "e5m2"}
+        save_frozen(tmp_path, scales, formats)
+        assert load_frozen(tmp_path) == scales
+        assert load_frozen_formats(tmp_path) == formats
+
+    def test_legacy_frozen_file_has_no_formats(self, tmp_path):
+        from repro.scaling.calibrate import load_frozen_formats, save_frozen
+        save_frozen(tmp_path, {"s#a.A": 1.0})
+        assert load_frozen_formats(tmp_path) == {}
+
+    def test_engine_refuses_format_mismatch(self):
+        """A scale calibrated for the e4m3 grid served on e5m2 would be
+        silently 128x off — the engine must refuse at construction."""
+        from repro.serve.engine import ServeConfig, ServeEngine
+        from repro.models.transformer import init_lm
+        cfg = _serve_cfg()   # paper recipe (e5m2 W/A), e5m2 KV cache
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scales = {"decoder/layer_0/attn/wq#a.A": 0.25}
+        with pytest.raises(ValueError, match="calibrated under"):
+            ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=16),
+                        frozen_scales=scales,
+                        frozen_formats={"decoder/layer_0/attn/wq#a.A":
+                                        "e4m3"})
+        # KV sites validate against the policy's kv_cache_format
+        with pytest.raises(ValueError, match="kv"):
+            ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=16),
+                        frozen_scales=scales,
+                        frozen_formats={"decoder/layer_0/attn/kv/k#A":
+                                        "e4m3"})
+        # matching formats construct fine
+        ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=16),
+                    frozen_scales=scales,
+                    frozen_formats={"decoder/layer_0/attn/wq#a.A": "e5m2",
+                                    "decoder/layer_0/attn/kv/k#A": "e5m2"})
+
+    def test_freeze_with_formats_matches_recipe(self):
+        from repro.scaling.calibrate import freeze_with_formats
+        from repro.scaling.state import DelayedScaling, SiteRegistry
+        from repro.core.precision_policy import HYBRID_DELAYED_FP8
+        reg = SiteRegistry(["s#a.A", "s#b.W", "s#E",
+                            "dec/attn/kv/k#A"])
+        ds = DelayedScaling(reg, qcfg=HYBRID_DELAYED_FP8)
+        scales, formats = freeze_with_formats(ds, ds.init(), _serve_cfg())
+        assert formats["s#a.A"] == formats["s#b.W"] == "e4m3"
+        assert formats["dec/attn/kv/k#A"] == "e5m2"   # from the KV policy
+        assert "s#E" not in scales and "s#E" not in formats
+
 
 # ---------------------------------------------------------------------------
 # checkpoint round-trip
@@ -457,6 +511,70 @@ class TestAmaxSync:
     def test_none_axis_means_no_sync(self):
         from repro.distributed.amax_sync import make_amax_sync
         assert make_amax_sync(None) is None
+
+
+# ---------------------------------------------------------------------------
+# launch/specs: recipe + delayed-scaling knobs reach the dry-run cells
+# ---------------------------------------------------------------------------
+
+class TestSpecsDelayedCell:
+    def test_build_cell_accepts_recipe_and_delayed_knobs(self, monkeypatch):
+        """build_cell with {'policy.quant.recipe': 'hybrid',
+        'policy.quant.scaling': 'delayed'} discovers the site registry,
+        threads a ScaleState arg through the step, and shape-infers the
+        whole step (the same abstract proof the dry-run lowers)."""
+        import repro.launch.specs as S
+        import repro.models.registry as R
+        from repro.launch.mesh import enter_mesh, make_mesh
+        from repro.scaling.state import ScaleState
+
+        orig = R.build_config
+        monkeypatch.setattr(
+            R, "build_config",
+            lambda a, smoke=False, **kw: orig(a, smoke=True, **kw))
+        monkeypatch.setattr(S, "build_config", R.build_config)
+        monkeypatch.setitem(S.SHAPES, "tiny_train",
+                            dict(seq=64, batch=8, mode="train"))
+        S._cfg_for_cell.cache_clear()
+        try:
+            mesh = make_mesh((1, 1), ("data", "model"))
+            with enter_mesh(mesh):
+                cell = S.build_cell(
+                    "qwen2-1.5b", "tiny_train", mesh,
+                    overrides={"policy.quant.recipe": "hybrid",
+                               "policy.quant.scaling": "delayed"})
+        finally:
+            S._cfg_for_cell.cache_clear()
+        assert cell["meta"]["recipe"] == "hybrid"
+        assert cell["meta"]["scaling"] == "delayed"
+        assert cell["meta"]["scale_rows"] > 0
+        # step signature: (state, scale_state, batch, key)
+        assert len(cell["args"]) == 4
+        assert isinstance(cell["args"][1], ScaleState)
+        assert cell["donate_argnums"] == (0, 1)
+        # scale-state rows match the discovered registry
+        assert cell["args"][1].scale.shape == (cell["meta"]["scale_rows"],)
+
+    def test_build_cell_default_unchanged(self, monkeypatch):
+        import repro.launch.specs as S
+        import repro.models.registry as R
+        from repro.launch.mesh import enter_mesh, make_mesh
+        orig = R.build_config
+        monkeypatch.setattr(
+            R, "build_config",
+            lambda a, smoke=False, **kw: orig(a, smoke=True, **kw))
+        monkeypatch.setattr(S, "build_config", R.build_config)
+        monkeypatch.setitem(S.SHAPES, "tiny_train",
+                            dict(seq=64, batch=8, mode="train"))
+        S._cfg_for_cell.cache_clear()
+        try:
+            mesh = make_mesh((1, 1), ("data", "model"))
+            with enter_mesh(mesh):
+                cell = S.build_cell("qwen2-1.5b", "tiny_train", mesh)
+        finally:
+            S._cfg_for_cell.cache_clear()
+        assert cell["meta"]["scaling"] == "none"
+        assert len(cell["args"]) == 3
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,276 @@
+"""Scanned vs unrolled stack parity for per-layer delayed-scaling sites.
+
+With per-layer sites, a scanned stack (cfg.scan_layers=True) must be
+equivalent to the unrolled stack (False) site-for-site:
+
+ * the registries are in bijection — scanned site "…/stack_p/…" row g maps
+   to unrolled site "…/layer_{g*P+p}/…" — with identical total row counts,
+ * the per-layer scale trajectories match: observations are amaxes of
+   fp8-quantized payloads, so XLA's scan-vs-unrolled lowering noise (the
+   UNQUANTIZED baseline already differs — bf16 fusions reassociate, the
+   scan transpose reorders the backward) almost always quantizes away.
+   Forward (W/A) rows are overwhelmingly bit-equal with a one-notch
+   envelope; backward (E/G) rows, riding the reassociated cotangents, get
+   a factor-2 envelope with a majority exactly equal,
+ * losses match within the same lowering noise,
+ * the enlarged (multi-row) ScaleState round-trips through Checkpointer.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision_policy import PrecisionPolicy, QuantConfig
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_lm, lm_loss
+from repro.scaling import DelayedScaling, discover_lm_sites
+from repro.scaling.state import ScalingConfig, SiteRegistry
+from repro.train.step import make_optimizer_for, make_train_step
+
+N_LAYERS = 4
+B, S = 2, 16
+VOCAB = 64
+
+RNE_DELAYED = QuantConfig(scaling="delayed", act_rounding="rne",
+                          error_rounding="rne", grad_rounding="rne",
+                          saturate_bwd=True)
+
+
+def _cfg(scan: bool, quant: QuantConfig = RNE_DELAYED) -> ModelConfig:
+    return ModelConfig(arch="parity", n_layers=N_LAYERS, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+                       max_seq_len=32, policy=PrecisionPolicy(quant=quant),
+                       remat=False, scan_layers=scan)
+
+
+def _stack_params(params_unrolled, cfg_scan: ModelConfig):
+    """Restack unrolled per-layer decoder params into the scanned layout
+    (stack position p, group g <- layer g*P+p), so both lowerings run the
+    SAME weights."""
+    P = len(cfg_scan.pattern())
+    G = N_LAYERS // P
+    dec = params_unrolled["decoder"]
+    stacked = {
+        f"stack_{p}": jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[dec[f"layer_{g * P + p}"] for g in range(G)])
+        for p in range(P)}
+    out = dict(params_unrolled)
+    out["decoder"] = stacked
+    return out, P, G
+
+
+def _key_pairs(reg_s: SiteRegistry, reg_u: SiteRegistry, P: int, G: int):
+    """[(scanned key, row offset | None, unrolled key)] covering every row."""
+    pairs = []
+    for k in reg_s.keys:
+        m = re.match(r"(.*?)stack_(\d+)/(.*)$", k)
+        if m and reg_s.n_rows[k] == G:
+            pre, p, rest = m.group(1), int(m.group(2)), m.group(3)
+            for g in range(G):
+                pairs.append((k, g, f"{pre}layer_{g * P + p}/{rest}"))
+        else:
+            pairs.append((k, None, k))
+    return pairs
+
+
+def _setup(quant: QuantConfig = RNE_DELAYED):
+    cfg_u, cfg_s = _cfg(False, quant), _cfg(True, quant)
+    pu = init_lm(jax.random.PRNGKey(0), cfg_u)
+    ps, P, G = _stack_params(pu, cfg_s)
+    proto = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    reg_u = discover_lm_sites(cfg_u, pu, proto)
+    reg_s = discover_lm_sites(cfg_s, ps, proto)
+    return cfg_u, cfg_s, pu, ps, reg_u, reg_s, P, G
+
+
+class TestRegistryBijection:
+    def test_row_bijection_and_counts(self):
+        _, _, _, _, reg_u, reg_s, P, G = _setup()
+        assert G > 1   # the stack really scans
+        pairs = _key_pairs(reg_s, reg_u, P, G)
+        # every scanned row maps onto a distinct unrolled key, covering it
+        unrolled_targets = [uk for _, _, uk in pairs]
+        assert sorted(unrolled_targets) == sorted(reg_u.keys)
+        assert len(reg_s) == len(reg_u)          # same total rows
+        # every per-layer site owns exactly n_groups rows
+        stacked = {k: n for k, n in reg_s.n_rows.items() if n > 1}
+        assert stacked
+        assert all(n == G for n in stacked.values())
+        # token sites carry the same multiplicity
+        assert all(reg_s.token_site_layers[s] == G
+                   for s in reg_s.token_sites
+                   if "stack_" in s)
+
+    def test_scanned_state_is_enlarged(self):
+        _, _, _, _, reg_u, reg_s, _, G = _setup()
+        ds = DelayedScaling(reg_s)
+        st = ds.init()
+        assert st.scale.shape == (len(reg_s),)
+        assert len(reg_s) > len(reg_s.keys)   # rows > keys: per-layer spans
+
+
+class TestLossAndTrajectoryParity:
+    def _run(self, steps=5, update_weights=False):
+        cfg_u, cfg_s, pu, ps, reg_u, reg_s, P, G = _setup()
+        ds_u = DelayedScaling(reg_u, ScalingConfig(), qcfg=RNE_DELAYED)
+        ds_s = DelayedScaling(reg_s, ScalingConfig(), qcfg=RNE_DELAYED)
+        opt_u = make_optimizer_for(cfg_u, learning_rate=1e-3)
+        opt_s = make_optimizer_for(cfg_s, learning_rate=1e-3)
+        step_u = jax.jit(make_train_step(cfg_u, opt_u, scaling=ds_u))
+        step_s = jax.jit(make_train_step(cfg_s, opt_s, scaling=ds_s))
+        st_u0, st_s0 = opt_u.init(pu), opt_s.init(ps)
+        st_u, st_s = st_u0, st_s0
+        ss_u, ss_s = ds_u.init(), ds_s.init()
+        pairs = _key_pairs(reg_s, reg_u, P, G)
+        rng = np.random.default_rng(0)
+        traj = []
+        for i in range(steps):
+            toks = jnp.asarray(rng.integers(0, VOCAB, (B, S)), jnp.int32)
+            batch = {"tokens": toks, "labels": toks}
+            (st_u, ss_u), mu = step_u(st_u, ss_u, batch,
+                                      jax.random.PRNGKey(i))
+            (st_s, ss_s), ms = step_s(st_s, ss_s, batch,
+                                      jax.random.PRNGKey(i))
+            if not update_weights:   # isolate scale dynamics from weight
+                st_u, st_s = st_u0, st_s0   # drift between the lowerings
+            sc_u, sc_s = np.asarray(ss_u.scale), np.asarray(ss_s.scale)
+            vu = np.asarray([sc_u[reg_u.index[uk]] for _, _, uk in pairs])
+            vs = np.asarray([sc_s[reg_s.index[k] + (g or 0)]
+                             for k, g, _ in pairs])
+            cls = np.asarray([reg_s.class_letter(k) for k, _, _ in pairs])
+            traj.append((float(mu["loss"]), float(ms["loss"]),
+                         vu, vs, cls))
+        return traj
+
+    def test_losses_match_within_lowering_noise(self):
+        for lu, ls, *_ in self._run(steps=4, update_weights=True):
+            np.testing.assert_allclose(lu, ls, rtol=2e-2)
+
+    def test_per_layer_wa_scale_trajectories_identical(self):
+        """Forward observations come from quantized fp8 payloads: the
+        lowering noise almost always rounds away, so per-layer W/A rows are
+        overwhelmingly bit-equal step for step, never off by more than one
+        e5m2 mantissa notch (adjacent grid ratio <= 1.25)."""
+        for _, _, vu, vs, cls in self._run(steps=5):
+            fwd = np.isin(cls, ["W", "A"])
+            assert (vu[fwd] == vs[fwd]).mean() >= 0.85, \
+                (vu[fwd], vs[fwd])
+            ratio = vs[fwd] / np.maximum(vu[fwd], 1e-30)
+            assert (ratio <= 1.25).all() and (ratio >= 0.8).all(), ratio
+
+    def test_per_layer_eg_scale_trajectories_match(self):
+        """Backward observations ride the scan-transposed cotangents, where
+        the two lowerings reassociate: amaxes may land one fp8 notch apart,
+        and a notch at the saturation boundary can fire the growth probe on
+        one side only (one extra 2x). Envelope: within 4x everywhere,
+        majority of rows exactly equal, median ratio 1."""
+        fracs = []
+        for _, _, vu, vs, cls in self._run(steps=5):
+            bwd = np.isin(cls, ["E", "G"])
+            ratio = vs[bwd] / np.maximum(vu[bwd], 1e-30)
+            assert (ratio <= 4.0).all() and (ratio >= 0.25).all(), ratio
+            assert np.median(ratio) == 1.0
+            fracs.append((vu[bwd] == vs[bwd]).mean())
+        # notch flips accumulate through history; exactness decays but the
+        # bulk of rows stays bit-equal across the trajectory
+        assert np.mean(fracs) > 0.5 and min(fracs) > 0.3, fracs
+
+    def test_per_layer_scales_differ_across_layers(self):
+        """The point of per-layer sites: rows within one scanned site track
+        THEIR layer, not a shared per-stack-position statistic — and agree
+        with the unrolled per-layer sites doing the same."""
+        *_, (_, _, vu, vs, cls) = self._run(steps=5)
+        fwd = np.isin(cls, ["W", "A"])
+        # the unrolled reference itself has layer-distinct scales...
+        assert len(np.unique(vu[fwd])) > len(vu[fwd]) // 4
+        # ...and the scanned per-layer rows track them
+        np.testing.assert_allclose(vs[fwd], vu[fwd], rtol=0.25)
+        assert len(np.unique(vs[fwd])) > len(vs[fwd]) // 4
+
+
+class TestMicrobatchedPerLayerObservations:
+    def test_microbatch_reduction_keeps_layer_axis(self):
+        """Gradient accumulation stacks metrics over the microbatch axis;
+        the amax reduction must collapse ONLY that axis — per-layer
+        (n_groups,) observation vectors of scanned sites survive, so each
+        layer's history row stays its own (regression: a full .max() used
+        to broadcast one group-wide envelope over every row)."""
+        cfg = _cfg(True)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        proto = {"tokens": jnp.zeros((4, S), jnp.int32),
+                 "labels": jnp.zeros((4, S), jnp.int32)}
+        reg = discover_lm_sites(cfg, params, proto)
+        ds = DelayedScaling(reg, qcfg=RNE_DELAYED)
+        opt = make_optimizer_for(cfg, learning_rate=1e-3)
+        step = jax.jit(make_train_step(cfg, opt, n_microbatches=2,
+                                       scaling=ds))
+        state, sstate = opt.init(params), ds.init()
+        rng = np.random.default_rng(0)
+        for i in range(2):
+            toks = jnp.asarray(rng.integers(0, VOCAB, (4, S)), jnp.int32)
+            (state, sstate), _ = step(state, sstate,
+                                      {"tokens": toks, "labels": toks},
+                                      jax.random.PRNGKey(i))
+        hist = np.asarray(sstate.amax_history)
+        # per-layer rows must record per-layer amaxes (activations/errors
+        # differ with depth), not one broadcast group envelope — with the
+        # bug EVERY stacked site's rows were identical
+        stacked = [k for k in reg.keys if reg.n_rows[k] > 1]
+        assert stacked
+        distinct = 0
+        for k in stacked:
+            i, n = reg.index[k], reg.n_rows[k]
+            if len(np.unique(hist[i:i + n, 0])) > 1:
+                distinct += 1
+        assert distinct > len(stacked) // 2, \
+            {k: hist[reg.index[k]:reg.index[k] + reg.n_rows[k], 0]
+             for k in stacked}
+
+
+class TestEnlargedScaleStateCheckpoint:
+    def test_round_trip_through_checkpointer(self, tmp_path):
+        from repro.checkpoint import Checkpointer
+        _, _, _, _, _, reg_s, _, G = _setup()
+        ds = DelayedScaling(reg_s, ScalingConfig(history_len=4))
+        st = ds.init()
+        # feed per-layer vector observations so the multi-row structure is
+        # actually populated
+        rng = np.random.default_rng(3)
+        obs = {}
+        for k in reg_s.keys:
+            n = reg_s.n_rows[k]
+            v = rng.uniform(0.5, 4.0, (n,)).astype(np.float32)
+            obs[k] = jnp.asarray(v if n > 1 else v[0])
+        st = ds.update(st, obs)
+        ck = Checkpointer(tmp_path, async_save=False)
+        ck.save(11, {"scales": st},
+                extra={"rows": {k: reg_s.n_rows[k] for k in reg_s.keys}})
+        proto = jax.eval_shape(lambda s: s, {"scales": ds.init()})
+        restored, step = ck.restore(proto)
+        assert step == 11
+        np.testing.assert_array_equal(
+            np.asarray(st.amax_history),
+            np.asarray(restored["scales"].amax_history))
+        np.testing.assert_array_equal(
+            np.asarray(st.scale), np.asarray(restored["scales"].scale))
+        assert ck.manifest(11)["extra"]["rows"][reg_s.keys[0]] \
+            == reg_s.n_rows[reg_s.keys[0]]
+
+    def test_update_accepts_vector_and_scalar_observations(self):
+        reg = SiteRegistry(["s#a.A", "t#E"], site_layers={"s#a.A": 3})
+        ds = DelayedScaling(reg, ScalingConfig(history_len=2, margin=1.0))
+        st = ds.update(ds.init(), {"s#a.A": jnp.asarray([1.0, 2.0, 4.0]),
+                                   "t#E": jnp.float32(8.0)})
+        np.testing.assert_array_equal(np.asarray(st.amax_history[:, 0]),
+                                      [1.0, 2.0, 4.0, 8.0])
+        sc = np.asarray(st.scale)
+        np.testing.assert_allclose(sc[:3], np.asarray([1.0, 2.0, 4.0])
+                                   / 57344.0)
+        # scalar observation of a stacked site broadcasts over its rows
+        st2 = ds.update(st, {"s#a.A": jnp.float32(16.0)})
+        np.testing.assert_array_equal(np.asarray(st2.amax_history[:3, 0]),
+                                      [16.0, 16.0, 16.0])
