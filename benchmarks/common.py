@@ -24,11 +24,24 @@ from repro.optim.optimizers import (AdamConfig, MomentumConfig,
                                     adam, momentum_sgd)
 
 RESULTS_DIR = Path("experiments/bench")
+# Repo root, for the BENCH_<name>.json perf-trajectory files: detailed
+# results live under experiments/bench/, but the headline perf numbers
+# (tokens/s, step time, fused-vs-unfused GEMM ratio) are mirrored at the
+# repo root so the trajectory is visible across PRs without digging.
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def save_result(name: str, payload: dict):
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     (RESULTS_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def save_bench(name: str, payload: dict):
+    """Persist a perf benchmark: full payload under experiments/bench/ AND
+    the repo-root BENCH_<name>.json trajectory file."""
+    save_result(name, payload)
+    (REPO_ROOT / f"BENCH_{name}.json").write_text(
+        json.dumps(payload, indent=1) + "\n")
 
 
 def _mk_opt(name, lr, scaler, master_dtype="float16"):

@@ -9,7 +9,7 @@ import sys
 import time
 
 from benchmarks import paper_tables
-from benchmarks.kernel_bench import bench_kernels
+from benchmarks.kernel_bench import bench_kernels, bench_speed
 
 ALL = {
     "table1": paper_tables.bench_table1,
@@ -19,7 +19,10 @@ ALL = {
     "table2": paper_tables.bench_table2,
     "table3": paper_tables.bench_table3,
     "table4": paper_tables.bench_table4,
+    # Perf trajectory (repo-root BENCH_*.json): kernel fused-vs-unfused +
+    # reduced-scale training tokens/s and step time.
     "kernels": bench_kernels,
+    "speed": bench_speed,
 }
 
 

@@ -76,7 +76,7 @@ def main():
     frozen, formats = freeze_with_formats(ds2, cal_state, cfg)
     kv = {k: v for k, v in frozen.items() if "kv/" in k}
     print(f"frozen {len(frozen)} scales ({len(kv)} KV-cache sites), "
-          f"formats: { {f: sum(1 for v in formats.values() if v == f) for f in set(formats.values())} }")
+          f"formats: { {f: sum(1 for v in formats.values() if v == f) for f in sorted(set(formats.values()))} }")
 
     # 4. deterministic calibrated serving; frozen_formats makes the engine
     #    verify its serving config quantizes each site in the SAME format

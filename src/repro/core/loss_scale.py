@@ -111,7 +111,10 @@ class LossScaler:
         scale = jnp.where(grads_finite, new_scale_ok, new_scale_bad)
         # Enhanced: clamp to the scheduled minimum threshold, preventing the
         # back-off from dropping into the underflow regime (paper Fig. 2b).
-        floor = self.min_scale_at(state.step)
+        # The floor is evaluated at the POST-increment step (the step this
+        # update produces): a knot at step S must bound the scale from the
+        # update that lands on S, not one update later.
+        floor = self.min_scale_at(state.step + 1)
         scale = jnp.maximum(scale, floor)
         return LossScaleState(
             scale=scale,

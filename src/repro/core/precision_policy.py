@@ -70,6 +70,13 @@ class QuantConfig:
     backend: str = "xla"              # xla | pallas | pallas_interpret
     # Whether activation-activation GEMMs (attention QK^T / PV) are quantized.
     quantize_attention: bool = True
+    # Fused quantize-in-epilogue GEMMs (Pallas backends + delayed scaling
+    # only): the fwd/dgrad/wgrad GEMMs of qeinsum write FP8 directly from
+    # the accumulator tile in VMEM, with the delayed-scaling amax
+    # observation taken in the same epilogue — no separate Q pass over HBM.
+    # False keeps the quantize->matmul composition (the A/B side of the
+    # fused-vs-unfused benchmark).
+    fuse_epilogue: bool = True
 
     def __post_init__(self):
         # The recipe OWNS the per-class formats (idempotent under

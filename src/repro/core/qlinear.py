@@ -21,6 +21,17 @@ repro.kernels.{fp8_matmul,fused_quant_matmul}; on CPU (and for the dry-run)
 they run an XLA path that upcasts fp8 -> bf16 and issues a dot with
 preferred_element_type=f32, which is exactly the MXU dataflow the kernels
 implement (bf16 multiplies into an f32 accumulator).
+
+Under a Pallas backend with delayed scaling the projection GEMMs take the
+FUSED quantize-in-epilogue path (see `_fused_epilogue`): each of the three
+GEMMs applies its output Q node inside the kernel epilogue (fwd Y = Q_A(A.W)
+via the 'nn' layout, dgrad dA = Q_E(dY.W^T) via 'nt', wgrad dW = Q_G(A^T.dY)
+via 'tn' — no materialized transposes), writing FP8 straight from the VMEM
+accumulator and observing the delayed-scaling amax in the same pass. The
+output Q nodes quantize against their own scale sites ("#y.A", "#da.E",
+"#G" — see scaling.context.fused_output_keys); the fused observations are
+bit-identical to the `_observe` bit-pattern reduction over the payloads
+(tests/test_fused_epilogue.py).
 """
 from __future__ import annotations
 
@@ -40,6 +51,11 @@ from repro.core.precision_policy import (ACT, ERROR, GRAD, WEIGHT, PAPER_FP8,
 from repro.scaling import context as scale_ctx
 
 Array = jax.Array
+
+# Per-site scale-vector layout fed into _qeinsum:
+#   [a, b, E, G, Y, dA_err] — operands, error, FP8-stored weight grad, and
+#   the two fused-epilogue output sites (Y forward, error-class dgrad).
+N_SCALES = 6
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +125,51 @@ def _pallas_matmul_spec(spec: str) -> bool:
             and b[1] not in a and b[0] not in o)
 
 
+def _fused_epilogue(spec: str, classes: Tuple[str, str],
+                    cfg: QuantConfig) -> bool:
+    """True when this qeinsum routes its three GEMMs (fwd, dgrad, wgrad)
+    through the output-quantizing fused Pallas kernels: the paper's Fig. 1a
+    dataflow with each Q node IN the GEMM epilogue (output written straight
+    to FP8 from the VMEM accumulator, amax observed in the same pass).
+
+    Requires a Pallas backend + delayed scaling (output Q nodes need
+    history-derived scales) on a '...k,kn->...n' contraction with a weight
+    operand — which covers every projection GEMM; the 4D attention
+    contractions keep the unfused path."""
+    return (cfg.enabled and cfg.delayed and cfg.fuse_epilogue
+            and cfg.backend.startswith("pallas")
+            and WEIGHT in classes and _pallas_matmul_spec(spec))
+
+
+def _fused_gemm(x8: Array, w8: Array, sx: Array, sw: Array, s_out: Array,
+                cfg: QuantConfig, key: Array, out_cls: str,
+                dims: str) -> Tuple[Array, Array]:
+    """One fused output-quantizing GEMM: fp8 operands (2D) in, fp8 output +
+    grid-amax observation out.
+
+    Value semantics: out8 = Q_cls((x8.w8 * sx * sw) / s_out), computed as
+    Q((x8.w8) / (s_out / (sx*sw))) so the scaling collapses into the
+    epilogue's single reciprocal multiply. The returned observation is the
+    fused-epilogue amax de-scaled to real units — bit-identical to the
+    `_observe` bit-pattern reduction over the materialized payload."""
+    from repro.kernels.fused_quant_matmul import ops as fq_ops  # lazy
+    s_prod = (sx * sw).astype(jnp.float32)
+    kscale = s_out.astype(jnp.float32) / s_prod
+    out8, amax_grid = fq_ops.fused_quant_matmul(
+        x8, w8, key, kscale, dims=dims,
+        out_format=cfg.format_for(out_cls),
+        rounding=cfg.rounding_for(out_cls),
+        saturate=cfg.saturate_for(out_cls),
+        with_amax=True, amax_units="grid",
+        interpret=cfg.backend == "pallas_interpret")
+    return out8, amax_grid * s_out.astype(jnp.float32)
+
+
+def _fused_dequant(out8: Array, s_out: Array, cfg: QuantConfig) -> Array:
+    return (out8.astype(jnp.float32) * s_out.astype(jnp.float32)) \
+        .astype(dtype_of(cfg.output_dtype))
+
+
 def _compute(spec: str, qa: QTensor, qb: QTensor, cfg: QuantConfig) -> Array:
     """fp8 x fp8 -> f32 (accumulate) -> output_dtype, optionally via Pallas."""
     compute_dtype = dtype_of(cfg.compute_dtype)
@@ -150,24 +211,40 @@ def _observe(q: QTensor, cfg: QuantConfig) -> Array:
 def _qeinsum(spec: str, classes: Tuple[str, str], cfg: QuantConfig,
              a: Array, b: Array, key: Array, scales: Array,
              token: Array) -> Tuple[Array, Array]:
-    """Returns (y, fwd_obs) where fwd_obs = [amax_a, amax_b] (zeros unless
-    cfg.scaling == 'delayed').
+    """Returns (y, fwd_obs) where fwd_obs = [amax_a, amax_b] — plus
+    [amax_y] on the fused-epilogue path — (zeros unless cfg.scaling ==
+    'delayed').
 
-    scales: f32[4] per-site quantization scales [a, b, E, G] (history-derived
-    under delayed scaling; ones otherwise). token: f32[2] observation channel
-    whose *cotangent* is defined as [amax_E, amax_G] — the backward-pass
-    observations ride the gradient of this input out of value_and_grad.
+    scales: f32[6] per-site quantization scales [a, b, E, G, Y, dA_err]
+    (history-derived under delayed scaling; ones otherwise — the last two
+    are only consumed by the fused quantize-in-epilogue path). token:
+    f32[TOKEN_CHANNELS] observation channel whose *cotangent* is defined as
+    [amax_E, amax_G, amax_dA_err] — the backward-pass observations ride the
+    gradient of this input out of value_and_grad.
     """
     out, _ = _qeinsum_fwd(spec, classes, cfg, a, b, key, scales, token)
     return out
 
 
 def _qeinsum_fwd(spec, classes, cfg, a, b, key, scales, token):
-    k_a, k_b, k_bwd = jax.random.split(key, 3)
+    fused = _fused_epilogue(spec, classes, cfg)
+    if fused:
+        k_a, k_b, k_bwd, k_y = jax.random.split(key, 4)
+    else:
+        k_a, k_b, k_bwd = jax.random.split(key, 3)
     qa = _quant_operand(a, classes[0], cfg, k_a, scale=scales[0])
     qb = _quant_operand(b, classes[1], cfg, k_b, scale=scales[1])
-    y = _compute(spec, qa, qb, cfg)
-    obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg)])
+    if fused:
+        # Y = Q_A(A.W) with the Q node + amax observation in the epilogue.
+        a2 = qa.data.reshape((-1, qa.data.shape[-1]))
+        y8, obs_y = _fused_gemm(a2, qb.data, qa.scale, qb.scale, scales[4],
+                                cfg, k_y, ACT, "nn")
+        y = _fused_dequant(y8, scales[4], cfg) \
+            .reshape(qa.data.shape[:-1] + (qb.data.shape[-1],))
+        obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg), obs_y])
+    else:
+        y = _compute(spec, qa, qb, cfg)
+        obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg)])
     # Zero-size dtype witnesses so bwd can emit cotangents in primal dtypes.
     return (y, obs), (qa, qb, k_bwd, scales,
                       jnp.zeros((0,), a.dtype), jnp.zeros((0,), b.dtype))
@@ -177,6 +254,9 @@ def _qeinsum_bwd(spec, classes, cfg, res, ct):
     dy, _ = ct   # cotangent of the fwd_obs output is discarded
     qa, qb, k_bwd, scales, a_wit, b_wit = res
     a_dtype, b_dtype = a_wit.dtype, b_wit.dtype
+    if _fused_epilogue(spec, classes, cfg):
+        return _qeinsum_bwd_fused(spec, classes, cfg, qa, qb, k_bwd, scales,
+                                  a_dtype, b_dtype, dy)
     k_e, k_ga, k_gb = jax.random.split(k_bwd, 3)
     qdy = _quant_operand(dy, ERROR, cfg, k_e, scale=scales[2])
     da_spec, db_spec = adjoint_specs(spec)
@@ -191,11 +271,52 @@ def _qeinsum_bwd(spec, classes, cfg, res, ct):
     if classes[1] == WEIGHT:
         db, og = _fake_quant_grad(db, cfg, k_gb, scale=scales[3])
         obs_g = jnp.maximum(obs_g, og)
-    token_ct = jnp.stack([_observe(qdy, cfg), obs_g])
+    token_ct = jnp.stack([_observe(qdy, cfg), obs_g, jnp.float32(0.0)])
     # Cotangents match primal dtypes; the integer PRNG key gets float0 zeros.
     return (da.astype(a_dtype), db.astype(b_dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
-            jnp.zeros((4,), jnp.float32), token_ct)
+            jnp.zeros((N_SCALES,), jnp.float32), token_ct)
+
+
+def _qeinsum_bwd_fused(spec, classes, cfg, qa, qb, k_bwd, scales,
+                       a_dtype, b_dtype, dy):
+    """Backward of the fused quantize-in-epilogue path: both adjoint GEMMs
+    write FP8 straight from the accumulator (dgrad via the 'nt' layout,
+    wgrad via 'tn' — no materialized transpose), replacing the separate
+    `_fake_quant_grad` pass and its extra full-precision HBM round-trip."""
+    k_e, k_da, k_db = jax.random.split(k_bwd, 3)
+    qdy = _quant_operand(dy, ERROR, cfg, k_e, scale=scales[2])
+    dy2 = qdy.data.reshape((-1, qdy.data.shape[-1]))
+    a2 = qa.data.reshape((-1, qa.data.shape[-1]))
+    # Output class / scale site of each adjoint: the weight operand's
+    # gradient is FP8-stored (class G); the activation operand receives the
+    # error-class dgrad output (its own "#d{a,b}.E" site).
+    cls_a = GRAD if classes[0] == WEIGHT else ERROR
+    cls_b = GRAD if classes[1] == WEIGHT else ERROR
+    s_da = scales[3] if cls_a == GRAD else scales[5]
+    s_db = scales[3] if cls_b == GRAD else scales[5]
+    # dA = Q(dY . W^T): (M, N) x (K, N) -> (M, K)
+    da8, obs_da = _fused_gemm(dy2, qb.data, qdy.scale, qb.scale, s_da,
+                              cfg, k_da, cls_a, "nt")
+    da = _fused_dequant(da8, s_da, cfg).reshape(qa.data.shape)
+    # dW = Q(A^T . dY): (M, K) x (M, N) -> (K, N)
+    db8, obs_db = _fused_gemm(a2, dy2, qa.scale, qdy.scale, s_db,
+                              cfg, k_db, cls_b, "tn")
+    db = _fused_dequant(db8, s_db, cfg).reshape(qb.data.shape)
+    obs_g = jnp.float32(0.0)
+    obs_err = jnp.float32(0.0)
+    if cls_a == GRAD:
+        obs_g = jnp.maximum(obs_g, obs_da)
+    else:
+        obs_err = obs_da
+    if cls_b == GRAD:
+        obs_g = jnp.maximum(obs_g, obs_db)
+    else:
+        obs_err = obs_db
+    token_ct = jnp.stack([_observe(qdy, cfg), obs_g, obs_err])
+    return (da.astype(a_dtype), db.astype(b_dtype),
+            np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
+            jnp.zeros((N_SCALES,), jnp.float32), token_ct)
 
 
 def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array,
@@ -247,6 +368,7 @@ def qeinsum(spec: str, a: Array, b: Array, *,
     classes = tuple(classes)
     ctx = scale_ctx.current()
     if cfg.delayed and ctx is not None and site is not None:
+        fused = _fused_epilogue(spec, classes, cfg)
         skey = ctx.site_key(site)
         keys = scale_ctx.operand_keys(skey, classes)
         ctx.register(keys["a"])
@@ -254,16 +376,30 @@ def qeinsum(spec: str, a: Array, b: Array, *,
         ctx.register(keys["E"])
         if WEIGHT in classes:
             ctx.register(keys["G"])
+        s_y = jnp.float32(1.0)
+        s_err = jnp.float32(1.0)
+        fkeys = {}
+        if fused:
+            fkeys = scale_ctx.fused_output_keys(skey, classes)
+            ctx.register(fkeys["y"])
+            s_y = ctx.scale_for(fkeys["y"])
+            if "err" in fkeys:
+                ctx.register(fkeys["err"])
+                s_err = ctx.scale_for(fkeys["err"])
         scales = jnp.stack([
             ctx.scale_for(keys["a"]), ctx.scale_for(keys["b"]),
-            ctx.scale_for(keys["E"]), ctx.scale_for(keys["G"])])
+            ctx.scale_for(keys["E"]), ctx.scale_for(keys["G"]),
+            s_y, s_err])
         token = ctx.token_for(skey)
         y, obs = _qeinsum(spec, classes, cfg, a, b, key, scales, token)
         ctx.record(keys["a"], obs[0])
         ctx.record(keys["b"], obs[1])
+        if fused:
+            ctx.record(fkeys["y"], obs[2])
         return y
     y, _ = _qeinsum(spec, classes, cfg, a, b, key,
-                    jnp.ones((4,), jnp.float32), jnp.zeros((2,), jnp.float32))
+                    jnp.ones((N_SCALES,), jnp.float32),
+                    jnp.zeros((scale_ctx.TOKEN_CHANNELS,), jnp.float32))
     return y
 
 

@@ -4,15 +4,31 @@ Beyond-paper optimization. The paper's dataflow materializes the FP32 GEMM
 output to memory and then applies the Q node (down-convert + round) as a
 separate op — on TPU that is an extra HBM round-trip of 4 bytes/element out +
 4 in + 1 out. Fusing Q into the matmul epilogue means the f32 accumulator
-tile is scaled and rounded to e5m2 *while still in VMEM*, writing only
+tile is scaled and rounded to fp8 *while still in VMEM*, writing only
 1 byte/element to HBM: an 8x reduction in epilogue write traffic and the
 elimination of the Q-node read pass entirely.
 
-Rounding in the epilogue supports both RNE (deterministic) and SR, matching
-the paper's Q-node semantics (sr via the exact fp16 bit-twiddle shared with
-core.quantize). This is precisely the paper's architectural argument —
+Rounding in the epilogue supports both RNE (deterministic, the correctly-
+rounded single-rounding path shared with core.quantize.quantize_rne) and SR
+(the exact fp16 bit-twiddle shared with core.quantize), matching the paper's
+Q-node semantics. This is precisely the paper's architectural argument —
 "rounding belongs in the epilogue, not the MAC" — taken one step further:
 the epilogue never leaves the chip.
+
+Three contraction layouts cover the full training step (qeinsum fwd/bwd):
+
+    dims="nn"   out = A    @ B     A:(M,K)  B:(K,N)   forward  Y = Q(A.W)
+    dims="nt"   out = A    @ B^T   A:(M,C)  B:(N,C)   dgrad   dA = Q(dY.W^T)
+    dims="tn"   out = A^T  @ B     A:(C,M)  B:(C,N)   wgrad   dW = Q(A^T.dY)
+
+The transposed layouts index the k-sweep over the *contraction* axis of each
+operand in HBM, so no materialized transpose (and no extra HBM pass) is ever
+needed for the backward GEMMs.
+
+The optional amax epilogue output is reported in *grid units* (the max |q|
+of the quantized fp8 values, before de-scaling) and masked to the logical
+(m, n) region, so zero-padded tiles can never leak into the delayed-scaling
+observation.
 """
 from __future__ import annotations
 
@@ -24,12 +40,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fp8_formats import get_format
-from repro.core.quantize import sr_fp8_via_f16
+from repro.core.quantize import quantize_rne, sr_fp8_via_f16
 from repro.kernels.compat import CompilerParams as _CompilerParams
 
 DEFAULT_BM = 256
 DEFAULT_BK = 512
 DEFAULT_BN = 256
+
+DIMS = ("nn", "nt", "tn")
 
 
 def _quantize_tile(acc, rand8, inv_scale, *, fmt_name: str, rounding: str,
@@ -37,21 +55,45 @@ def _quantize_tile(acc, rand8, inv_scale, *, fmt_name: str, rounding: str,
     fmt = get_format(fmt_name)
     y = acc * inv_scale
     if rounding == "rne":
-        if saturate:
-            y = jnp.clip(y, -fmt.max_normal, fmt.max_normal)
-        return y.astype(fmt.dtype)
+        # The correctly-rounded f32 path (single rounding + explicit
+        # overflow semantics) — the same function the unfused Q node uses,
+        # so fused and unfused payloads are bit-identical by construction.
+        return quantize_rne(y, fmt, saturate=saturate)
     return sr_fp8_via_f16(y, rand8, fmt, saturate=saturate)
 
 
+def _tile_dot(a, b, dims: str):
+    """f32-accumulated bf16 tile contraction for one k step of `dims`."""
+    a = a.astype(jnp.bfloat16)
+    b = b.astype(jnp.bfloat16)
+    if dims == "nn":      # (bm, bk) x (bk, bn)
+        contract = (((1,), (0,)), ((), ()))
+    elif dims == "nt":    # (bm, bk) x (bn, bk)
+        contract = (((1,), (1,)), ((), ()))
+    else:                 # "tn": (bk, bm) x (bk, bn)
+        contract = (((0,), (0,)), ((), ()))
+    return jax.lax.dot_general(a, b, contract,
+                               preferred_element_type=jnp.float32)
+
+
+def _amax_mask(bm: int, bn: int, m: int, n: int):
+    """Validity mask of the current (bm, bn) output tile against the logical
+    (m, n) bounds — padded rows/cols are excluded from the amax epilogue so
+    the observation is invariant to the (bm, bk, bn) tiling choice."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) \
+        + pl.program_id(0) * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) \
+        + pl.program_id(1) * bn
+    return (rows < m) & (cols < n)
+
+
 def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
-          fmt_name: str, rounding: str, saturate: bool, n_k: int):
+          dims: str, fmt_name: str, rounding: str, saturate: bool, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(jnp.bfloat16)
-    b = b_ref[...].astype(jnp.bfloat16)
-    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    acc_ref[...] += _tile_dot(a_ref[...], b_ref[...], dims)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _epilogue():
@@ -62,18 +104,27 @@ def _body(a_ref, b_ref, rand_ref, scale_ref, o_ref, acc_ref, *,
 
 
 def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
-               fmt_name: str, rounding: str, saturate: bool, n_k: int):
+               dims: str, fmt_name: str, rounding: str, saturate: bool,
+               n_k: int, m: int, n: int):
     """_body plus a per-tile amax epilogue output for delayed scaling: the
-    observed amax of the quantized tile is computed from the f32 values
+    observed amax of the quantized tile is computed from the fp8 values
     while they are STILL IN VMEM — the observation costs no extra pass over
-    HBM (the alternative, a separate amax op, re-reads the whole output)."""
+    HBM (the alternative, a separate amax op, re-reads the whole output).
+    The amax is in grid units (max |q| of the quantized values, no scale
+    multiply) and is masked to the logical (m, n) region, exactly matching
+    the bit-pattern reduction core.quantize.fp8_amax_bits performs on a
+    materialized payload."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(jnp.bfloat16)
-    b = b_ref[...].astype(jnp.bfloat16)
-    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    acc_ref[...] += _tile_dot(a_ref[...], b_ref[...], dims)
+
+    # Computed at body top level: jax 0.4.37's interpret mode does not
+    # substitute program_id inside pl.when sub-jaxprs (value uses only;
+    # conditions are fine) — the epilogue closes over the mask instead.
+    bm, bn = acc_ref.shape
+    mask = _amax_mask(bm, bn, m, n)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _epilogue():
@@ -82,29 +133,57 @@ def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
                            fmt_name=fmt_name, rounding=rounding,
                            saturate=saturate)
         o_ref[...] = q
-        # amax of the *quantized* values, de-scaled back to real units —
-        # exactly what ScaleState history records.
-        amax_ref[0, 0] = jnp.max(jnp.abs(q.astype(jnp.float32))) \
-            * scale_ref[0]
+        mag = jnp.where(mask, jnp.abs(q.astype(jnp.float32)), 0.0)
+        amax_ref[0, 0] = jnp.max(mag)
+
+
+def _block_specs(dims: str, bm: int, bk: int, bn: int):
+    if dims == "nn":
+        return [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+    if dims == "nt":
+        return [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))]
+    # "tn"
+    return [pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+
+
+def gemm_shape(a_shape, b_shape, dims: str):
+    """(M, N, C): logical output dims + contraction dim for a `dims` GEMM."""
+    if dims == "nn":
+        (m, c), (c2, n) = a_shape, b_shape
+    elif dims == "nt":
+        (m, c), (n, c2) = a_shape, b_shape
+    elif dims == "tn":
+        (c, m), (c2, n) = a_shape, b_shape
+    else:
+        raise ValueError(f"unknown dims {dims!r}; expected one of {DIMS}")
+    assert c == c2, (a_shape, b_shape, dims)
+    return m, n, c
 
 
 def fused_quant_matmul_kernel(a, b, rand8, scale, *,
+                              dims: str = "nn",
                               bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN,
                               out_format: str = "e5m2",
                               rounding: str = "sr", saturate: bool = True,
                               with_amax: bool = False,
+                              logical_mn=None,
                               interpret: bool = False):
-    """a: (M,K) fp8, b: (K,N) fp8, rand8: (M,N) u8, scale: (1,) f32
-    -> (M,N) fp8 output in `out_format` (value semantics: Q((a@b)/scale)).
+    """fp8 GEMM (layout per `dims`, see module docstring) with the Q node in
+    the epilogue: out = Q((a . b) / scale) -> (M, N) fp8 in `out_format`.
+    rand8: (M, N) u8 SR bits, scale: (1,) f32.
+
     with_amax=True additionally returns a (grid_m, grid_n) f32 array of
-    per-tile observed amaxes (reduce with jnp.max for the scalar)."""
-    m, k = a.shape
-    _, n = b.shape
+    per-tile observed amaxes in grid units (reduce with jnp.max for the
+    scalar; multiply by the dequantization scale for real units), masked to
+    `logical_mn` (defaults to the padded (M, N))."""
+    m, n, k = gemm_shape(a.shape, b.shape, dims)
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    lm, ln = logical_mn if logical_mn is not None else (m, n)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
-    in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    in_specs = _block_specs(dims, bm, bk, bn) + [
         pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         pl.BlockSpec(memory_space=pltpu.SMEM),
     ]
@@ -119,15 +198,17 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
     out_dtype = get_format(out_format).dtype
     if not with_amax:
         return pl.pallas_call(
-            functools.partial(_body, fmt_name=out_format, rounding=rounding,
-                              saturate=saturate, n_k=grid[2]),
+            functools.partial(_body, dims=dims, fmt_name=out_format,
+                              rounding=rounding, saturate=saturate,
+                              n_k=grid[2]),
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
             **common,
         )(a, b, rand8, scale)
     return pl.pallas_call(
-        functools.partial(_body_amax, fmt_name=out_format, rounding=rounding,
-                          saturate=saturate, n_k=grid[2]),
+        functools.partial(_body_amax, dims=dims, fmt_name=out_format,
+                          rounding=rounding, saturate=saturate,
+                          n_k=grid[2], m=lm, n=ln),
         out_specs=(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
                    pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))),
         out_shape=(jax.ShapeDtypeStruct((m, n), out_dtype),

@@ -17,40 +17,66 @@ def _pad_to(x, mult0, mult1):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_format",
-                                             "rounding", "saturate",
-                                             "with_amax", "interpret"))
+@functools.partial(jax.jit, static_argnames=("dims", "bm", "bk", "bn",
+                                             "out_format", "rounding",
+                                             "saturate", "with_amax",
+                                             "amax_units", "interpret"))
 def fused_quant_matmul(a, b, key, scale=None, *,
+                       dims: str = "nn",
                        bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
                        out_format: str = "e5m2",
                        rounding: str = "sr", saturate: bool = True,
                        with_amax: bool = False,
+                       amax_units: str = "real",
                        interpret: bool = False):
-    """Q((a @ b) / scale) -> fp8 in `out_format` ('e5m2' | 'e4m3'), with the
-    Q node fused into the epilogue.
+    """Q((a . b) / scale) -> fp8 in `out_format` ('e5m2' | 'e4m3'), with the
+    Q node fused into the epilogue. `dims` selects the contraction layout
+    ('nn' A@B, 'nt' A@B^T, 'tn' A^T@B — see kernel module docstring); the
+    transposed layouts serve the dgrad/wgrad GEMMs without materializing a
+    transpose.
 
     with_amax=True returns (out, amax): the observed amax of the quantized
     output (delayed-scaling observation), computed in the epilogue while the
-    tile is still in VMEM — no extra pass over HBM."""
-    m, n = a.shape[0], b.shape[1]
+    tile is still in VMEM — no extra pass over HBM. amax_units='real'
+    (default) de-scales the observation back to input units; 'grid' returns
+    the raw max |q| over the fp8 grid, bit-identical to what the bit-pattern
+    reduction core.quantize.fp8_amax_bits would report on the payload.
+
+    SR random bits are drawn over the *logical* (m, n) output and zero-padded
+    alongside the operands, and the amax epilogue masks the padded region, so
+    results are invariant to the (bm, bk, bn) tiling choice.
+    """
+    m, n, c = _k.gemm_shape(a.shape, b.shape, dims)
     if scale is None:
         scale = jnp.ones((1,), jnp.float32)
     scale = jnp.asarray(scale, jnp.float32).reshape((1,))
     bm_ = min(bm, max(8, m))
     bn_ = min(bn, max(128, n))
-    bk_ = min(bk, max(128, a.shape[1]))
-    ap = _pad_to(a, bm_, bk_)
-    bp = _pad_to(b, bk_, bn_)
-    mp, np_ = ap.shape[0], bp.shape[1]
-    rand8 = jax.random.bits(key, (mp, np_), jnp.uint8) if rounding == "sr" \
-        else jnp.zeros((mp, np_), jnp.uint8)
+    bk_ = min(bk, max(128, c))
+    if dims == "nn":
+        ap, bp = _pad_to(a, bm_, bk_), _pad_to(b, bk_, bn_)
+    elif dims == "nt":
+        ap, bp = _pad_to(a, bm_, bk_), _pad_to(b, bn_, bk_)
+    else:  # "tn"
+        ap, bp = _pad_to(a, bk_, bm_), _pad_to(b, bk_, bn_)
+    # Draw SR bits for the logical cells only; padded cells get zero bits
+    # (their zero accumulator then stays exactly zero under SR truncation).
+    rand8 = jax.random.bits(key, (m, n), jnp.uint8) if rounding == "sr" \
+        else jnp.zeros((m, n), jnp.uint8)
+    rand8 = _pad_to(rand8, bm_, bn_)
     out = _k.fused_quant_matmul_kernel(ap, bp, rand8, scale,
-                                       bm=bm_, bk=bk_, bn=bn_,
+                                       dims=dims, bm=bm_, bk=bk_, bn=bn_,
                                        out_format=out_format,
                                        rounding=rounding, saturate=saturate,
                                        with_amax=with_amax,
+                                       logical_mn=(m, n),
                                        interpret=interpret)
     if with_amax:
         out, tile_amax = out
-        return out[:m, :n], jnp.max(tile_amax)
+        amax = jnp.max(tile_amax)
+        if amax_units == "real":
+            amax = amax * scale[0]
+        elif amax_units != "grid":
+            raise ValueError(f"unknown amax_units {amax_units!r}")
+        return out[:m, :n], amax
     return out[:m, :n]

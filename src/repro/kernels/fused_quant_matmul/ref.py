@@ -1,21 +1,43 @@
-"""Pure-jnp oracle for fused_quant_matmul."""
+"""Pure-jnp oracle for fused_quant_matmul: the UNFUSED quantize-after-matmul
+composition (f32-accumulated bf16 GEMM, then a separate Q pass), against
+which the fused kernel is locked bit-for-bit."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fp8_formats import get_format
-from repro.core.quantize import sr_fp8_via_f16
+from repro.core.quantize import quantize_rne, sr_fp8_via_f16
 
 
-def fused_quant_matmul_ref(a, b, rand8, scale, *, out_format: str = "e5m2",
-                           rounding: str = "sr", saturate: bool = True):
+def _dot(a, b, dims: str):
+    a = a.astype(jnp.bfloat16)
+    b = b.astype(jnp.bfloat16)
+    if dims == "nn":
+        contract = (((1,), (0,)), ((), ()))
+    elif dims == "nt":
+        contract = (((1,), (1,)), ((), ()))
+    elif dims == "tn":
+        contract = (((0,), (0,)), ((), ()))
+    else:
+        raise ValueError(f"unknown dims {dims!r}")
+    return jax.lax.dot_general(a, b, contract,
+                               preferred_element_type=jnp.float32)
+
+
+def fused_quant_matmul_ref(a, b, rand8, scale, *, dims: str = "nn",
+                           out_format: str = "e5m2",
+                           rounding: str = "sr", saturate: bool = True,
+                           with_amax: bool = False):
     fmt = get_format(out_format)
-    acc = jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
-                  preferred_element_type=jnp.float32)
+    acc = _dot(a, b, dims)
     y = acc * (1.0 / scale.reshape(()))
     if rounding == "rne":
-        if saturate:
-            y = jnp.clip(y, -fmt.max_normal, fmt.max_normal)
-        return y.astype(fmt.dtype)
-    return sr_fp8_via_f16(y, rand8, fmt, saturate=saturate)
+        q = quantize_rne(y, fmt, saturate=saturate)
+    else:
+        q = sr_fp8_via_f16(y, rand8, fmt, saturate=saturate)
+    if with_amax:
+        # Grid-units amax of the quantized payload (see ops.fused_quant_matmul
+        # amax_units='grid').
+        return q, jnp.max(jnp.abs(q.astype(jnp.float32)))
+    return q

@@ -6,10 +6,21 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 Compiles a named VARIANT of a dry-run cell (a dict of ModelConfig /
 PrecisionPolicy overrides), derives the roofline terms, and appends the
 record to experiments/perf/<arch>_<shape>.jsonl — the raw material for the
-hypothesis -> change -> measure log.
+hypothesis -> change -> measure log. The roofline summary of each variant
+is also merged into the repo-root BENCH_perf_<arch>_<shape>.json trajectory
+file (one entry per variant) so fused-vs-unfused style A/B pairs are
+directly comparable across PRs.
 
   PYTHONPATH=src python -m repro.launch.perf --arch mistral-large-123b \
       --shape decode_32k --variant kv_fp8 --set policy.kv_cache_format=e5m2
+
+Fused-epilogue A/B (the quantize-in-epilogue GEMM path of core.qlinear):
+
+  ... --variant fused   --set policy.quant.backend=pallas \
+                              policy.quant.scaling=delayed
+  ... --variant unfused --set policy.quant.backend=pallas \
+                              policy.quant.scaling=delayed \
+                              policy.quant.fuse_epilogue=false
 """
 import argparse
 import json
@@ -23,6 +34,24 @@ from repro.launch.mesh import (enter_mesh, jit_shardings,
                                make_production_mesh)
 from repro.launch.specs import build_cell, parse_overrides
 from repro.roofline.analysis import analyze_record
+
+
+def _update_bench_trajectory(arch: str, shape: str, variant: str, rec: dict):
+    """Merge one successful variant's roofline summary into the repo-root
+    BENCH_perf_<arch>_<shape>.json (keyed by variant — re-running a variant
+    overwrites its entry, so the file tracks the latest number per variant)."""
+    path = Path(__file__).resolve().parents[3] \
+        / f"BENCH_perf_{arch}_{shape}.json"
+    try:
+        current = json.loads(path.read_text()) if path.exists() else {}
+    except (OSError, ValueError):
+        current = {}
+    r = rec["roofline"]
+    current[variant] = dict(
+        compute_s=r["compute_s"], memory_s=r["memory_s"],
+        collective_s=r["collective_s"], dominant=r["dominant"],
+        peak_gib=r["peak_gib"], overrides=rec.get("overrides", {}))
+    path.write_text(json.dumps(current, indent=1) + "\n")
 
 
 def run_variant(arch: str, shape: str, variant: str, overrides: dict, *,
@@ -54,6 +83,8 @@ def run_variant(arch: str, shape: str, variant: str, overrides: dict, *,
                                + ma.temp_size_in_bytes
                                - ma.alias_size_in_bytes))
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):   # older jax: one dict/device
+                ca = ca[0]
             rec["cost"] = {k: float(v) for k, v in ca.items()
                            if k in ("flops", "bytes accessed",
                                     "transcendentals")}
@@ -69,6 +100,7 @@ def run_variant(arch: str, shape: str, variant: str, overrides: dict, *,
     with open(out / f"{arch}_{shape}.jsonl", "a") as f:
         f.write(json.dumps(rec) + "\n")
     if rec["status"] == "ok":
+        _update_bench_trajectory(arch, shape, variant, rec)
         r = rec["roofline"]
         print(f"[perf] {arch} {shape} {variant}: compute={r['compute_s']:.3e}"
               f" memory={r['memory_s']:.3e} coll={r['collective_s']:.3e}"

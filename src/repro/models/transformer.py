@@ -273,7 +273,8 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
         # Per-layer scale sites: sites inside the scan body are registered
         # with multiplicity n_groups (scope(..., layers=)), so the registry
         # holds one ScaleState row per LAYER, not per stack position. The
-        # stacked (n_groups,) scale vectors and (n_groups, 2) E/G tokens of
+        # stacked (n_groups,) scale vectors and (n_groups, TOKEN_CHANNELS)
+        # observation tokens (E/G/fused-dgrad channels) of
         # those sites are threaded through the scan as xs — each iteration
         # reads ITS layer's scale slice (layer_view), and each iteration's
         # observations exit per-layer through the aux ys / stacked token

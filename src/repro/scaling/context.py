@@ -19,6 +19,14 @@ registry keys:
     "{S}#E"         — the error tensor dY quantized in backward
     "{S}#G"         — the FP8-stored weight gradient (if a weight operand)
 
+Sites whose GEMMs route through the fused quantize-in-epilogue kernels
+(core.qlinear with backend="pallas*" + delayed scaling) additionally
+quantize their GEMM *outputs* in the epilogue and register:
+
+    "{S}#y.A"       — the forward output Y = Q(A.W) (activation class)
+    "{S}#da.E"      — the dgrad output dA = Q_E(dY.W^T) (error class;
+                      "#db.E" when the weight is operand a instead)
+
 Raw (non-qeinsum) sites — the FP8 KV cache — use "{S}#A".
 
 Modes
@@ -45,6 +53,12 @@ import jax.numpy as jnp
 _CLASS_LETTER = {"weight": "W", "act": "A", "error": "E", "grad": "G"}
 
 AMAX_PREFIX = "amax/"
+
+# Channels of a site's backward-observation token cotangent:
+#   [amax_E (quantized dY), amax_G (FP8-stored weight grad),
+#    amax of the error-class fused dgrad output (0 unless the site's GEMMs
+#    run through the fused quantize-in-epilogue path)].
+TOKEN_CHANNELS = 3
 
 
 @dataclasses.dataclass
@@ -138,7 +152,7 @@ class ScaleContext:
                 return t
         t = self.tokens.get(site_key)
         if t is None:
-            return jnp.zeros((2,), jnp.float32)
+            return jnp.zeros((TOKEN_CHANNELS,), jnp.float32)
         return t
 
     # -- forward observation -------------------------------------------------
@@ -299,3 +313,16 @@ def operand_keys(site_key: str, classes) -> Dict[str, str]:
     ca, cb = _CLASS_LETTER[classes[0]], _CLASS_LETTER[classes[1]]
     return {"a": f"{site_key}#a.{ca}", "b": f"{site_key}#b.{cb}",
             "E": f"{site_key}#E", "G": f"{site_key}#G"}
+
+
+def fused_output_keys(site_key: str, classes) -> Dict[str, str]:
+    """Registry keys for the GEMM *outputs* a fused quantize-in-epilogue
+    site additionally quantizes: the forward output Y (activation class)
+    and — when one operand is an activation — the error-class dgrad output
+    flowing back to it ("#da.E" / "#db.E" by operand position)."""
+    out = {"y": f"{site_key}#y.A"}
+    if classes[0] != "weight":
+        out["err"] = f"{site_key}#da.E"
+    elif classes[1] != "weight":
+        out["err"] = f"{site_key}#db.E"
+    return out

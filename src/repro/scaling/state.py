@@ -187,12 +187,14 @@ class DelayedScaling:
         return ScaleState.create(len(self.registry), self.config.history_len)
 
     def zero_tokens(self) -> Dict[str, Array]:
-        """Per-site E/G cotangent tokens; pass as a differentiated input of
-        the loss, the token 'gradients' come back as observed bwd amaxes.
-        Per-layer (scanned-stack) sites get a stacked (n_layers, 2) token
-        whose rows are threaded through scan xs — their cotangents come back
-        one row per layer."""
-        return {s: jnp.zeros((n, 2) if n > 1 else (2,), jnp.float32)
+        """Per-site backward-observation tokens (scale_ctx.TOKEN_CHANNELS
+        channels: E / G / fused dgrad output); pass as a differentiated
+        input of the loss, the token 'gradients' come back as observed bwd
+        amaxes. Per-layer (scanned-stack) sites get a stacked
+        (n_layers, TOKEN_CHANNELS) token whose rows are threaded through
+        scan xs — their cotangents come back one row per layer."""
+        c = scale_ctx.TOKEN_CHANNELS
+        return {s: jnp.zeros((n, c) if n > 1 else (c,), jnp.float32)
                 for s, n in self.registry.token_site_layers.items()}
 
     def scales_dict(self, state: ScaleState) -> Dict[str, Array]:
@@ -314,11 +316,19 @@ def split_observations(metrics: Dict[str, Array],
     for site, tok in token_grads.items():
         inv = 1.0 / max(1, registry.token_uses.get(site, 1))
         ek, gk = f"{site}#E", f"{site}#G"
-        # tok is (2,) for ordinary sites; (n_layers, 2) for per-layer
-        # scanned-stack sites (one cotangent row per scan iteration) —
-        # [..., c] handles both, yielding a scalar or (n_layers,) vector.
+        # tok is (TOKEN_CHANNELS,) for ordinary sites; (n_layers, C) for
+        # per-layer scanned-stack sites (one cotangent row per scan
+        # iteration) — [..., c] handles both, yielding a scalar or
+        # (n_layers,) vector.
         if ek in registry.index:
             observed[ek] = tok[..., 0] * inv
         if gk in registry.index:
             observed[gk] = tok[..., 1] * inv
+        if tok.shape[-1] > 2:
+            # Fused-epilogue sites: channel 2 is the error-class dgrad
+            # output observation ("#da.E" / "#db.E" by which operand the
+            # error flows back to).
+            for dk in (f"{site}#da.E", f"{site}#db.E"):
+                if dk in registry.index:
+                    observed[dk] = tok[..., 2] * inv
     return observed

@@ -1,0 +1,320 @@
+"""Fused quantize-in-epilogue GEMM path: lowering + bit-for-bit parity.
+
+Locks the three guarantees of the fused qeinsum path (backend="pallas*" +
+delayed scaling):
+
+  1. Routing: fwd, dgrad and wgrad all lower to Pallas calls — no silent
+     XLA fallback (the bug this PR fixes: the adjoint specs were rejected
+     by _pallas_matmul_spec and fell back to jnp.einsum, plus a separate
+     _fake_quant_grad pass over HBM).
+  2. Numerics: fused output + grads bit-match the unfused
+     quantize->matmul composition (the ref oracle) under both recipes.
+  3. Observations: the fused-epilogue amaxes bit-match the `_observe`
+     bit-pattern reduction over the (identical) materialized payloads, and
+     are invariant to the (bm, bk, bn) tiling choice.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision_policy import ACT, ERROR, GRAD, WEIGHT, QuantConfig
+from repro.core.qlinear import (N_SCALES, _fused_epilogue, _quant_operand,
+                                qeinsum)
+from repro.core.quantize import fp8_amax_bits
+from repro.kernels.fused_quant_matmul import (fused_quant_matmul,
+                                              fused_quant_matmul_ref)
+from repro.scaling import context as sc
+from repro.scaling.state import (DelayedScaling, ScalingConfig, SiteRegistry,
+                                 split_observations)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(recipe):
+    return QuantConfig(recipe=recipe, scaling="delayed",
+                       backend="pallas_interpret")
+
+
+def _site_bundle(cfg, classes=("act", "weight")):
+    keys = sc.operand_keys("s", classes)
+    fkeys = sc.fused_output_keys("s", classes)
+    reg = SiteRegistry(list(keys.values()) + list(fkeys.values()), ("s",))
+    ds = DelayedScaling(reg, ScalingConfig(), qcfg=cfg)
+    return keys, fkeys, reg, ds
+
+
+def _run_step(ds, cfg, a, b, key, *, spec="bsk,kn->bsn"):
+    """One fused training step through qeinsum; returns (y, grads,
+    observations)."""
+    def loss(a, b, tokens):
+        with ds.collect(ds_state, tokens):
+            y = qeinsum(spec, a, b, key=key, cfg=cfg, site="s")
+            aux = sc.drain_aux()
+        return y.astype(jnp.float32).sum(), (y, aux)
+
+    ds_state = _run_step.state
+    (_, (y, aux)), grads = jax.value_and_grad(
+        loss, argnums=(0, 1, 2), has_aux=True)(a, b, ds.zero_tokens())
+    obs = split_observations(dict(aux), grads[2], ds.registry)
+    return y, grads[:2], obs
+
+
+# ---------------------------------------------------------------------------
+# 1. routing: all three GEMMs lower to Pallas, none to XLA dots
+# ---------------------------------------------------------------------------
+
+def _count_prims(jaxpr, inside_pallas=False, counts=None):
+    """Count (pallas_call, dot_general-outside-pallas) over nested jaxprs."""
+    if counts is None:
+        counts = {"pallas": 0, "outside_dot": 0}
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            counts["pallas"] += 1
+        elif name == "dot_general" and not inside_pallas:
+            counts["outside_dot"] += 1
+        inner = inside_pallas or name == "pallas_call"
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: hasattr(x, "eqns")
+                    or hasattr(x, "jaxpr")):
+                if hasattr(sub, "jaxpr"):
+                    _count_prims(sub.jaxpr, inner, counts)
+                elif hasattr(sub, "eqns"):
+                    _count_prims(sub, inner, counts)
+    return counts
+
+
+class TestFusedLowering:
+    @pytest.mark.parametrize("recipe", ["paper_e5m2", "hybrid"])
+    def test_three_pallas_calls_no_xla_dots(self, recipe):
+        cfg = _cfg(recipe)
+        _, _, reg, ds = _site_bundle(cfg)
+        a = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+        b = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+        state = ds.init()
+
+        def step(a, b, tokens):
+            def loss(a, b, tokens):
+                with ds.collect(state, tokens):
+                    y = qeinsum("bsk,kn->bsn", a, b,
+                                key=jax.random.PRNGKey(2), cfg=cfg, site="s")
+                    sc.drain_aux()
+                return y.astype(jnp.float32).sum()
+            return jax.grad(loss, argnums=(0, 1, 2))(a, b, tokens)
+
+        counts = _count_prims(jax.make_jaxpr(step)(
+            a, b, ds.zero_tokens()).jaxpr)
+        assert counts["pallas"] == 3, counts   # fwd nn + dgrad nt + wgrad tn
+        assert counts["outside_dot"] == 0, counts
+
+    def test_unfused_delayed_pallas_falls_back_for_adjoints(self):
+        """With fuse_epilogue=False the fwd GEMM still runs the plain
+        fp8_matmul kernel but both adjoints fall back to XLA dots — the
+        regression this PR fixes; kept as documentation of the off switch."""
+        cfg = dataclasses.replace(_cfg("paper_e5m2"), fuse_epilogue=False)
+        _, _, reg, ds = _site_bundle(cfg)
+        a = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+        b = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+        state = ds.init()
+
+        def step(a, b, tokens):
+            def loss(a, b, tokens):
+                with ds.collect(state, tokens):
+                    y = qeinsum("bsk,kn->bsn", a, b,
+                                key=jax.random.PRNGKey(2), cfg=cfg, site="s")
+                    sc.drain_aux()
+                return y.astype(jnp.float32).sum()
+            return jax.grad(loss, argnums=(0, 1, 2))(a, b, tokens)
+
+        counts = _count_prims(jax.make_jaxpr(step)(
+            a, b, ds.zero_tokens()).jaxpr)
+        assert counts["pallas"] == 1, counts
+        assert counts["outside_dot"] >= 2, counts
+
+    def test_attention_specs_not_fused(self):
+        cfg = _cfg("paper_e5m2")
+        assert not _fused_epilogue("bhqd,bhkd->bhqk", ("act", "act"), cfg)
+        assert _fused_epilogue("bsk,kn->bsn", ("act", "weight"), cfg)
+        assert not _fused_epilogue(
+            "bsk,kn->bsn", ("act", "weight"),
+            dataclasses.replace(cfg, scaling="none"))
+        assert not _fused_epilogue(
+            "bsk,kn->bsn", ("act", "weight"),
+            dataclasses.replace(cfg, backend="xla"))
+
+
+# ---------------------------------------------------------------------------
+# 2 + 3. bit parity with the unfused composition; observations == _observe
+# ---------------------------------------------------------------------------
+
+def _bits(x):
+    return np.asarray(x).view(np.uint8)
+
+
+class TestFusedParity:
+    @pytest.mark.parametrize("recipe", ["paper_e5m2", "hybrid"])
+    def test_qeinsum_bit_matches_unfused_composition(self, recipe):
+        """Fused fwd/dgrad/wgrad outputs, grads and amax observations all
+        bit-match the quantize->matmul composition (ref oracle) built from
+        the same operands, scales and SR bits."""
+        cfg = _cfg(recipe)
+        keys_, fkeys, reg, ds = _site_bundle(cfg)
+        a = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))
+        b = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+        key = jax.random.PRNGKey(7)
+
+        state = ds.init()
+        _run_step.state = state
+        _, _, obs0 = _run_step(ds, cfg, a, b, key)   # warmup: scales <- amax
+        state = ds.update(state, obs0)
+        _run_step.state = state
+        y, (ga, gb), obs = _run_step(ds, cfg, a, b, key)
+        scales = ds.scales_dict(state)
+
+        # ---- reference: unfused quantize -> matmul -> quantize composition
+        k_a, k_b, k_bwd, k_y = jax.random.split(key, 4)
+        k_e, k_da, k_db = jax.random.split(k_bwd, 3)
+        s_a, s_b = scales[keys_["a"]], scales[keys_["b"]]
+        s_e, s_g = scales[keys_["E"]], scales[keys_["G"]]
+        s_y, s_err = scales[fkeys["y"]], scales[fkeys["err"]]
+        qa = _quant_operand(a, ACT, cfg, k_a, scale=jnp.float32(s_a))
+        qb = _quant_operand(b, WEIGHT, cfg, k_b, scale=jnp.float32(s_b))
+        a2 = qa.data.reshape((-1, 32))
+        m = a2.shape[0]
+
+        def ref_gemm(x8, w8, sx, sw, s_out, rkey, cls, dims, mn):
+            kscale = jnp.float32(s_out) / (sx * sw).astype(jnp.float32)
+            rand8 = jax.random.bits(rkey, mn, jnp.uint8) \
+                if cfg.rounding_for(cls) == "sr" \
+                else jnp.zeros(mn, jnp.uint8)
+            q, amax = fused_quant_matmul_ref(
+                x8, w8, rand8, kscale.reshape((1,)), dims=dims,
+                out_format=cfg.format_for(cls),
+                rounding=cfg.rounding_for(cls),
+                saturate=cfg.saturate_for(cls), with_amax=True)
+            deq = (q.astype(jnp.float32) * jnp.float32(s_out)) \
+                .astype(jnp.bfloat16)
+            return q, deq, amax * jnp.float32(s_out)
+
+        # fwd: Y = Q_A(A.W)
+        y8, y_ref, amax_y = ref_gemm(a2, qb.data, qa.scale, qb.scale, s_y,
+                                     k_y, ACT, "nn", (m, 16))
+        np.testing.assert_array_equal(
+            _bits(y), _bits(y_ref.reshape(y.shape)))
+        # bwd: dy = ones (cotangent of .sum()); E-quantized as usual
+        dy = jnp.ones((3, 8, 16), jnp.bfloat16)
+        qdy = _quant_operand(dy, ERROR, cfg, k_e, scale=jnp.float32(s_e))
+        dy2 = qdy.data.reshape((-1, 16))
+        # dgrad: dA = Q_E(dY . W^T)
+        da8, da_ref, amax_da = ref_gemm(dy2, qb.data, qdy.scale, qb.scale,
+                                        s_err, k_da, ERROR, "nt", (m, 32))
+        np.testing.assert_array_equal(
+            _bits(ga), _bits(da_ref.reshape(a.shape).astype(a.dtype)))
+        # wgrad: dW = Q_G(A^T . dY)
+        db8, db_ref, amax_g = ref_gemm(a2, dy2, qa.scale, qdy.scale, s_g,
+                                       k_db, GRAD, "tn", (32, 16))
+        np.testing.assert_array_equal(
+            _bits(gb), _bits(db_ref.astype(b.dtype)))
+
+        # ---- observations: fused epilogue == _observe bit-pattern reduce
+        # over the (bit-identical) materialized payloads. Exact f32 equality.
+        expect = {
+            fkeys["y"]: fp8_amax_bits(y8) * jnp.float32(s_y),
+            fkeys["err"]: fp8_amax_bits(da8) * jnp.float32(s_err),
+            keys_["G"]: fp8_amax_bits(db8) * jnp.float32(s_g),
+            keys_["E"]: fp8_amax_bits(qdy.data) * qdy.scale,
+            keys_["a"]: fp8_amax_bits(qa.data) * qa.scale,
+            keys_["b"]: fp8_amax_bits(qb.data) * qb.scale,
+        }
+        for k, v in expect.items():
+            assert np.float32(obs[k]).tobytes() == np.float32(v).tobytes(), k
+        # and the fused-epilogue amaxes agree with the ref-side epilogue
+        for got, want in [(obs[fkeys["y"]], amax_y),
+                          (obs[fkeys["err"]], amax_da),
+                          (obs[keys_["G"]], amax_g)]:
+            assert float(got) == float(want)
+
+    def test_weight_on_lhs(self):
+        """classes=(weight, act): the error output flows to operand b
+        ("#db.E") and the weight grad to operand a."""
+        cfg = _cfg("hybrid")
+        classes = ("weight", "act")
+        fkeys = sc.fused_output_keys("s", classes)
+        assert fkeys["err"] == "s#db.E"
+        keys_ = sc.operand_keys("s", classes)
+        reg = SiteRegistry(list(keys_.values()) + list(fkeys.values()),
+                           ("s",))
+        ds = DelayedScaling(reg, ScalingConfig(), qcfg=cfg)
+        w = jax.random.normal(jax.random.PRNGKey(0), (8, 32)) * 0.1
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        state = ds.init()
+
+        def loss(w, x, tokens):
+            with ds.collect(state, tokens):
+                y = qeinsum("mk,kn->mn", w, x, key=jax.random.PRNGKey(2),
+                            cfg=cfg, classes=classes, site="s")
+                aux = sc.drain_aux()
+            return y.astype(jnp.float32).sum(), aux
+
+        (_, aux), grads = jax.value_and_grad(
+            loss, argnums=(0, 1, 2), has_aux=True)(w, x, ds.zero_tokens())
+        obs = split_observations(dict(aux), grads[2], reg)
+        assert "s#db.E" in obs and "s#G" in obs and "s#y.A" in obs
+        assert all(np.isfinite(np.asarray(v)).all() for v in obs.values())
+
+
+# ---------------------------------------------------------------------------
+# ops-level: tiling invariance of SR bits + masked amax (padding bugfix)
+# ---------------------------------------------------------------------------
+
+class TestTilingInvariance:
+    @pytest.mark.parametrize("dims,ash,bsh", [
+        ("nn", (40, 200), (200, 130)),
+        ("nt", (40, 200), (130, 200)),
+        ("tn", (200, 40), (200, 130)),
+    ])
+    @pytest.mark.parametrize("rounding", ["rne", "sr"])
+    def test_output_and_amax_invariant_to_blocks(self, dims, ash, bsh,
+                                                 rounding):
+        """Padding used to draw SR bits over the PADDED shape and scan dead
+        tiles in the amax epilogue, making results depend on (bm, bk, bn).
+        Now rand bits are drawn on the logical (m, n) and padding is masked
+        out of the amax."""
+        a = (jax.random.normal(jax.random.PRNGKey(0), ash) * 0.25).astype(
+            jnp.float8_e5m2)
+        b = (jax.random.normal(jax.random.PRNGKey(1), bsh) * 0.1).astype(
+            jnp.float8_e5m2)
+        key = jax.random.PRNGKey(2)
+        outs = []
+        for blocks in [(32, 128, 128), (64, 256, 256), (8, 512, 128)]:
+            bm, bk, bn = blocks
+            y, amax = fused_quant_matmul(
+                a, b, key, jnp.array([2.0]), dims=dims, bm=bm, bk=bk, bn=bn,
+                rounding=rounding, with_amax=True, amax_units="grid",
+                interpret=True)
+            outs.append((np.asarray(y).view(np.uint8), float(amax)))
+        for o, am in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0][0])
+            assert am == outs[0][1]
+
+    def test_sr_bits_match_logical_draw(self):
+        """The SR bits consumed for logical cells are exactly
+        jax.random.bits(key, (m, n)) — independent of padding — so the
+        fused output bit-matches the ref composition on awkward shapes."""
+        m, k, n = 36, 130, 70
+        a = (jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.25).astype(
+            jnp.float8_e5m2)
+        b = (jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1).astype(
+            jnp.float8_e5m2)
+        key = jax.random.PRNGKey(3)
+        y = fused_quant_matmul(a, b, key, jnp.array([1.5]), bm=32, bk=128,
+                               bn=128, rounding="sr", interpret=True)
+        rand8 = jax.random.bits(key, (m, n), jnp.uint8)
+        ref = fused_quant_matmul_ref(a, b, rand8, jnp.array([1.5]),
+                                     rounding="sr")
+        np.testing.assert_array_equal(np.asarray(y).view(np.uint8),
+                                      np.asarray(ref).view(np.uint8))

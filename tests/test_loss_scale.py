@@ -66,6 +66,36 @@ class TestEnhanced:
         st_ = s.update(st_, jnp.asarray(False))
         assert float(st_.scale) >= 32768.0
 
+    @pytest.mark.parametrize("knot_step,knot_min", [(40_000, 8192.0),
+                                                    (150_000, 32768.0)])
+    def test_floor_engages_exactly_at_knot(self, knot_step, knot_min):
+        """The update that PRODUCES step == knot_step must already clamp to
+        the knot's floor (the floor is evaluated at the post-increment
+        step; evaluating it pre-increment engages every knot one update
+        late)."""
+        s = gnmt_scaler()
+        # Overflow on the update landing exactly on the knot: back-off wants
+        # scale/2, the knot floor must win.
+        st_ = dataclasses.replace(s.init(), step=jnp.asarray(knot_step - 1),
+                                  scale=jnp.asarray(knot_min, jnp.float32))
+        st_ = s.update(st_, jnp.asarray(False))
+        assert int(st_.step) == knot_step
+        assert float(st_.scale) == knot_min
+
+    @pytest.mark.parametrize("knot_step,knot_min", [(40_000, 8192.0),
+                                                    (150_000, 32768.0)])
+    def test_floor_inactive_one_before_knot(self, knot_step, knot_min):
+        """One update earlier (producing step == knot_step - 1) the knot is
+        not yet in force: back-off may drop below the knot's floor."""
+        s = gnmt_scaler()
+        st_ = dataclasses.replace(s.init(), step=jnp.asarray(knot_step - 2),
+                                  scale=jnp.asarray(knot_min, jnp.float32))
+        st_ = s.update(st_, jnp.asarray(False))
+        assert int(st_.step) == knot_step - 1
+        prev_floor = float(s.min_scale_at(jnp.asarray(knot_step - 1)))
+        assert float(st_.scale) == max(knot_min * s.backoff_factor,
+                                       prev_floor)
+
     @settings(max_examples=50, deadline=None)
     @given(st.lists(st.booleans(), min_size=1, max_size=60),
            st.integers(min_value=0, max_value=300_000))
@@ -77,7 +107,9 @@ class TestEnhanced:
             st_ = s.update(st_, jnp.asarray(f))
             scale = float(st_.scale)
             assert 0 < scale <= s.max_scale
-            floor = float(s.min_scale_at(st_.step - 1))
+            # The floor in force is the post-increment step's (= st_.step
+            # after the update).
+            floor = float(s.min_scale_at(st_.step))
             assert scale >= min(floor, s.init_scale)
 
 
