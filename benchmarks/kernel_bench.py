@@ -63,14 +63,21 @@ def bench_fused_vs_unfused(*, m=512, k=512, n=512, iters=10):
     fused = jax.jit(lambda a, b, r: fused_quant_matmul_ref(
         a, b, r, scale.reshape((1,)), with_amax=True))
 
+    # Best-of-3 repeats: single-digit-iteration CPU wall times jitter by
+    # tens of percent, and the trajectory file should not record scheduler
+    # noise as a perf regression (min is the standard noise-robust wall
+    # estimator).
     unfused(a8, b8, rand8)  # compile
-    t0 = time.time()
-    for _ in range(iters):
-        out_u = unfused(a8, b8, rand8)
-    jax.block_until_ready(out_u)
-    unfused_us = (time.time() - t0) / iters * 1e6
+    unfused_us = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for _ in range(iters):
+            out_u = unfused(a8, b8, rand8)
+        jax.block_until_ready(out_u)
+        unfused_us = min(unfused_us, (time.time() - t0) / iters * 1e6)
 
-    fused_us = timed(fused, a8, b8, rand8, iters=iters)
+    fused_us = min(timed(fused, a8, b8, rand8, iters=iters)
+                   for _ in range(3))
 
     q_u, amax_u = out_u
     q_f, amax_f = fused(a8, b8, rand8)
@@ -123,6 +130,129 @@ def bench_pallas_sweep(*, smoke=False):
     return out
 
 
+def bench_attention(*, smoke=False):
+    """Fused FP8 flash-attention vs the unfused S/P-materializing
+    composition.
+
+    On CPU the wall comparison runs the XLA analogues of the two dataflows
+    (same methodology as bench_fused_vs_unfused): the unfused side is four
+    separately-jitted passes (QK^T scores -> Q pass on S -> softmax + Q
+    pass on P -> PV), each consumer reading its producer's materialized
+    S/P-shaped buffer; the fused side is ONE jitted program computing the
+    identical composition in a single fusion. The recorded signal is the
+    wall ratio plus the interpret-mode parity bits of the actual Pallas
+    kernels against the oracle, and the modeled HBM bytes the kernel never
+    moves (S f32 write+read, S8 write+read, P f32 write+read, P8
+    write+read per score element — the kernel writes only the (Q, D)
+    output)."""
+    from repro.kernels.fp8_attention import (fp8_attention_bwd,
+                                             fp8_attention_bwd_ref,
+                                             fp8_attention_fwd,
+                                             fp8_attention_fwd_ref)
+    b, h, hkv, s, d = (1, 2, 1, 128, 64) if smoke else (2, 4, 2, 256, 64)
+    q8, k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                     (b, h if i == 0 else hkv, s, d))
+                   * 0.3).astype(jnp.float8_e4m3fn) for i in range(3)]
+    seed = jnp.uint32(7)
+    scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+    kw = dict(mask_mode="causal", fmt_s="e4m3", fmt_p="e4m3",
+              rounding_s="sr", rounding_p="sr")
+    fmt = get_format("e4m3")
+
+    # Unfused XLA analogue: separately-jitted passes with materialized S/P.
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+
+    def rep(x):
+        return jnp.repeat(x, h // hkv, axis=1)
+
+    scores = jax.jit(lambda q, k: jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.bfloat16),
+        rep(k).astype(jnp.bfloat16), preferred_element_type=jnp.float32))
+    qpass_s = jax.jit(lambda y, r: sr_fp8_via_f16(y * scal[0], r, fmt))
+    softq = jax.jit(lambda s8, r: sr_fp8_via_f16(
+        jax.nn.softmax(jnp.where(mask, s8.astype(jnp.float32) * scal[1],
+                                 -1e30), axis=-1) * scal[2], r, fmt))
+    pv = jax.jit(lambda p8, v: jnp.einsum(
+        "bhqk,bhkd->bhqd", p8.astype(jnp.bfloat16),
+        rep(v).astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32) * scal[3])
+    r1 = jax.random.bits(jax.random.PRNGKey(8), (b, h, s, s), jnp.uint8)
+    r2 = jax.random.bits(jax.random.PRNGKey(9), (b, h, s, s), jnp.uint8)
+
+    def unfused(q, k, v):
+        y = scores(q, k)          # materialize f32 S
+        s8 = qpass_s(y, r1)       # separate Q pass
+        p8 = softq(s8, r2)        # softmax + Q pass on P
+        return pv(p8, v)          # PV from materialized P8
+
+    def composition(q, k, v, r1, r2):
+        y = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.bfloat16),
+                       rep(k).astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        s8 = sr_fp8_via_f16(y * scal[0], r1, fmt)
+        p = jax.nn.softmax(jnp.where(mask,
+                                     s8.astype(jnp.float32) * scal[1],
+                                     -1e30), axis=-1)
+        p8 = sr_fp8_via_f16(p * scal[2], r2, fmt)
+        return jnp.einsum("bhqk,bhkd->bhqd", p8.astype(jnp.bfloat16),
+                          rep(v).astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32) * scal[3]
+
+    fused = jax.jit(composition)
+
+    # Best-of-3 repeats (see bench_fused_vs_unfused on wall-time noise).
+    unfused(q8, k8, v8)
+    iters = 5 if smoke else 10
+    unfused_us = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for _ in range(iters):
+            out_u = unfused(q8, k8, v8)
+        jax.block_until_ready(out_u)
+        unfused_us = min(unfused_us, (time.time() - t0) / iters * 1e6)
+    fused_us = min(timed(fused, q8, k8, v8, r1, r2, iters=iters)
+                   for _ in range(3))
+
+    # Interpret-mode parity of the actual Pallas kernels vs the oracle.
+    o, a_s, a_p = fp8_attention_fwd(q8, k8, v8, seed, scal,
+                                    interpret=True, **kw)
+    ro, ra_s, ra_p, _, _ = fp8_attention_fwd_ref(q8, k8, v8, seed, scal,
+                                                 **kw)
+    fwd_eq = bool((np.asarray(o).view(np.uint8)
+                   == np.asarray(ro).view(np.uint8)).all()) \
+        and float(a_s) == float(ra_s) and float(a_p) == float(ra_p)
+    do8 = (jax.random.normal(jax.random.PRNGKey(4), (b, h, s, d))
+           * 0.2).astype(jnp.float8_e5m2)
+    bscal = jnp.array([0.5, 2.0, 8.0, 0.125, 0.7, 1.5, 0.3, 0.8, 0.9,
+                       0.05], jnp.float32)
+    bkw = dict(mask_mode="causal", fmt_s="e4m3", fmt_p="e4m3",
+               fmt_e="e5m2", rounding_s="sr", rounding_p="sr",
+               rounding_e="sr", saturate_e=False)
+    outs = fp8_attention_bwd(q8, k8, v8, do8, seed, bscal, interpret=True,
+                             **bkw)
+    refs = fp8_attention_bwd_ref(q8, k8, v8, do8, seed, bscal, **bkw)
+    bwd_eq = all(bool((np.asarray(a) == np.asarray(r)).all())
+                 for a, r in zip(outs[:3], refs[:3])) \
+        and float(outs[3]) == float(refs[3]) \
+        and float(outs[4]) == float(refs[4])
+
+    # Modeled HBM traffic the kernel eliminates: per score element the
+    # unfused forward moves S f32 (4w+4r) + S8 (1w+1r) + P f32 (4w+4r) +
+    # P8 (1w+1r) = 20 bytes; fused moves none of it.
+    sp_bytes = b * h * s * s * 20
+    out_bytes = b * h * s * d * 2
+    return {
+        "shape_bhsd": [b, h, s, d],
+        "unfused_us": unfused_us,
+        "fused_us": fused_us,
+        "fused_vs_unfused_wall_ratio": unfused_us / max(fused_us, 1e-9),
+        "fwd_bit_parity": fwd_eq,
+        "bwd_bit_parity": bwd_eq,
+        "model_sp_hbm_bytes_saved": sp_bytes,
+        "model_sp_vs_output_bytes_ratio": sp_bytes / out_bytes,
+    }
+
+
 def bench_kernels(*, smoke=False):
     out = {}
     key = jax.random.PRNGKey(0)
@@ -159,6 +289,8 @@ def bench_kernels(*, smoke=False):
                                 n=256 if smoke else 512)
     out.update({f"fused_epilogue_{k}": v for k, v in fv.items()})
     out.update(bench_pallas_sweep(smoke=smoke))
+    at = bench_attention(smoke=smoke)
+    out.update({f"attention_{k}": v for k, v in at.items()})
     save_bench("kernels", out)
     for k, v in out.items():
         print(f"kernels {k}: {v}")

@@ -77,6 +77,15 @@ class QuantConfig:
     # False keeps the quantize->matmul composition (the A/B side of the
     # fused-vs-unfused benchmark).
     fuse_epilogue: bool = True
+    # Fused FP8 flash-attention (Pallas backends + delayed scaling only):
+    # the attention inner products route through the chunked flash kernel —
+    # S = Q_A(QK^T) and the softmax probs P are quantized IN the kernel
+    # (with fused amax observation at the "#qk.A"/"#p.A" sites) and never
+    # materialized in HBM; the custom-VJP backward recomputes them from the
+    # FP8 residuals and quantizes the dP/dS intermediates to the error
+    # format ("#dp.E"/"#ds.E"). False keeps the unfused _sdpa composition
+    # (XLA fake-quant with full-precision S/P round trips).
+    fuse_attention: bool = True
 
     def __post_init__(self):
         # The recipe OWNS the per-class formats (idempotent under

@@ -271,7 +271,7 @@ def _qeinsum_bwd(spec, classes, cfg, res, ct):
     if classes[1] == WEIGHT:
         db, og = _fake_quant_grad(db, cfg, k_gb, scale=scales[3])
         obs_g = jnp.maximum(obs_g, og)
-    token_ct = jnp.stack([_observe(qdy, cfg), obs_g, jnp.float32(0.0)])
+    token_ct = scale_ctx.token_cotangent(e=_observe(qdy, cfg), g=obs_g)
     # Cotangents match primal dtypes; the integer PRNG key gets float0 zeros.
     return (da.astype(a_dtype), db.astype(b_dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
@@ -313,7 +313,8 @@ def _qeinsum_bwd_fused(spec, classes, cfg, qa, qb, k_bwd, scales,
         obs_g = jnp.maximum(obs_g, obs_db)
     else:
         obs_err = obs_db
-    token_ct = jnp.stack([_observe(qdy, cfg), obs_g, obs_err])
+    token_ct = scale_ctx.token_cotangent(e=_observe(qdy, cfg), g=obs_g,
+                                         err=obs_err)
     return (da.astype(a_dtype), db.astype(b_dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
             jnp.zeros((N_SCALES,), jnp.float32), token_ct)

@@ -1,0 +1,236 @@
+"""Pallas TPU kernels: fused FP8 flash-attention with quantize-in-epilogue
+S/P and delayed-scaling amax observation, zero S/P in HBM.
+
+The unfused composition (models.attention._sdpa under FP8) round-trips the
+(Q, S)-shaped score and prob matrices through HBM at full precision: QK^T
+write + softmax read/write + Q-node read/write + PV read — O(Q*S) bytes of
+traffic that dominates the training-step bandwidth at long context. These
+kernels keep the whole S -> softmax -> P pipeline in VMEM: per query block
+the score tile is computed, quantized to FP8 (the paper's Q_A node), fed
+through a chunk-sequential softmax, re-quantized as FP8 probs and
+immediately contracted with V — only the (Q, D) output and two scalar amax
+observations per site ever leave the chip. The backward kernel recomputes
+S8/P8 from the FP8 residuals (flash-attention style; the counter-based SR
+hash in ref.py makes the recomputation bit-exact) and quantizes the dP/dS
+intermediates to the error format so every backward GEMM is fp8 x fp8.
+
+All tile math lives in ref.py (`fwd_q_tile` / `bwd_q_tile`) and is shared
+verbatim with the unfused reference drivers, so kernel and oracle are
+bit-identical in interpret mode by construction. GQA is resolved in the
+block-index maps (kv head = q head // group) — the repeated K/V copies the
+unfused path materializes via `_repeat_kv` never exist here.
+
+Forward grid: (B, H, Q/block_q); K/V stream in as whole (padded) rows per
+(batch, kv-head). Backward grid: (B, H) with a fixed internal 128-row query
+tiling — dK/dV output blocks are revisited by the `group` consecutive query
+heads of a kv head and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fp8_formats import get_format
+from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.kernels.fp8_attention import ref as _r
+
+DEFAULT_BQ = 128
+TQ = 128           # fixed backward query-tile height (not a knob: backward
+#                    results are tiling-invariant by construction)
+
+
+def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
+              o_ref, as_ref, ap_ref, *, n_heads: int, group: int, bq: int,
+              mask_mode: str, window: int, q_len: int, s_len: int,
+              fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
+              saturate_s: bool, saturate_p: bool):
+    b, h, iq = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    kvmask = None if msk_ref is None else msk_ref[...]
+    o, amax_s, amax_p, _, _ = _r.fwd_q_tile(
+        q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask,
+        seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
+        scal=(scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3]),
+        mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
+        fmt_s=fmt_s, fmt_p=fmt_p, rounding_s=rounding_s,
+        rounding_p=rounding_p, saturate_s=saturate_s, saturate_p=saturate_p)
+    o_ref[0, 0] = o
+    as_ref[0, 0, 0] = amax_s
+    ap_ref[0, 0, 0] = amax_p
+
+
+def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
+                             block_q: int = DEFAULT_BQ,
+                             mask_mode: str = "causal", window: int = 0,
+                             q_len: int, s_len: int,
+                             fmt_s: str, fmt_p: str,
+                             rounding_s: str, rounding_p: str,
+                             saturate_s: bool, saturate_p: bool,
+                             interpret: bool = False):
+    """q8 (B,H,Qp,Dp), k8/v8 (B,Hkv,Sp,Dp) fp8 payloads (pre-padded: Qp a
+    block_q multiple, Sp/Dp LANE multiples); kv_mask None or (B,Sp) int8;
+    seed (1,) u32; scal (4,) f32 [f_s, s_s, f_p, f_o].
+
+    Returns (o (B,H,Qp,Dp) bf16, amax_s (B,H,nq) f32, amax_p (B,H,nq) f32)
+    with amaxes in grid units, masked to the logical (q_len, s_len) region.
+    """
+    b_, h_, qp, dp = q8.shape
+    hkv, sp = k8.shape[1], k8.shape[2]
+    group = h_ // hkv
+    bq = min(block_q, qp)
+    grid = (b_, h_, qp // bq)
+
+    def kv_index(b, h, i):
+        return (b, h // group, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, dp), lambda b, h, i: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, sp, dp), kv_index),
+        pl.BlockSpec((1, 1, sp, dp), kv_index),
+    ]
+    args = [q8, k8, v8]
+    if mask_mode == "kv":
+        in_specs.append(pl.BlockSpec((1, sp), lambda b, h, i: (b, 0)))
+        args.append(kv_mask)
+        body = _fwd_body
+    else:
+        body = functools.partial(_masked_none_fwd, _fwd_body)
+    in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
+                 pl.BlockSpec(memory_space=pltpu.SMEM)]
+    args += [scal, seed]
+    return pl.pallas_call(
+        functools.partial(body, n_heads=h_, group=group, bq=bq,
+                          mask_mode=mask_mode, window=window,
+                          q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p,
+                          rounding_s=rounding_s, rounding_p=rounding_p,
+                          saturate_s=saturate_s, saturate_p=saturate_p),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, 1, bq, dp), lambda b, h, i: (b, h, i, 0)),
+                   pl.BlockSpec((1, 1, 1), lambda b, h, i: (b, h, i)),
+                   pl.BlockSpec((1, 1, 1), lambda b, h, i: (b, h, i))),
+        out_shape=(jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((b_, h_, grid[2]), jnp.float32),
+                   jax.ShapeDtypeStruct((b_, h_, grid[2]), jnp.float32)),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+    )(*args)
+
+
+def _masked_none_fwd(body, q_ref, k_ref, v_ref, scal_ref, seed_ref,
+                     o_ref, as_ref, ap_ref, **kw):
+    """Adapter for mask-free modes: re-inserts msk_ref=None."""
+    body(q_ref, k_ref, v_ref, None, scal_ref, seed_ref,
+         o_ref, as_ref, ap_ref, **kw)
+
+
+def _bwd_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
+              dq_ref, dk_ref, dv_ref, adp_ref, ads_ref, *,
+              n_heads: int, group: int, mask_mode: str, window: int,
+              q_len: int, s_len: int, fmt_s: str, fmt_p: str, fmt_e: str,
+              rounding_s: str, rounding_p: str, rounding_e: str,
+              saturate_s: bool, saturate_p: bool, saturate_e: bool):
+    b, h = pl.program_id(0), pl.program_id(1)
+
+    # dK/dV blocks are shared by the `group` query heads of one kv head;
+    # the grid visits those heads consecutively, so zero on the first.
+    @pl.when(h % group == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    q8, k8, v8, do8 = q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0]
+    amax_dp = jnp.float32(0.0)
+    amax_ds = jnp.float32(0.0)
+    nt = q8.shape[0] // TQ
+    for t in range(nt):
+        sl = slice(t * TQ, (t + 1) * TQ)
+        dq_t, dk_parts, dv_parts, a_dp, a_ds, _, _ = _r.bwd_q_tile(
+            q8[sl], k8, v8, do8[sl], None,
+            seed=seed_ref[0], bh=b * n_heads + h, row0=t * TQ,
+            scal=tuple(scal_ref[i] for i in range(10)),
+            mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
+            fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
+            rounding_s=rounding_s, rounding_p=rounding_p,
+            rounding_e=rounding_e, saturate_s=saturate_s,
+            saturate_p=saturate_p, saturate_e=saturate_e)
+        dq_ref[0, 0, sl, :] = dq_t
+        for j, (pk, pv_) in enumerate(zip(dk_parts, dv_parts)):
+            js = slice(j * _r.LANE, (j + 1) * _r.LANE)
+            dk_ref[0, 0, js, :] += pk
+            dv_ref[0, 0, js, :] += pv_
+        amax_dp = jnp.maximum(amax_dp, a_dp)
+        amax_ds = jnp.maximum(amax_ds, a_ds)
+    adp_ref[0, 0] = amax_dp
+    ads_ref[0, 0] = amax_ds
+
+    # dK/dV accumulate in raw grid units; the scale is applied exactly once
+    # when the last query head of the kv-head group has contributed (see
+    # ref.bwd_q_tile on why scale-per-part would FMA-fuse).
+    @pl.when(h % group == group - 1)
+    def _scale():
+        dk_ref[...] = dk_ref[...] * scal_ref[8]
+        dv_ref[...] = dv_ref[...] * scal_ref[9]
+
+
+def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
+                             mask_mode: str = "causal", window: int = 0,
+                             q_len: int, s_len: int,
+                             fmt_s: str, fmt_p: str, fmt_e: str,
+                             rounding_s: str, rounding_p: str,
+                             rounding_e: str,
+                             saturate_s: bool, saturate_p: bool,
+                             saturate_e: bool,
+                             interpret: bool = False):
+    """Backward of the fused attention (training masks only: causal/full).
+    Inputs pre-padded (Qp a TQ multiple, Sp/Dp LANE multiples); scal (10,)
+    f32 (see ref.bwd_q_tile). Returns (dq (B,H,Qp,Dp) f32,
+    dk/dv (B,Hkv,Sp,Dp) f32, amax_dp (B,H) f32, amax_ds (B,H) f32) with
+    amaxes in grid units."""
+    b_, h_, qp, dp = q8.shape
+    hkv, sp = k8.shape[1], k8.shape[2]
+    group = h_ // hkv
+    grid = (b_, h_)
+
+    def kv_index(b, h):
+        return (b, h // group, 0, 0)
+
+    return pl.pallas_call(
+        functools.partial(_bwd_body, n_heads=h_, group=group,
+                          mask_mode=mask_mode, window=window,
+                          q_len=q_len, s_len=s_len,
+                          fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
+                          rounding_s=rounding_s, rounding_p=rounding_p,
+                          rounding_e=rounding_e, saturate_s=saturate_s,
+                          saturate_p=saturate_p, saturate_e=saturate_e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, sp, dp), kv_index),
+            pl.BlockSpec((1, 1, sp, dp), kv_index),
+            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, sp, dp), kv_index),
+            pl.BlockSpec((1, 1, sp, dp), kv_index),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b_, hkv, sp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b_, hkv, sp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_), jnp.float32),
+        ),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(q8, k8, v8, do8, scal, seed)

@@ -1,0 +1,415 @@
+"""Shared tile math + unfused oracle for the fused FP8 flash-attention path.
+
+This module is the SINGLE SOURCE OF TRUTH for the fused-attention numerics:
+the Pallas kernel bodies (kernel.py) and the unfused reference drivers below
+call the *same* per-tile functions (`fwd_q_tile` / `bwd_q_tile`), so in
+interpret mode the kernel is bit-identical to the unfused quantize ->
+matmul -> softmax -> quantize -> matmul composition by construction — the
+same guarantee structure `sr_fp8_from_bits` gives the fused GEMM kernels.
+
+Semantics (the paper's Fig. 1a dataflow extended into attention, all four
+tensor classes in FP8):
+
+    forward:   S8 = Q_A((q8 . k8^T) * f_s)          f_s = s_q s_k sm / s_s
+               P  = softmax(S8 * s_s)  (rows; masked lanes exactly 0)
+               P8 = Q_A(P / s_p)
+               O  = (P8 . v8) * (s_p s_v)           -> bf16
+    backward:  dP8 = Q_E((do8 . v8^T) * f_dp)       f_dp = s_do s_v / s_dp
+               dS  = P_deq * (dP_deq - rowsum(P_deq * dP_deq))
+               dS8 = Q_E(dS * sm / s_ds)
+               dQ = (dS8 . k8)   * (s_ds s_k)
+               dK = (dS8^T . q8) * (s_ds s_q)
+               dV = (P8^T . do8) * (s_p s_do)
+
+Determinism / tiling invariance: every cross-position reduction (softmax
+denominator, PV / dQ accumulation) advances in fixed LANE-wide steps, and SR
+bits are drawn from a counter-based hash of the *absolute* (head, row, col)
+coordinates — so results are invariant to the query-block size, to KV/head
+padding (zero-padded lanes contribute exact 0.0), and identical between the
+kernel grid and the reference loops. Zero materialized S/P ever reaches HBM
+on the kernel path; the reference drivers materialize them (that is the
+point of an oracle) and also return the payloads for observation checks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8_formats import get_format
+from repro.core.quantize import quantize_rne, sr_fp8_via_f16
+
+# Fixed inner reduction width (TPU lane count). All KV-axis loops advance in
+# LANE steps regardless of any block-size knob.
+LANE = 128
+
+# SR draw channels: one salt per in-kernel Q node so S/P/dP/dS consume
+# independent bit streams at the same coordinates.
+SALT_S, SALT_P, SALT_DP, SALT_DS = 0x51, 0x52, 0x53, 0x54
+
+_GOLD = 0x9E3779B9  # 2^32 / golden ratio
+
+
+def _fmix32(x):
+    """murmur3 finalizer: full avalanche on uint32."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def sr_hash_bits(seed, salt: int, bh, rows, cols):
+    """Counter-based uint8 SR bits from absolute tile coordinates.
+
+    Unlike the fused GEMM kernels (which stream a materialized rand8 array
+    from HBM), attention draws its SR bits *in the kernel* from a stateless
+    hash of (seed, salt, batch*head, row, col) — an S-shaped rand array in
+    HBM would cost exactly the S materialization the kernel exists to avoid.
+    Bits depend only on absolute coordinates, so any tiling/padding draws
+    identical bits for a logical cell."""
+    gold = jnp.uint32(_GOLD)
+    s = _fmix32(jnp.asarray(seed, jnp.uint32)
+                + jnp.uint32(salt) * gold)
+    s = _fmix32(s + jnp.asarray(bh, jnp.uint32) * gold)
+    h = _fmix32(s + rows.astype(jnp.uint32) * gold)
+    h = _fmix32(h ^ (cols.astype(jnp.uint32) * gold))
+    return (h & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+def _quant_tile(y, bits, fmt_name: str, rounding: str, saturate: bool):
+    fmt = get_format(fmt_name)
+    if rounding == "rne":
+        return quantize_rne(y, fmt, saturate=saturate)
+    return sr_fp8_via_f16(y, bits, fmt, saturate=saturate)
+
+
+def _mask_block(mask_mode: str, rows, cols, s_len: int, window: int, kvmask):
+    """Validity of one (bq, LANE) score tile: KV padding is always masked;
+    'causal' adds the triangular (+ optional sliding-window) condition from
+    absolute coordinates; 'kv' ANDs a runtime per-batch validity row."""
+    valid = cols < s_len
+    if mask_mode == "causal":
+        valid = valid & (cols <= rows)
+        if window:
+            valid = valid & (cols > rows - window)
+    elif mask_mode == "kv":
+        valid = valid & (kvmask != 0)
+    elif mask_mode != "full":
+        raise ValueError(f"unknown mask mode {mask_mode!r}")
+    return valid
+
+
+def _dot_f32(a8, b8, contract):
+    return jax.lax.dot_general(a8.astype(jnp.bfloat16),
+                               b8.astype(jnp.bfloat16),
+                               (contract, ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _score_block(q8, k8_sub, bits, f_s, fmt_s, rounding_s, saturate_s):
+    """(bq, LANE) quantized score tile: S8 = Q((q8 . k8_sub^T) * f_s)."""
+    s = _dot_f32(q8, k8_sub, ((1,), (1,)))
+    return _quant_tile(s * f_s, bits, fmt_s, rounding_s, saturate_s)
+
+
+def fwd_q_tile(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
+               mask_mode: str, window: int, q_len: int, s_len: int,
+               fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
+               saturate_s: bool, saturate_p: bool):
+    """Fused FP8 attention forward for one (bq, D) query tile against the
+    full padded (Sp, D) K/V of its (batch, kv-head).
+
+    scal: indexable [f_s, s_s, f_p, f_o] (see module docstring).
+    Returns (o_bf16 (bq, D), amax_s, amax_p, s8_tiles, p8_tiles) — the
+    payload tile lists are consumed by the reference drivers only (dead code
+    in the kernel body). amaxes are in grid units, masked to the logical
+    (q_len, s_len) region exactly like `fp8_amax_bits` over the materialized
+    logical payload."""
+    f_s, s_s, f_p, f_o = scal[0], scal[1], scal[2], scal[3]
+    bq = q8.shape[0]
+    nj = k8.shape[0] // LANE
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def sblock(j):
+        cols = j * LANE + jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+        bits = sr_hash_bits(seed, SALT_S, bh, rows, cols) \
+            if rounding_s == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        s8 = _score_block(q8, k8[j * LANE:(j + 1) * LANE], bits, f_s,
+                          fmt_s, rounding_s, saturate_s)
+        sub = None if kvmask is None else kvmask[:, j * LANE:(j + 1) * LANE]
+        valid = _mask_block(mask_mode, rows, cols, s_len, window, sub)
+        x = jnp.where(valid, s8.astype(jnp.float32) * s_s,
+                      jnp.float32(-1e30))
+        obs = (rows < q_len) & (cols < s_len)
+        return s8, valid, x, cols, obs
+
+    # Pass 1: exact running row-max (order-free) + S amax observation.
+    m = jnp.full((bq, 1), -1e30, jnp.float32)
+    amax_s = jnp.float32(0.0)
+    s8_tiles = []
+    for j in range(nj):
+        s8, valid, x, cols, obs = sblock(j)
+        m = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+        amax_s = jnp.maximum(amax_s, jnp.max(
+            jnp.where(obs, jnp.abs(s8.astype(jnp.float32)), 0.0)))
+        s8_tiles.append(s8)
+    # Pass 2: denominator, accumulated in LANE-wide sequential steps.
+    d = jnp.zeros((bq, 1), jnp.float32)
+    for j in range(nj):
+        _, valid, x, _, _ = sblock(j)
+        e = jnp.where(valid, jnp.exp(x - m), 0.0)
+        d = d + jnp.sum(e, axis=-1, keepdims=True)
+    d_safe = jnp.where(d > 0, d, 1.0)   # fully-masked (padded) rows -> p = 0
+    # Pass 3: quantized probs + P amax + PV accumulation.
+    acc = jnp.zeros((bq, v8.shape[1]), jnp.float32)
+    amax_p = jnp.float32(0.0)
+    p8_tiles = []
+    for j in range(nj):
+        _, valid, x, cols, obs = sblock(j)
+        e = jnp.where(valid, jnp.exp(x - m), 0.0)
+        p = e / d_safe
+        bits = sr_hash_bits(seed, SALT_P, bh, rows, cols) \
+            if rounding_p == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        p8 = _quant_tile(p * f_p, bits, fmt_p, rounding_p, saturate_p)
+        amax_p = jnp.maximum(amax_p, jnp.max(
+            jnp.where(obs, jnp.abs(p8.astype(jnp.float32)), 0.0)))
+        acc = acc + _dot_f32(p8, v8[j * LANE:(j + 1) * LANE], ((1,), (0,)))
+        p8_tiles.append(p8)
+    o = (acc * f_o).astype(jnp.bfloat16)
+    return o, amax_s, amax_p, s8_tiles, p8_tiles
+
+
+def bwd_q_tile(q8, k8, v8, do8, kvmask, *, seed, bh, row0, scal,
+               mask_mode: str, window: int, q_len: int, s_len: int,
+               fmt_s: str, fmt_p: str, fmt_e: str,
+               rounding_s: str, rounding_p: str, rounding_e: str,
+               saturate_s: bool, saturate_p: bool, saturate_e: bool):
+    """Fused FP8 attention backward for one (bq, D) query tile: recomputes
+    S8/P8 from the FP8 residuals (identical hash bits -> identical payloads),
+    quantizes the dP and dS intermediates to the error format, and returns
+
+        (dq (bq, D) f32, dk_parts, dv_parts, amax_dp, amax_ds,
+         dp8_tiles, ds8_tiles)
+
+    dk_parts/dv_parts are per-LANE-slice (LANE, D) f32 contributions in RAW
+    grid units: the caller accumulates part j into rows [j*LANE, (j+1)*LANE)
+    of dK/dV (summing over query tiles and GQA group members in a fixed
+    order) and applies the f_dk / f_dv scale ONCE after the accumulation —
+    scaling per part would let XLA fuse the multiply into the running add as
+    an FMA, whose single rounding diverges from the unfused mul-then-add by
+    one ulp (the scale-at-end shape is immune: (acc + x) * c has no FMA
+    form)."""
+    (f_s, s_s, f_p, s_p, f_dp, s_dp, f_ds, f_dq, f_dk, f_dv) = (
+        scal[0], scal[1], scal[2], scal[3], scal[4], scal[5], scal[6],
+        scal[7], scal[8], scal[9])
+    bq = q8.shape[0]
+    nj = k8.shape[0] // LANE
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def sblock(j):
+        cols = j * LANE + jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+        bits = sr_hash_bits(seed, SALT_S, bh, rows, cols) \
+            if rounding_s == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        s8 = _score_block(q8, k8[j * LANE:(j + 1) * LANE], bits, f_s,
+                          fmt_s, rounding_s, saturate_s)
+        sub = None if kvmask is None else kvmask[:, j * LANE:(j + 1) * LANE]
+        valid = _mask_block(mask_mode, rows, cols, s_len, window, sub)
+        x = jnp.where(valid, s8.astype(jnp.float32) * s_s,
+                      jnp.float32(-1e30))
+        obs = (rows < q_len) & (cols < s_len)
+        return s8, valid, x, cols, obs
+
+    # Recompute the forward softmax statistics (bitwise: same ops, same bits).
+    m = jnp.full((bq, 1), -1e30, jnp.float32)
+    for j in range(nj):
+        _, _, x, _, _ = sblock(j)
+        m = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+    d = jnp.zeros((bq, 1), jnp.float32)
+    for j in range(nj):
+        _, valid, x, _, _ = sblock(j)
+        e = jnp.where(valid, jnp.exp(x - m), 0.0)
+        d = d + jnp.sum(e, axis=-1, keepdims=True)
+    d_safe = jnp.where(d > 0, d, 1.0)
+
+    def pdp(j):
+        """Recomputed (p8, p_deq, dp8, dp_deq) for LANE slice j."""
+        _, valid, x, cols, obs = sblock(j)
+        e = jnp.where(valid, jnp.exp(x - m), 0.0)
+        p = e / d_safe
+        bits_p = sr_hash_bits(seed, SALT_P, bh, rows, cols) \
+            if rounding_p == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        p8 = _quant_tile(p * f_p, bits_p, fmt_p, rounding_p, saturate_p)
+        p_d = p8.astype(jnp.float32) * s_p
+        dp = _dot_f32(do8, v8[j * LANE:(j + 1) * LANE], ((1,), (1,)))
+        bits_dp = sr_hash_bits(seed, SALT_DP, bh, rows, cols) \
+            if rounding_e == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        dp8 = _quant_tile(dp * f_dp, bits_dp, fmt_e, rounding_e, saturate_e)
+        dp_d = dp8.astype(jnp.float32) * s_dp
+        return p8, p_d, dp8, dp_d, cols, obs
+
+    # Pass A: softmax-VJP row reduction rowsum(P * dP) + dP observation.
+    rd = jnp.zeros((bq, 1), jnp.float32)
+    amax_dp = jnp.float32(0.0)
+    dp8_tiles = []
+    for j in range(nj):
+        p8, p_d, dp8, dp_d, _, obs = pdp(j)
+        rd = rd + jnp.sum(p_d * dp_d, axis=-1, keepdims=True)
+        amax_dp = jnp.maximum(amax_dp, jnp.max(
+            jnp.where(obs, jnp.abs(dp8.astype(jnp.float32)), 0.0)))
+        dp8_tiles.append(dp8)
+    # Pass B: dS quantization + the three adjoint GEMM accumulations.
+    dq_acc = jnp.zeros((bq, q8.shape[1]), jnp.float32)
+    amax_ds = jnp.float32(0.0)
+    dk_parts, dv_parts, ds8_tiles = [], [], []
+    for j in range(nj):
+        p8, p_d, dp8, dp_d, cols, obs = pdp(j)
+        ds = p_d * (dp_d - rd)
+        bits_ds = sr_hash_bits(seed, SALT_DS, bh, rows, cols) \
+            if rounding_e == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        ds8 = _quant_tile(ds * f_ds, bits_ds, fmt_e, rounding_e, saturate_e)
+        amax_ds = jnp.maximum(amax_ds, jnp.max(
+            jnp.where(obs, jnp.abs(ds8.astype(jnp.float32)), 0.0)))
+        dq_acc = dq_acc + _dot_f32(ds8, k8[j * LANE:(j + 1) * LANE],
+                                   ((1,), (0,)))
+        dk_parts.append(_dot_f32(ds8, q8, ((0,), (0,))))
+        dv_parts.append(_dot_f32(p8, do8, ((0,), (0,))))
+        ds8_tiles.append(ds8)
+    return (dq_acc * f_dq, dk_parts, dv_parts, amax_dp, amax_ds,
+            dp8_tiles, ds8_tiles)
+
+
+# ---------------------------------------------------------------------------
+# unfused reference drivers (the oracle the kernels are locked against)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_qkv(q8, k8, v8, block_q: int):
+    """Zero-pad Q to a block_q multiple and S/D to LANE multiples. Padding is
+    numerically invisible (exact-0.0 contributions, masked observations)."""
+    qp = _pad_to(_pad_to(q8, 2, block_q), 3, LANE)
+    kp = _pad_to(_pad_to(k8, 2, LANE), 3, LANE)
+    vp = _pad_to(_pad_to(v8, 2, LANE), 3, LANE)
+    return qp, kp, vp
+
+
+def fp8_attention_fwd_ref(q8, k8, v8, seed, scal, *, mask_mode="causal",
+                          window: int = 0, kv_mask=None,
+                          block_q: int = LANE,
+                          fmt_s="e5m2", fmt_p="e5m2",
+                          rounding_s="sr", rounding_p="sr",
+                          saturate_s=True, saturate_p=True):
+    """Unfused composition oracle on logical (B,H,Q,D) / (B,Hkv,S,D) fp8
+    payloads. Materializes and returns the S8/P8 payloads the fused kernel
+    never writes. Returns (o, amax_s, amax_p, s8, p8) with o (B,H,Q,D) bf16,
+    payloads (B,H,Q,S), amaxes in grid units."""
+    b_, h_, q_len, d = q8.shape
+    s_len = k8.shape[2]
+    g = h_ // k8.shape[1]
+    qp, kp, vp = pad_qkv(q8, k8, v8, block_q)
+    sp = kp.shape[2]
+    nq = qp.shape[2] // block_q
+    o = []
+    s8_all, p8_all = [], []
+    amax_s = amax_p = jnp.float32(0.0)
+    for b in range(b_):
+        o_h, s8_h, p8_h = [], [], []
+        mrow = None if kv_mask is None \
+            else _pad_to(kv_mask[b:b + 1].astype(jnp.int8), 1, LANE)
+        for h in range(h_):
+            o_t, s8_t, p8_t = [], [], []
+            for iq in range(nq):
+                qt = qp[b, h, iq * block_q:(iq + 1) * block_q]
+                ot, a_s, a_p, s8s, p8s = fwd_q_tile(
+                    qt, kp[b, h // g], vp[b, h // g], mrow,
+                    seed=seed, bh=b * h_ + h, row0=iq * block_q, scal=scal,
+                    mask_mode=mask_mode, window=window,
+                    q_len=q_len, s_len=s_len,
+                    fmt_s=fmt_s, fmt_p=fmt_p, rounding_s=rounding_s,
+                    rounding_p=rounding_p, saturate_s=saturate_s,
+                    saturate_p=saturate_p)
+                amax_s = jnp.maximum(amax_s, a_s)
+                amax_p = jnp.maximum(amax_p, a_p)
+                o_t.append(ot)
+                s8_t.append(jnp.concatenate(s8s, axis=1))
+                p8_t.append(jnp.concatenate(p8s, axis=1))
+            o_h.append(jnp.concatenate(o_t, axis=0)[None])
+            s8_h.append(jnp.concatenate(s8_t, axis=0)[None])
+            p8_h.append(jnp.concatenate(p8_t, axis=0)[None])
+        o.append(jnp.concatenate(o_h, axis=0)[None])
+        s8_all.append(jnp.concatenate(s8_h, axis=0)[None])
+        p8_all.append(jnp.concatenate(p8_h, axis=0)[None])
+    o = jnp.concatenate(o, axis=0)[:, :, :q_len, :d]
+    s8 = jnp.concatenate(s8_all, axis=0)[:, :, :q_len, :s_len]
+    p8 = jnp.concatenate(p8_all, axis=0)[:, :, :q_len, :s_len]
+    return o, amax_s, amax_p, s8, p8
+
+
+def fp8_attention_bwd_ref(q8, k8, v8, do8, seed, scal, *,
+                          mask_mode="causal", window: int = 0, kv_mask=None,
+                          block_q: int = LANE,
+                          fmt_s="e5m2", fmt_p="e5m2", fmt_e="e5m2",
+                          rounding_s="sr", rounding_p="sr", rounding_e="sr",
+                          saturate_s=True, saturate_p=True,
+                          saturate_e=False):
+    """Unfused backward oracle. Returns (dq, dk, dv, amax_dp, amax_ds,
+    dp8, ds8): dq (B,H,Q,D) f32, dk/dv (B,Hkv,S,D) f32 (GQA groups
+    accumulated in head order), payloads (B,H,Q,S)."""
+    b_, h_, q_len, d = q8.shape
+    hkv, s_len = k8.shape[1], k8.shape[2]
+    g = h_ // hkv
+    qp, kp, vp = pad_qkv(q8, k8, v8, block_q)
+    dop = _pad_to(_pad_to(do8, 2, block_q), 3, LANE)
+    sp, dp_ = kp.shape[2], kp.shape[3]
+    nq = qp.shape[2] // block_q
+    dq = jnp.zeros(qp.shape, jnp.float32)
+    dk = jnp.zeros((b_, hkv, sp, dp_), jnp.float32)
+    dv = jnp.zeros((b_, hkv, sp, dp_), jnp.float32)
+    amax_dp = amax_ds = jnp.float32(0.0)
+    dp8_all, ds8_all = [], []
+    for b in range(b_):
+        dp8_h, ds8_h = [], []
+        mrow = None if kv_mask is None \
+            else _pad_to(kv_mask[b:b + 1].astype(jnp.int8), 1, LANE)
+        for h in range(h_):
+            dp8_t, ds8_t = [], []
+            for iq in range(nq):
+                sl = slice(iq * block_q, (iq + 1) * block_q)
+                dq_t, dk_parts, dv_parts, a_dp, a_ds, dp8s, ds8s = bwd_q_tile(
+                    qp[b, h, sl], kp[b, h // g], vp[b, h // g],
+                    dop[b, h, sl], mrow,
+                    seed=seed, bh=b * h_ + h, row0=iq * block_q, scal=scal,
+                    mask_mode=mask_mode, window=window,
+                    q_len=q_len, s_len=s_len,
+                    fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
+                    rounding_s=rounding_s, rounding_p=rounding_p,
+                    rounding_e=rounding_e, saturate_s=saturate_s,
+                    saturate_p=saturate_p, saturate_e=saturate_e)
+                dq = dq.at[b, h, sl].set(dq_t)
+                for j, (pk, pv_) in enumerate(zip(dk_parts, dv_parts)):
+                    js = slice(j * LANE, (j + 1) * LANE)
+                    dk = dk.at[b, h // g, js].add(pk)
+                    dv = dv.at[b, h // g, js].add(pv_)
+                amax_dp = jnp.maximum(amax_dp, a_dp)
+                amax_ds = jnp.maximum(amax_ds, a_ds)
+                dp8_t.append(jnp.concatenate(dp8s, axis=1))
+                ds8_t.append(jnp.concatenate(ds8s, axis=1))
+            dp8_h.append(jnp.concatenate(dp8_t, axis=0)[None])
+            ds8_h.append(jnp.concatenate(ds8_t, axis=0)[None])
+        dp8_all.append(jnp.concatenate(dp8_h, axis=0)[None])
+        ds8_all.append(jnp.concatenate(ds8_h, axis=0)[None])
+    # Raw-units accumulation, single scale multiply (see bwd_q_tile).
+    dq = dq[:, :, :q_len, :d]
+    dk = dk[:, :, :s_len, :d] * scal[8]
+    dv = dv[:, :, :s_len, :d] * scal[9]
+    dp8 = jnp.concatenate(dp8_all, axis=0)[:, :, :q_len, :s_len]
+    ds8 = jnp.concatenate(ds8_all, axis=0)[:, :, :q_len, :s_len]
+    return dq, dk, dv, amax_dp, amax_ds, dp8, ds8

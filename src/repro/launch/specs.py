@@ -231,6 +231,8 @@ def build_cell(arch: str, shape: str, mesh, *,
         scaling = None
         meta["recipe"] = cfg.policy.quant.recipe
         meta["scaling"] = cfg.policy.quant.scaling
+        meta["fuse_epilogue"] = cfg.policy.quant.fuse_epilogue
+        meta["fuse_attention"] = cfg.policy.quant.fuse_attention
         if cfg.policy.quant.scaling == "delayed":
             from repro.scaling.calibrate import discover_lm_sites
             from repro.scaling.state import DelayedScaling

@@ -14,6 +14,15 @@ position.
 
 KV caches can be stored in FP8 e5m2 (beyond-paper; halves the decode
 bandwidth, which the roofline shows is the decode bottleneck).
+
+Under a Pallas backend with delayed scaling (and the
+`QuantConfig.fuse_attention` knob on), the attention inner products route
+through the fused FP8 flash kernel (core.qattention / kernels.fp8_attention)
+instead of the `_sdpa` composition below: the score matrix and softmax probs
+are quantized inside the kernel with fused amax observation and never
+materialized in HBM, GQA grouping happens in the kernel's block index maps
+(no `_repeat_kv` copies), and the decode path consumes FP8 KV-cache payloads
+directly with their frozen scales.
 """
 from __future__ import annotations
 
@@ -23,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision_policy import QuantConfig
+from repro.core.qattention import fp8_sdpa, fp8_sdpa_decode, fuse_attention
 from repro.core.qlinear import qeinsum
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
@@ -89,20 +99,38 @@ def _to_cache_dtype(x: Array, dtype, scale: float = 1.0) -> Array:
     return x.astype(dtype)
 
 
-def _from_cache_dtype(x: Array, dtype=jnp.bfloat16, scale: float = 1.0) -> Array:
-    if scale != 1.0:
-        return (x.astype(jnp.float32) * scale).astype(dtype)
-    return x.astype(dtype)
+def _from_cache_dtype(x: Array, dtype=jnp.bfloat16, scale=1.0) -> Array:
+    # `scale` may be a traced per-layer slice (frozen per-layer serving of a
+    # scanned stack), so only the static-unit case short-circuits.
+    if isinstance(scale, (int, float)) and scale == 1.0:
+        return x.astype(dtype)
+    return (x.astype(jnp.float32) * scale).astype(dtype)
 
 
 def _kv_scales(cfg: ModelConfig) -> Tuple[float, float]:
     """Frozen per-site KV-cache scales from the active scaling context
-    (1.0 outside frozen serving)."""
+    (1.0 outside frozen serving).
+
+    Frozen serving with an FP8 KV cache REFUSES to fall back to unit scales
+    when the cache sites were never calibrated: a silently wrong constant
+    would mis-scale every cached key/value (the scale is burned into the
+    jitted program), which surfaces only as degraded generations."""
     ctx = scale_ctx.current()
     if ctx is None or cfg.policy.kv_cache_format is None:
         return 1.0, 1.0
-    return (ctx.frozen_scale(ctx.site_key("kv/k") + "#A"),
-            ctx.frozen_scale(ctx.site_key("kv/v") + "#A"))
+    kk = ctx.site_key("kv/k") + "#A"
+    vk = ctx.site_key("kv/v") + "#A"
+    if ctx.mode == "frozen":
+        missing = [key for key in (kk, vk) if not ctx.has_scale(key)]
+        if missing:
+            raise ValueError(
+                f"frozen serving with kv_cache_format="
+                f"{cfg.policy.kv_cache_format!r} but the KV-cache site(s) "
+                f"{missing} have no calibrated scale — the cache would be "
+                "quantized with a silent unit scale; calibrate with the FP8 "
+                "KV cache enabled (the kv/* sites are observed during "
+                "calibration) or serve without frozen scales")
+    return (ctx.frozen_scale(kk), ctx.frozen_scale(vk))
 
 
 # ---------------------------------------------------------------------------
@@ -256,25 +284,41 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
     qt = constrain(q.transpose(0, 2, 1, 3), "dp", "model", None, None)
     new_cache = None
 
+    fused = fuse_attention(qcfg)
     if mode in ("train", "encode", "cross", "prefill"):
-        kt = _repeat_kv(k.transpose(0, 2, 1, 3), h // hkv)
-        vt = _repeat_kv(v.transpose(0, 2, 1, 3), h // hkv)
-        kt = constrain(kt, "dp", "model", None, None)
-        vt = constrain(vt, "dp", "model", None, None)
-        if mode in ("encode", "cross"):
-            o = full_bidirectional_attention(qt, kt, vt, scale=scale,
-                                             qcfg=qcfg, qkey=qkey)
+        if fused:
+            # Fused FP8 flash path: K/V stay UNREPEATED (B, Hkv, S, dh) —
+            # GQA grouping happens in the kernel's block index maps — and
+            # the kernel chunks queries internally (no python q-chunk loop,
+            # no remat: backward recomputes from the FP8 residuals).
+            kt = constrain(k.transpose(0, 2, 1, 3), "dp", "model", None,
+                           None)
+            vt = constrain(v.transpose(0, 2, 1, 3), "dp", "model", None,
+                           None)
+            mm = "full" if mode in ("encode", "cross") else "causal"
+            o = fp8_sdpa(qt, kt, vt, key=subkey(qkey, 10), cfg=qcfg,
+                         sm_scale=scale, mask_mode=mm, window=window,
+                         site="sdpa")
         else:
-            use_chunks = sq > cfg.attn_chunk_threshold or window
-            if use_chunks:
-                o = chunked_causal_attention(
-                    qt, kt, vt, chunk=min(cfg.attn_chunk_size, sq),
-                    scale=scale, qcfg=qcfg, qkey=qkey, window=window,
-                    remat=cfg.remat)
+            kt = _repeat_kv(k.transpose(0, 2, 1, 3), h // hkv)
+            vt = _repeat_kv(v.transpose(0, 2, 1, 3), h // hkv)
+            kt = constrain(kt, "dp", "model", None, None)
+            vt = constrain(vt, "dp", "model", None, None)
+            if mode in ("encode", "cross"):
+                o = full_bidirectional_attention(qt, kt, vt, scale=scale,
+                                                 qcfg=qcfg, qkey=qkey)
             else:
-                qpos = jnp.arange(sq)
-                mask = (qpos[None, :, None] >= qpos[None, None, :])[:, None]
-                o = _sdpa(qt, kt, vt, mask, scale, qcfg, qkey, 30)
+                use_chunks = sq > cfg.attn_chunk_threshold or window
+                if use_chunks:
+                    o = chunked_causal_attention(
+                        qt, kt, vt, chunk=min(cfg.attn_chunk_size, sq),
+                        scale=scale, qcfg=qcfg, qkey=qkey, window=window,
+                        remat=cfg.remat)
+                else:
+                    qpos = jnp.arange(sq)
+                    mask = (qpos[None, :, None]
+                            >= qpos[None, None, :])[:, None]
+                    o = _sdpa(qt, kt, vt, mask, scale, qcfg, qkey, 30)
         if mode == "prefill" and cache_layer is not None:
             new_cache = _prefill_cache(cache_layer, k, v, positions,
                                        k_scale=k_scale, v_scale=v_scale)
@@ -282,20 +326,36 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
         assert cache_layer is not None
         new_cache = _append_cache(cache_layer, k, v, positions,
                                   k_scale=k_scale, v_scale=v_scale)
-        dt = jnp.bfloat16
-        kt = _from_cache_dtype(new_cache["k"], dt,
-                               k_scale).transpose(0, 2, 1, 3)
-        vt = _from_cache_dtype(new_cache["v"], dt,
-                               v_scale).transpose(0, 2, 1, 3)
-        kt = constrain(_repeat_kv(kt, h // hkv), "dp", "model", None, None)
-        vt = constrain(_repeat_kv(vt, h // hkv), "dp", "model", None, None)
         # Validity: slot filled and within window (if any).
         slot_pos = new_cache["slot_pos"]            # (B, C)
         cur = positions[:, -1:]                     # (B, 1)
         valid = (slot_pos >= 0) & (slot_pos <= cur)
         if window:
             valid &= slot_pos > cur - window
-        o = _sdpa(qt, kt, vt, valid[:, None, None, :], scale, qcfg, qkey, 40)
+        if fused:
+            # Fused decode: FP8 cache payloads feed the kernel directly
+            # with their frozen scales (no dequantize -> requantize round
+            # trip); bf16 caches are quantized inside fp8_sdpa_decode.
+            kt = constrain(new_cache["k"].transpose(0, 2, 1, 3),
+                           "dp", "model", None, None)
+            vt = constrain(new_cache["v"].transpose(0, 2, 1, 3),
+                           "dp", "model", None, None)
+            o = fp8_sdpa_decode(qt, kt, vt, valid, cfg=qcfg,
+                                sm_scale=scale, key=subkey(qkey, 40),
+                                k_cache_scale=k_scale,
+                                v_cache_scale=v_scale, site="sdpa")
+        else:
+            dt = jnp.bfloat16
+            kt = _from_cache_dtype(new_cache["k"], dt,
+                                   k_scale).transpose(0, 2, 1, 3)
+            vt = _from_cache_dtype(new_cache["v"], dt,
+                                   v_scale).transpose(0, 2, 1, 3)
+            kt = constrain(_repeat_kv(kt, h // hkv), "dp", "model", None,
+                           None)
+            vt = constrain(_repeat_kv(vt, h // hkv), "dp", "model", None,
+                           None)
+            o = _sdpa(qt, kt, vt, valid[:, None, None, :], scale, qcfg,
+                      qkey, 40)
     else:
         raise ValueError(f"unknown attention mode {mode!r}")
 

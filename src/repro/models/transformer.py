@@ -279,10 +279,14 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
         # reads ITS layer's scale slice (layer_view), and each iteration's
         # observations exit per-layer through the aux ys / stacked token
         # cotangents instead of being max-collapsed over the group.
+        # Frozen serving threads per-layer frozen vectors the same way
+        # (freeze(per_layer=True)): each scan iteration serves with ITS
+        # layer's calibrated constant instead of the max envelope.
         ctx = scale_ctx.current()
         thread_scales: Dict[str, Array] = {}
         thread_tokens: Dict[str, Array] = {}
-        if ctx is not None and ctx.mode in ("collect", "calibrate"):
+        if ctx is not None and ctx.mode in ("collect", "calibrate",
+                                            "frozen"):
             pfx = ctx.scope_prefix()
             for k, v in ctx.scales.items():
                 if k.startswith(pfx) and k[len(pfx):].startswith("stack_") \

@@ -127,19 +127,27 @@ def calibrate(params, cfg: ModelConfig, batches: Iterable, *,
     return ds, state
 
 
-def freeze(ds: DelayedScaling, state: ScaleState) -> Dict[str, float]:
-    """Frozen per-site scales for serving (forward classes only)."""
-    return ds.freeze(state)
+def freeze(ds: DelayedScaling, state: ScaleState, *,
+           per_layer: bool = False) -> Dict[str, float]:
+    """Frozen per-site scales for serving (forward classes only).
+    per_layer=True keeps one scale per layer for scanned-stack sites
+    (threaded through the serve-time scan xs) instead of the max
+    envelope."""
+    return ds.freeze(state, per_layer=per_layer)
 
 
 def freeze_with_formats(ds: DelayedScaling, state: ScaleState,
-                        cfg: Optional[ModelConfig] = None
+                        cfg: Optional[ModelConfig] = None, *,
+                        per_layer: bool = False
                         ) -> Tuple[Dict[str, float], Dict[str, str]]:
     """(frozen scales, per-site formats) — the formats record what each
     scale was calibrated under, so serving can refuse a recipe/format
-    mismatch (see ServeEngine(frozen_formats=...))."""
+    mismatch (see ServeEngine(frozen_formats=...)). per_layer as in
+    freeze(); the format of a site is shared by all of its layer rows, so
+    the formats dict is unaffected."""
     kv_format = cfg.policy.kv_cache_format if cfg is not None else None
-    return ds.freeze(state), ds.frozen_formats(kv_format=kv_format)
+    return (ds.freeze(state, per_layer=per_layer),
+            ds.frozen_formats(kv_format=kv_format))
 
 
 def save_frozen(directory, scales: Dict[str, float],

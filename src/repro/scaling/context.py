@@ -27,6 +27,16 @@ quantize their GEMM *outputs* in the epilogue and register:
     "{S}#da.E"      — the dgrad output dA = Q_E(dY.W^T) (error class;
                       "#db.E" when the weight is operand a instead)
 
+Fused flash-attention sites (core.qattention with backend="pallas*" +
+delayed scaling; one site replaces the unfused qk/pv qeinsum pair) register:
+
+    "{S}#q.A" / "{S}#k.A" / "{S}#v.A"  — the three operands
+    "{S}#qk.A"      — the quantized score matrix S = Q_A(QK^T)
+    "{S}#p.A"       — the quantized softmax probs P
+    "{S}#E"         — the incoming output error dO quantized in backward
+    "{S}#dp.E"      — the backward intermediate dP = Q_E(dO.V^T)
+    "{S}#ds.E"      — the backward intermediate dS (softmax VJP output)
+
 Raw (non-qeinsum) sites — the FP8 KV cache — use "{S}#A".
 
 Modes
@@ -49,16 +59,26 @@ import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Set
 
 import jax.numpy as jnp
+import numpy as np
 
 _CLASS_LETTER = {"weight": "W", "act": "A", "error": "E", "grad": "G"}
 
 AMAX_PREFIX = "amax/"
 
 # Channels of a site's backward-observation token cotangent:
-#   [amax_E (quantized dY), amax_G (FP8-stored weight grad),
+#   [amax_E (quantized dY / dO), amax_G (FP8-stored weight grad),
 #    amax of the error-class fused dgrad output (0 unless the site's GEMMs
-#    run through the fused quantize-in-epilogue path)].
-TOKEN_CHANNELS = 3
+#    run through the fused quantize-in-epilogue path),
+#    amax of the fused-attention dP intermediate ("#dp.E"),
+#    amax of the fused-attention dS intermediate ("#ds.E")].
+TOKEN_CHANNELS = 5
+
+
+def token_cotangent(e=0.0, g=0.0, err=0.0, dp=0.0, ds=0.0):
+    """Assemble a (TOKEN_CHANNELS,) backward-observation cotangent; qeinsum
+    fills the first three channels, fused attention e/dp/ds."""
+    return jnp.stack([jnp.asarray(v, jnp.float32)
+                      for v in (e, g, err, dp, ds)])
 
 
 @dataclasses.dataclass
@@ -136,11 +156,28 @@ class ScaleContext:
             return jnp.asarray(default, jnp.float32)
         return jnp.asarray(s, jnp.float32)
 
-    def frozen_scale(self, key: str, default: float = 1.0) -> float:
-        """Python-float lookup (frozen serving; burned in as a constant)."""
+    def frozen_scale(self, key: str, default: float = 1.0):
+        """Frozen-serving scale lookup. Ordinary sites return a python float
+        (burned into the jitted program as a constant). Per-layer
+        scanned-stack sites resolve through the scan body's layer_view to
+        THIS iteration's traced slice; a per-layer vector hit outside a
+        layer view collapses to its max envelope."""
         if self.mode != "frozen":
             return default
-        return float(self.scales.get(key, default))
+        for view in reversed(self._layer_scales):
+            s = view.get(key)
+            if s is not None:
+                return s
+        s = self.scales.get(key, default)
+        if getattr(s, "ndim", 0):
+            return float(np.max(s))
+        return float(s)
+
+    def has_scale(self, key: str) -> bool:
+        """Whether `key` resolves to a calibrated scale (layer views
+        included) rather than falling back to the unit default."""
+        return any(key in view for view in self._layer_scales) \
+            or key in self.scales
 
     # -- tokens (backward E/G observation channel) ---------------------------
     def token_for(self, site_key: str):
@@ -304,8 +341,18 @@ def calibrate_context(scales: Mapping[str, Any]) -> ScaleContext:
     return ScaleContext(mode="calibrate", scales=scales, tokens={})
 
 
-def frozen_context(scales: Mapping[str, float]) -> ScaleContext:
-    return ScaleContext(mode="frozen", scales=dict(scales), tokens={})
+def frozen_context(scales: Mapping[str, Any]) -> ScaleContext:
+    """Frozen-serving context. Values are python floats (ordinary sites) or
+    per-layer vectors (lists / arrays emitted by freeze(per_layer=True) for
+    scanned-stack sites; coerced to f32 arrays so apply_stack can thread
+    them through the scan xs)."""
+    out: Dict[str, Any] = {}
+    for k, v in scales.items():
+        if isinstance(v, (list, tuple, np.ndarray)):
+            out[k] = np.asarray(v, np.float32)
+        else:
+            out[k] = v
+    return ScaleContext(mode="frozen", scales=out, tokens={})
 
 
 def operand_keys(site_key: str, classes) -> Dict[str, str]:
@@ -313,6 +360,18 @@ def operand_keys(site_key: str, classes) -> Dict[str, str]:
     ca, cb = _CLASS_LETTER[classes[0]], _CLASS_LETTER[classes[1]]
     return {"a": f"{site_key}#a.{ca}", "b": f"{site_key}#b.{cb}",
             "E": f"{site_key}#E", "G": f"{site_key}#G"}
+
+
+def attention_keys(site_key: str) -> Dict[str, str]:
+    """Registry keys for one fused flash-attention call site: the three
+    operands, the two in-kernel forward Q nodes (scores S, probs P — both
+    activation class), and the three error-class backward tensors (incoming
+    dO plus the in-kernel dP/dS intermediates). The letter grammar matches
+    operand_keys, so freeze/serve format rules apply unchanged."""
+    return {"q": f"{site_key}#q.A", "k": f"{site_key}#k.A",
+            "v": f"{site_key}#v.A", "s": f"{site_key}#qk.A",
+            "p": f"{site_key}#p.A", "do": f"{site_key}#E",
+            "dp": f"{site_key}#dp.E", "ds": f"{site_key}#ds.E"}
 
 
 def fused_output_keys(site_key: str, classes) -> Dict[str, str]:

@@ -264,20 +264,30 @@ class DelayedScaling:
                           step=state.step + 1)
 
     # -- freeze (calibrated serving) -----------------------------------------
-    def freeze(self, state: ScaleState) -> Dict[str, float]:
+    def freeze(self, state: ScaleState, *,
+               per_layer: bool = False) -> Dict[str, object]:
         """Emit frozen per-site scales for deterministic quantized serving.
         Only forward-path classes (W/A) matter at inference; E/G rows are
-        excluded. Per-layer (scanned-stack) sites collapse to their MAX row
-        — the amax envelope over the layers the burned-in constant serves —
-        so serving keeps python-float scales baked into the jitted program.
-        """
+        excluded.
+
+        per_layer=False (legacy): per-layer (scanned-stack) sites collapse
+        to their MAX row — the amax envelope over the layers — so serving
+        keeps python-float scales baked into the jitted program.
+
+        per_layer=True: per-layer sites keep one scale per layer (a list of
+        floats, json-serializable); the scan body reads its own layer's
+        slice through the stacked xs apply_stack threads (full per-layer
+        serving fidelity instead of the envelope)."""
         scales = np.asarray(state.scale)
-        out: Dict[str, float] = {}
+        out: Dict[str, object] = {}
         for k in self.registry.keys:
             if self.registry.class_letter(k) not in ("W", "A"):
                 continue
             i, n = self.registry.index[k], self.registry.n_rows[k]
-            out[k] = float(scales[i:i + n].max())
+            if per_layer and n > 1:
+                out[k] = [float(x) for x in scales[i:i + n]]
+            else:
+                out[k] = float(scales[i:i + n].max())
         return out
 
     def frozen_formats(self, *,
@@ -331,4 +341,10 @@ def split_observations(metrics: Dict[str, Array],
             for dk in (f"{site}#da.E", f"{site}#db.E"):
                 if dk in registry.index:
                     observed[dk] = tok[..., 2] * inv
+        if tok.shape[-1] > 4:
+            # Fused-attention sites: channels 3/4 carry the in-kernel dP/dS
+            # intermediate observations.
+            for c, dk in ((3, f"{site}#dp.E"), (4, f"{site}#ds.E")):
+                if dk in registry.index:
+                    observed[dk] = tok[..., c] * inv
     return observed

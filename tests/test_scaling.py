@@ -459,6 +459,36 @@ class TestCalibratedServing:
         assert formats["dec/attn/kv/k#A"] == "e5m2"   # from the KV policy
         assert "s#E" not in scales and "s#E" not in formats
 
+    def test_kv_scales_refuse_uncalibrated_frozen_sites(self):
+        """Frozen serving with an FP8 KV cache whose kv/* sites were never
+        calibrated must REFUSE instead of silently quantizing the cache
+        with unit scales (the bug: _kv_scales defaulted to 1.0, burning a
+        wrong constant into the jitted program)."""
+        from repro.models.attention import _kv_scales
+        from repro.scaling import context as scale_ctx
+        cfg = _serve_cfg()   # e5m2 KV cache policy
+        # frozen context WITHOUT the kv sites -> raise, naming the sites
+        ctx = scale_ctx.frozen_context({"decoder/wq#a.A": 0.25})
+        with scale_ctx.activate(ctx), scale_ctx.scope("decoder"):
+            with pytest.raises(ValueError, match="kv/k#A"):
+                _kv_scales(cfg)
+        # with the kv sites present the frozen constants flow through
+        good = {"decoder/kv/k#A": 0.5, "decoder/kv/v#A": 0.25}
+        with scale_ctx.activate(scale_ctx.frozen_context(good)), \
+                scale_ctx.scope("decoder"):
+            assert _kv_scales(cfg) == (0.5, 0.25)
+        # no FP8 KV cache -> no constraint, whatever the context holds
+        cfg_nokv = _serve_cfg()
+        pol = dataclasses.replace(cfg_nokv.policy, kv_cache_format=None)
+        cfg_nokv = cfg_nokv.replace(policy=pol)
+        with scale_ctx.activate(scale_ctx.frozen_context({})), \
+                scale_ctx.scope("decoder"):
+            assert _kv_scales(cfg_nokv) == (1.0, 1.0)
+        # calibration/collection contexts keep the permissive unit default
+        with scale_ctx.activate(scale_ctx.collect_context({}, {})), \
+                scale_ctx.scope("decoder"):
+            assert _kv_scales(cfg) == (1.0, 1.0)
+
 
 # ---------------------------------------------------------------------------
 # checkpoint round-trip

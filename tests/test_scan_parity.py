@@ -274,3 +274,133 @@ class TestEnlargedScaleStateCheckpoint:
         st2 = ds.update(st, {"s#a.A": jnp.float32(16.0)})
         np.testing.assert_array_equal(np.asarray(st2.amax_history[:3, 0]),
                                       [16.0, 16.0, 16.0])
+
+
+class TestPerLayerFrozenServing:
+    """ROADMAP follow-up: frozen serving scales for scanned stacks no longer
+    collapse to the max envelope — freeze(per_layer=True) keeps one scale
+    per layer, threaded through the serve-time scan xs exactly like the
+    collect-mode scale vectors."""
+
+    def _calibrated(self):
+        from repro.scaling.calibrate import calibrate, freeze
+        pol = PrecisionPolicy(quant=RNE_DELAYED, kv_cache_format="e5m2")
+        cfg_s = _cfg(True).replace(policy=pol)
+        cfg_u = _cfg(False).replace(policy=pol)
+        pu = init_lm(jax.random.PRNGKey(0), cfg_u)
+        ps, P, G = _stack_params(pu, cfg_s)
+        rng = np.random.default_rng(1)
+        batches = [{"tokens": jnp.asarray(rng.integers(0, VOCAB, (B, 12)),
+                                          jnp.int32)} for _ in range(3)]
+        ds_s, st_s = calibrate(ps, cfg_s, batches,
+                               scaling_cfg=ScalingConfig(margin=1.0))
+        frozen_s = freeze(ds_s, st_s, per_layer=True)
+        return cfg_s, cfg_u, ps, pu, frozen_s, P, G
+
+    def test_per_layer_freeze_emits_vectors_and_round_trips_json(
+            self, tmp_path):
+        from repro.scaling.calibrate import (load_frozen, save_frozen)
+        cfg_s, _, _, _, frozen_s, P, G = self._calibrated()
+        vec = {k: v for k, v in frozen_s.items() if isinstance(v, list)}
+        assert vec                       # scanned sites keep per-layer rows
+        assert all(len(v) == G for v in vec.values())
+        # distinct layers calibrate to distinct scales (the envelope threw
+        # this fidelity away)
+        assert any(len(set(v)) > 1 for v in vec.values())
+        save_frozen(tmp_path, frozen_s)
+        assert load_frozen(tmp_path) == frozen_s
+
+    def test_freeze_with_formats_passes_per_layer_through(self):
+        """The format-checked serving flow exposes the same per-layer knob
+        (a site's format is shared by all of its layer rows)."""
+        from repro.scaling.calibrate import freeze_with_formats
+        from repro.scaling.state import DelayedScaling
+        reg = SiteRegistry(["dec/stack_0/mlp/up#a.A", "dec/head#b.W"],
+                           site_layers={"dec/stack_0/mlp/up#a.A": 3})
+        ds = DelayedScaling(reg, ScalingConfig(history_len=2, margin=1.0))
+        st = ds.update(ds.init(),
+                       {"dec/stack_0/mlp/up#a.A": jnp.asarray([1., 2., 4.]),
+                        "dec/head#b.W": jnp.float32(8.0)})
+        scales, formats = freeze_with_formats(ds, st, per_layer=True)
+        np.testing.assert_allclose(
+            scales["dec/stack_0/mlp/up#a.A"],
+            [x / 57344.0 for x in (1.0, 2.0, 4.0)], rtol=1e-6)
+        assert isinstance(scales["dec/head#b.W"], float)
+        assert formats["dec/stack_0/mlp/up#a.A"] == "e5m2"
+
+    def test_uniform_vectors_bitmatch_scalar_constants(self):
+        """Threading correctness, bitwise: serving a scanned stack with
+        per-layer vectors that are CONSTANT across layers must bit-match
+        serving with the legacy scalar constants — the per-layer slices
+        ride the scan xs but carry identical values, so any bit difference
+        means the threaded path computes something other than the constant
+        path (same lowering on both sides, so this is exact)."""
+        from repro.models.transformer import init_stack_state
+        from repro.train.step import make_serve_prefill
+        cfg_s, _, ps, _, frozen_s, P, G = self._calibrated()
+        env = {k: (max(v) if isinstance(v, list) else v)
+               for k, v in frozen_s.items()}
+        uniform = {k: ([env[k]] * G if isinstance(v, list) else v)
+                   for k, v in frozen_s.items()}
+        states = init_stack_state(cfg_s, B, max_len=24, n_layers=N_LAYERS)
+        toks = jnp.asarray(np.random.default_rng(2).integers(
+            0, VOCAB, (B, 8)), jnp.int32)
+        lv, _ = jax.jit(make_serve_prefill(cfg_s, uniform))(
+            ps, {"tokens": toks}, states)
+        lc, _ = jax.jit(make_serve_prefill(cfg_s, env))(
+            ps, {"tokens": toks}, states)
+        np.testing.assert_array_equal(np.asarray(lv, np.float32),
+                                      np.asarray(lc, np.float32))
+
+    def test_per_layer_freeze_matches_unrolled_reference(self):
+        """Per-layer fidelity: the frozen per-layer scale of scanned site
+        "…stack_p/…" row g bit-matches (within the one-notch forward
+        envelope bounded at the top of this file) the frozen scale the
+        UNROLLED reference calibrates for "…layer_{g*P+p}/…" — the envelope
+        freeze threw exactly this per-layer structure away. (Logit-level
+        comparison across the two lowerings is NOT asserted: a single fp8
+        rounding flip of lowering noise amplifies through the stack.)"""
+        from repro.scaling.calibrate import calibrate, freeze
+        cfg_s, cfg_u, ps, pu, frozen_s, P, G = self._calibrated()
+        rng = np.random.default_rng(1)   # same batches as _calibrated
+        batches = [{"tokens": jnp.asarray(rng.integers(0, VOCAB, (B, 12)),
+                                          jnp.int32)} for _ in range(3)]
+        ds_u, st_u = calibrate(pu, cfg_u, batches,
+                               scaling_cfg=ScalingConfig(margin=1.0))
+        frozen_u = freeze(ds_u, st_u, per_layer=True)
+        assert not any(isinstance(v, list) for v in frozen_u.values())
+        pairs = []
+        for k, v in frozen_s.items():
+            m = re.match(r"(.*?)stack_(\d+)/(.*)$", k)
+            if m and isinstance(v, list):
+                for g, val in enumerate(v):
+                    uk = f"{m.group(1)}layer_{g * P + int(m.group(2))}" \
+                        f"/{m.group(3)}"
+                    pairs.append((val, frozen_u[uk]))
+        assert pairs
+        vs = np.asarray([p[0] for p in pairs])
+        vu = np.asarray([p[1] for p in pairs])
+        assert (vs == vu).mean() >= 0.85, (vs, vu)
+        ratio = vs / np.maximum(vu, 1e-30)
+        assert (ratio <= 1.25).all() and (ratio >= 0.8).all(), ratio
+
+    def test_per_layer_serving_differs_from_envelope(self):
+        """The threaded per-layer constants are live: serving with them
+        differs from envelope serving whenever the layers calibrated to
+        different scales."""
+        from repro.models.transformer import init_stack_state
+        from repro.train.step import make_serve_prefill
+        cfg_s, _, ps, _, frozen_s, P, G = self._calibrated()
+        assert any(isinstance(v, list) and len(set(v)) > 1
+                   for v in frozen_s.values())
+        env = {k: (max(v) if isinstance(v, list) else v)
+               for k, v in frozen_s.items()}
+        states = init_stack_state(cfg_s, B, max_len=24, n_layers=N_LAYERS)
+        toks = jnp.asarray(np.random.default_rng(2).integers(
+            0, VOCAB, (B, 8)), jnp.int32)
+        ls, _ = jax.jit(make_serve_prefill(cfg_s, frozen_s))(
+            ps, {"tokens": toks}, states)
+        le, _ = jax.jit(make_serve_prefill(cfg_s, env))(
+            ps, {"tokens": toks}, states)
+        assert not (np.asarray(le, np.float32)
+                    == np.asarray(ls, np.float32)).all()
