@@ -243,6 +243,7 @@ def bench_attention(*, smoke=False):
     out_bytes = b * h * s * d * 2
     return {
         "shape_bhsd": [b, h, s, d],
+        "seq_len": s,
         "unfused_us": unfused_us,
         "fused_us": fused_us,
         "fused_vs_unfused_wall_ratio": unfused_us / max(fused_us, 1e-9),
@@ -250,6 +251,129 @@ def bench_attention(*, smoke=False):
         "bwd_bit_parity": bwd_eq,
         "model_sp_hbm_bytes_saved": sp_bytes,
         "model_sp_vs_output_bytes_ratio": sp_bytes / out_bytes,
+    }
+
+
+def bench_attention_long(*, smoke=False):
+    """Long-context sliding-window attention: the stripe-skip win.
+
+    The unfused composition materializes the FULL (S, S) score/prob
+    matrices (masking happens after the quantized scores exist — the
+    `_sdpa` dataflow), so its work and HBM traffic are O(S^2) however
+    narrow the window. The streamed-KV kernel only touches the
+    ~(window + block_kv)/S fraction of kv stripes its block index maps
+    visit; the XLA wall analogue mirrors that dataflow exactly — one
+    jitted program whose per-q-chunk band covers just the
+    `kv_stripe_span` stripes, vs four separately-jitted full-matrix
+    passes with materialized S/P (same methodology as `bench_attention`).
+    Parity of the real Pallas kernels is checked in interpret mode at a
+    reduced windowed long-context shape (payload-free oracle). Keys are
+    seq-length-suffixed so these entries never overwrite the short-seq
+    baseline in the BENCH trajectory."""
+    from repro.kernels.fp8_attention import (fp8_attention_fwd,
+                                             fp8_attention_fwd_ref,
+                                             kv_stripe_span)
+    s, window, cq = (4096, 512, 512) if smoke else (8192, 1024, 1024)
+    b, h, d = 1, 1, 64
+    nk = s // cq
+    q8, k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i), (b, h, s, d))
+                   * 0.3).astype(jnp.float8_e4m3fn) for i in range(3)]
+    scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+    fmt = get_format("e4m3")
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = (cols <= rows) & (cols > rows - window)
+
+    # Unfused: four separately-jitted O(S^2) passes, materialized S/P.
+    scores = jax.jit(lambda q, k: jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32))
+    qpass_s = jax.jit(lambda y: quantize_rne(y * scal[0], fmt))
+    softq = jax.jit(lambda s8: quantize_rne(
+        jax.nn.softmax(jnp.where(mask, s8.astype(jnp.float32) * scal[1],
+                                 -1e30), axis=-1) * scal[2], fmt))
+    pv = jax.jit(lambda p8, v: jnp.einsum(
+        "bhqk,bhkd->bhqd", p8.astype(jnp.bfloat16),
+        v.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+        * scal[3])
+
+    def unfused(q, k, v):
+        y = scores(q, k)
+        s8 = qpass_s(y)
+        p8 = softq(s8)
+        return pv(p8, v)
+
+    # Streamed analogue: ONE jitted program; each q chunk touches only its
+    # kv_stripe_span band — the work the kernel's index maps actually do.
+    def streamed(q, k, v):
+        outs = []
+        for iq in range(s // cq):
+            jmin, jmax = kv_stripe_span(iq * cq, cq, block_kv=cq, n_kv=nk,
+                                        mask_mode="causal", window=window)
+            k0, k1 = jmin * cq, (jmax + 1) * cq
+            qc = q[:, :, iq * cq:(iq + 1) * cq].astype(jnp.bfloat16)
+            y = jnp.einsum("bhqd,bhkd->bhqk", qc,
+                           k[:, :, k0:k1].astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+            s8 = quantize_rne(y * scal[0], fmt)
+            r = iq * cq + jnp.arange(cq)[:, None]
+            c = k0 + jnp.arange(k1 - k0)[None, :]
+            bm = (c <= r) & (c > r - window)
+            p8 = quantize_rne(jax.nn.softmax(
+                jnp.where(bm, s8.astype(jnp.float32) * scal[1], -1e30),
+                axis=-1) * scal[2], fmt)
+            outs.append(jnp.einsum(
+                "bhqk,bhkd->bhqd", p8.astype(jnp.bfloat16),
+                v[:, :, k0:k1].astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32) * scal[3])
+        return jnp.concatenate(outs, axis=2)
+
+    streamed_j = jax.jit(streamed)
+    iters = 2 if smoke else 3
+    unfused(q8, k8, v8)
+    unfused_us = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for _ in range(iters):
+            out_u = unfused(q8, k8, v8)
+        jax.block_until_ready(out_u)
+        unfused_us = min(unfused_us, (time.time() - t0) / iters * 1e6)
+    fused_us = min(timed(streamed_j, q8, k8, v8, iters=iters)
+                   for _ in range(3))
+
+    # Real-kernel interpret parity at a reduced windowed long-context
+    # shape (payload-free oracle keeps memory flat).
+    ps, pw, pb = 2048, 384, 512
+    pq, pk, pv_ = [x[:, :, :ps] for x in (q8, k8, v8)]
+    kw = dict(mask_mode="causal", window=pw, fmt_s="e4m3", fmt_p="e4m3",
+              rounding_s="sr", rounding_p="sr")
+    o, a_s, a_p = fp8_attention_fwd(pq, pk, pv_, jnp.uint32(3), scal,
+                                    block_q=pb, block_kv=pb,
+                                    interpret=True, **kw)
+    ro, rs, rp, _, _ = fp8_attention_fwd_ref(pq, pk, pv_, jnp.uint32(3),
+                                             scal, block_q=pb, block_kv=pb,
+                                             payload=False, **kw)
+    parity = bool((np.asarray(o).view(np.uint8)
+                   == np.asarray(ro).view(np.uint8)).all()) \
+        and float(a_s) == float(rs) and float(a_p) == float(rp)
+
+    spans = [kv_stripe_span(i * cq, cq, block_kv=cq, n_kv=nk,
+                            mask_mode="causal", window=window)
+             for i in range(s // cq)]
+    visited = sum(hi - lo + 1 for lo, hi in spans)
+    pre = f"attention_s{s}_w{window}"
+    return {
+        f"{pre}_shape_bhsd": [b, h, s, d],
+        f"{pre}_seq_len": s,
+        f"{pre}_window": window,
+        f"{pre}_unfused_us": unfused_us,
+        f"{pre}_fused_us": fused_us,
+        f"{pre}_fused_vs_unfused_wall_ratio":
+            unfused_us / max(fused_us, 1e-9),
+        f"{pre}_stripes_visited_frac": visited / ((s // cq) * nk),
+        f"{pre}_interp_parity_s2048_windowed": parity,
+        # Full (S,S) S/P round-trips the unfused path moves vs zero:
+        f"{pre}_model_sp_hbm_bytes_saved": b * h * s * s * 20,
     }
 
 
@@ -291,6 +415,7 @@ def bench_kernels(*, smoke=False):
     out.update(bench_pallas_sweep(smoke=smoke))
     at = bench_attention(smoke=smoke)
     out.update({f"attention_{k}": v for k, v in at.items()})
+    out.update(bench_attention_long(smoke=smoke))
     save_bench("kernels", out)
     for k, v in out.items():
         print(f"kernels {k}: {v}")
@@ -331,11 +456,30 @@ def bench_speed(*, smoke=False):
     jax.block_until_ready(m)
     step_s = (time.time() - t0) / steps
     tokens_per_step = batch_size * seq
+    q = cfg.policy.quant
     out = {
         "step_time_s": step_s,
         "tokens_per_s": tokens_per_step / step_s,
         "tokens_per_step": tokens_per_step,
         "steps_measured": steps,
+        # The variant config the numbers were measured under — without it
+        # the cross-PR trajectory is incomparable (a backend or recipe or
+        # shape change would silently read as a perf change).
+        "variant": {
+            "backend": q.backend,
+            "recipe": q.recipe,
+            "scaling": q.scaling,
+            "fuse_epilogue": q.fuse_epilogue,
+            "fuse_attention": q.fuse_attention,
+            "attn_block_q": q.attn_block_q,
+            "attn_block_kv": q.attn_block_kv,
+            "batch_size": batch_size,
+            "seq_len": seq,
+            "model": {"arch": "qwen2-1.5b(smoke)", "n_layers": cfg.n_layers,
+                      "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                      "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+                      "vocab_size": cfg.vocab_size, "remat": cfg.remat},
+        },
     }
     save_bench("train_speed", out)
     for k, v in out.items():

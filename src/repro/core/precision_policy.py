@@ -86,6 +86,15 @@ class QuantConfig:
     # format ("#dp.E"/"#ds.E"). False keeps the unfused _sdpa composition
     # (XLA fake-quant with full-precision S/P round trips).
     fuse_attention: bool = True
+    # Streamed-KV knobs for the fused flash kernel: rows of the query block
+    # and of the kv stripe resident in VMEM per grid step. The kernel's
+    # VMEM footprint is O(attn_block_q*D + attn_block_kv*D) — independent
+    # of the sequence length — and results are bit-invariant to both knobs
+    # (LANE-stepped reductions, TQ-pinned dK/dV contraction, absolute-
+    # coordinate SR bits). attn_block_q must be a multiple of 128 when
+    # larger than 128; attn_block_kv a multiple of 128.
+    attn_block_q: int = 128
+    attn_block_kv: int = 512
 
     def __post_init__(self):
         # The recipe OWNS the per-class formats (idempotent under

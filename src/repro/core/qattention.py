@@ -6,7 +6,12 @@ backward inner products all take FP8 operands, with the score matrix S, the
 softmax probs P, and the backward dP/dS intermediates quantized *inside* the
 Pallas kernel (delayed-scaling amax observed in the same pass) — S and P are
 never materialized in HBM, and the FP8 q/k/v payloads double as the
-flash-style backward residuals. Class assignment follows the recipe: S and P
+flash-style backward residuals. K/V stream through the kernels in
+`QuantConfig.attn_block_kv`-row stripes (VMEM footprint independent of the
+sequence length; fully-masked stripes of causal/sliding-window tiles are
+skipped), so 32k+ contexts train and serve through the same kernels; the
+amax observations are masked to the attended region so they cannot depend
+on the stripe partition. Class assignment follows the recipe: S and P
 are activations (saturating e4m3 under `hybrid`, Noune et al. 2206.02915);
 dO/dP/dS are errors (e5m2, inf kept so the dynamic loss scaler of
 Micikevicius et al. 1710.03740 sees overflow).
@@ -80,6 +85,7 @@ def _kernel_kwargs(cfg: QuantConfig):
                 rounding_p=cfg.rounding_for(ACT),
                 saturate_s=cfg.saturate_for(ACT),
                 saturate_p=cfg.saturate_for(ACT),
+                block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
                 interpret=cfg.backend == "pallas_interpret")
 
 

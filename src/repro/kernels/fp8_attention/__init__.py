@@ -1,9 +1,10 @@
 from repro.kernels.fp8_attention.ops import (fp8_attention_bwd,
                                              fp8_attention_fwd)
-from repro.kernels.fp8_attention.ref import (LANE, fp8_attention_bwd_ref,
+from repro.kernels.fp8_attention.ref import (LANE, TQ, fp8_attention_bwd_ref,
                                              fp8_attention_fwd_ref,
+                                             kv_stripe_span, q_tile_span,
                                              sr_hash_bits)
 
 __all__ = ["fp8_attention_fwd", "fp8_attention_bwd",
            "fp8_attention_fwd_ref", "fp8_attention_bwd_ref",
-           "sr_hash_bits", "LANE"]
+           "sr_hash_bits", "kv_stripe_span", "q_tile_span", "LANE", "TQ"]

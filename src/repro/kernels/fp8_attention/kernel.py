@@ -1,29 +1,44 @@
-"""Pallas TPU kernels: fused FP8 flash-attention with quantize-in-epilogue
-S/P and delayed-scaling amax observation, zero S/P in HBM.
+"""Pallas TPU kernels: streamed-KV fused FP8 flash attention with
+quantize-in-epilogue S/P, delayed-scaling amax observation, and zero S/P in
+HBM at ANY context length.
 
-The unfused composition (models.attention._sdpa under FP8) round-trips the
-(Q, S)-shaped score and prob matrices through HBM at full precision: QK^T
-write + softmax read/write + Q-node read/write + PV read — O(Q*S) bytes of
-traffic that dominates the training-step bandwidth at long context. These
-kernels keep the whole S -> softmax -> P pipeline in VMEM: per query block
-the score tile is computed, quantized to FP8 (the paper's Q_A node), fed
-through a chunk-sequential softmax, re-quantized as FP8 probs and
-immediately contracted with V — only the (Q, D) output and two scalar amax
-observations per site ever leave the chip. The backward kernel recomputes
-S8/P8 from the FP8 residuals (flash-attention style; the counter-based SR
-hash in ref.py makes the recomputation bit-exact) and quantizes the dP/dS
-intermediates to the error format so every backward GEMM is fp8 x fp8.
+The PR-4 kernel held one (batch, kv-head)'s entire K/V row set in VMEM —
+fine to ~8k fp8 context, hopeless at 32k. These kernels stream K/V through a
+kv-stripe grid dimension instead, so the VMEM footprint is
+O(block_kv * head_dim) per grid step regardless of the sequence length:
 
-All tile math lives in ref.py (`fwd_q_tile` / `bwd_q_tile`) and is shared
-verbatim with the unfused reference drivers, so kernel and oracle are
+  forward grid   (B, H, Q/block_q, 3 * S/block_kv)
+      The innermost dimension interleaves the three softmax passes (running
+      row-max m -> normalizer l -> quantized-P PV contraction) over the kv
+      stripes; the (m, l, PV accumulator) carries live in VMEM scratch
+      across stripes, so the LANE-stepped computation chain is identical to
+      the single-stripe kernel — outputs are invariant to block_kv.
+
+  backward grid  (B, H, Q/block_q, 4 * S/block_kv)     [stats + dQ]
+      Phases m -> l -> rd (the softmax-VJP row reduction, with the dP amax)
+      -> dQ (with the dS amax). The tiny per-row (m, l, rd) statistics are
+      written to HBM (the flash-attention LSE/delta pattern) for:
+
+  backward grid  (B, Hkv, S/block_kv, group * Q/block_q)  [dK/dV]
+      One dK/dV stripe block stays resident while every (GQA group member,
+      query tile) contribution is accumulated into it in RAW grid units —
+      contraction pinned to TQ=128 query rows so results are invariant to
+      block_q — and the f_dk/f_dv scale is applied exactly once at the last
+      visit (see ref.bwd_stripe_dkv on why scale-per-part would FMA-fuse).
+
+Stripe skipping: causal and sliding-window modes visit only the
+`ref.kv_stripe_span` / `ref.q_tile_span` stripe range per query tile — the
+block index maps clamp skipped iterations onto an already-resident block (no
+DMA) and `pl.when` predicates skip their compute entirely. A window=1k,
+S=32k layer therefore touches ~1/32 of the stripes. Skipping is exact:
+fully-masked stripes contribute exact zeros everywhere, and the amax
+observations are masked to the attended region (ref.py module docstring).
+
+All tile math lives in ref.py (the `*_stripe_*` pass functions) and is
+shared verbatim with the unfused reference drivers, so kernel and oracle are
 bit-identical in interpret mode by construction. GQA is resolved in the
 block-index maps (kv head = q head // group) — the repeated K/V copies the
 unfused path materializes via `_repeat_kv` never exist here.
-
-Forward grid: (B, H, Q/block_q); K/V stream in as whole (padded) rows per
-(batch, kv-head). Backward grid: (B, H) with a fixed internal 128-row query
-tiling — dK/dV output blocks are revisited by the `group` consecutive query
-heads of a kv head and accumulated in place.
 """
 from __future__ import annotations
 
@@ -34,36 +49,91 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.fp8_formats import get_format
 from repro.kernels.compat import CompilerParams as _CompilerParams
 from repro.kernels.fp8_attention import ref as _r
 
 DEFAULT_BQ = 128
-TQ = 128           # fixed backward query-tile height (not a knob: backward
-#                    results are tiling-invariant by construction)
+DEFAULT_BKV = _r.DEFAULT_BKV   # kv-stripe rows resident in VMEM per step
+TQ = _r.TQ        # fixed dK/dV contraction granularity in query rows (not a
+#                   knob: backward results are tiling-invariant by
+#                   construction)
 
+
+def _span(iq, bq, bkv, nk, mask_mode, window):
+    """Traced kv-stripe span for the q tile at grid index iq (same formula
+    the reference drivers use — ref.kv_stripe_span)."""
+    return _r.kv_stripe_span(iq * bq, bq, block_kv=bkv, n_kv=nk,
+                             mask_mode=mask_mode, window=window,
+                             _max=jnp.maximum, _min=jnp.minimum)
+
+
+def _qspan(j, bq, bkv, nq, mask_mode, window):
+    return _r.q_tile_span(j, block_q=bq, block_kv=bkv, n_q=nq,
+                          mask_mode=mask_mode, window=window,
+                          _max=jnp.maximum, _min=jnp.minimum)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
 
 def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
-              o_ref, as_ref, ap_ref, *, n_heads: int, group: int, bq: int,
+              o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr, *,
+              n_heads: int, bq: int, bkv: int, nk: int,
               mask_mode: str, window: int, q_len: int, s_len: int,
               fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
               saturate_s: bool, saturate_p: bool):
-    b, h, iq = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                   pl.program_id(3))
+    j, phase = u % nk, u // nk
+    jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
+    active = (j >= jmin) & (j <= jmax)
+
+    @pl.when(u == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        as_ref[...] = jnp.zeros_like(as_ref)
+        ap_ref[...] = jnp.zeros_like(ap_ref)
+
     kvmask = None if msk_ref is None else msk_ref[...]
-    o, amax_s, amax_p, _, _ = _r.fwd_q_tile(
-        q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask,
-        seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
-        scal=(scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3]),
-        mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
-        fmt_s=fmt_s, fmt_p=fmt_p, rounding_s=rounding_s,
-        rounding_p=rounding_p, saturate_s=saturate_s, saturate_p=saturate_p)
-    o_ref[0, 0] = o
-    as_ref[0, 0, 0] = amax_s
-    ap_ref[0, 0, 0] = amax_p
+    kw = dict(seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
+              col0=j * bkv, scal2=(scal_ref[0], scal_ref[1]),
+              mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
+              fmt_s=fmt_s, rounding_s=rounding_s, saturate_s=saturate_s)
+
+    @pl.when(active & (phase == 0))
+    def _pass_m():
+        m, amax_s, _ = _r.fwd_stripe_m(q_ref[0, 0], k_ref[0, 0], kvmask,
+                                       m_scr[...], as_ref[0, 0, 0], **kw)
+        m_scr[...] = m
+        as_ref[0, 0, 0] = amax_s
+
+    @pl.when(active & (phase == 1))
+    def _pass_l():
+        l_scr[...] = _r.fwd_stripe_l(q_ref[0, 0], k_ref[0, 0], kvmask,
+                                     m_scr[...], l_scr[...], **kw)
+
+    @pl.when(active & (phase == 2))
+    def _pass_pv():
+        l = l_scr[...]
+        d_safe = jnp.where(l > 0, l, 1.0)
+        acc, amax_p, _ = _r.fwd_stripe_pv(
+            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
+            d_safe, acc_scr[...], ap_ref[0, 0, 0], f_p=scal_ref[2],
+            fmt_p=fmt_p, rounding_p=rounding_p, saturate_p=saturate_p, **kw)
+        acc_scr[...] = acc
+        ap_ref[0, 0, 0] = amax_p
+
+    @pl.when(u == 3 * nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_scr[...] * scal_ref[3]).astype(jnp.bfloat16)
 
 
 def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                              block_q: int = DEFAULT_BQ,
+                             block_kv: int = 0,
                              mask_mode: str = "causal", window: int = 0,
                              q_len: int, s_len: int,
                              fmt_s: str, fmt_p: str,
@@ -71,29 +141,34 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                              saturate_s: bool, saturate_p: bool,
                              interpret: bool = False):
     """q8 (B,H,Qp,Dp), k8/v8 (B,Hkv,Sp,Dp) fp8 payloads (pre-padded: Qp a
-    block_q multiple, Sp/Dp LANE multiples); kv_mask None or (B,Sp) int8;
-    seed (1,) u32; scal (4,) f32 [f_s, s_s, f_p, f_o].
+    block_q multiple, Sp a block_kv multiple, Dp a LANE multiple); kv_mask
+    None or (B,Sp) int8; seed (1,) u32; scal (4,) f32 [f_s, s_s, f_p, f_o].
 
     Returns (o (B,H,Qp,Dp) bf16, amax_s (B,H,nq) f32, amax_p (B,H,nq) f32)
-    with amaxes in grid units, masked to the logical (q_len, s_len) region.
+    with amaxes in grid units, masked to the attended region.
     """
     b_, h_, qp, dp = q8.shape
     hkv, sp = k8.shape[1], k8.shape[2]
     group = h_ // hkv
     bq = min(block_q, qp)
-    grid = (b_, h_, qp // bq)
+    bkv = sp if not block_kv else min(block_kv, sp)
+    nk = sp // bkv
+    nq = qp // bq
+    grid = (b_, h_, nq, 3 * nk)
 
-    def kv_index(b, h, i):
-        return (b, h // group, 0, 0)
+    def kv_index(b, h, iq, u):
+        jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
+        return (b, h // group, jnp.clip(u % nk, jmin, jmax), 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1, bq, dp), lambda b, h, i: (b, h, i, 0)),
-        pl.BlockSpec((1, 1, sp, dp), kv_index),
-        pl.BlockSpec((1, 1, sp, dp), kv_index),
+        pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bkv, dp), kv_index),
+        pl.BlockSpec((1, 1, bkv, dp), kv_index),
     ]
     args = [q8, k8, v8]
     if mask_mode == "kv":
-        in_specs.append(pl.BlockSpec((1, sp), lambda b, h, i: (b, 0)))
+        in_specs.append(pl.BlockSpec((1, bkv),
+                                     lambda b, h, iq, u: (b, u % nk)))
         args.append(kv_mask)
         body = _fwd_body
     else:
@@ -102,82 +177,188 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                  pl.BlockSpec(memory_space=pltpu.SMEM)]
     args += [scal, seed]
     return pl.pallas_call(
-        functools.partial(body, n_heads=h_, group=group, bq=bq,
+        functools.partial(body, n_heads=h_, bq=bq, bkv=bkv, nk=nk,
                           mask_mode=mask_mode, window=window,
                           q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p,
                           rounding_s=rounding_s, rounding_p=rounding_p,
                           saturate_s=saturate_s, saturate_p=saturate_p),
         grid=grid,
         in_specs=in_specs,
-        out_specs=(pl.BlockSpec((1, 1, bq, dp), lambda b, h, i: (b, h, i, 0)),
-                   pl.BlockSpec((1, 1, 1), lambda b, h, i: (b, h, i)),
-                   pl.BlockSpec((1, 1, 1), lambda b, h, i: (b, h, i))),
+        out_specs=(pl.BlockSpec((1, 1, bq, dp),
+                                lambda b, h, iq, u: (b, h, iq, 0)),
+                   pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
+                   pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq))),
         out_shape=(jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.bfloat16),
-                   jax.ShapeDtypeStruct((b_, h_, grid[2]), jnp.float32),
-                   jax.ShapeDtypeStruct((b_, h_, grid[2]), jnp.float32)),
+                   jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+                   jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
     )(*args)
 
 
 def _masked_none_fwd(body, q_ref, k_ref, v_ref, scal_ref, seed_ref,
-                     o_ref, as_ref, ap_ref, **kw):
+                     o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr, **kw):
     """Adapter for mask-free modes: re-inserts msk_ref=None."""
     body(q_ref, k_ref, v_ref, None, scal_ref, seed_ref,
-         o_ref, as_ref, ap_ref, **kw)
+         o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr, **kw)
 
 
-def _bwd_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
-              dq_ref, dk_ref, dv_ref, adp_ref, ads_ref, *,
-              n_heads: int, group: int, mask_mode: str, window: int,
-              q_len: int, s_len: int, fmt_s: str, fmt_p: str, fmt_e: str,
-              rounding_s: str, rounding_p: str, rounding_e: str,
-              saturate_s: bool, saturate_p: bool, saturate_e: bool):
-    b, h = pl.program_id(0), pl.program_id(1)
+# ---------------------------------------------------------------------------
+# backward kernel 1: softmax statistics + dQ  (grid streams kv stripes)
+# ---------------------------------------------------------------------------
 
-    # dK/dV blocks are shared by the `group` query heads of one kv head;
-    # the grid visits those heads consecutively, so zero on the first.
-    @pl.when(h % group == 0)
+def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
+                 dq_ref, m_ref, l_ref, rd_ref, adp_ref, ads_ref,
+                 m_scr, l_scr, rd_scr, dq_scr, *,
+                 n_heads: int, bq: int, bkv: int, nk: int,
+                 mask_mode: str, window: int, q_len: int, s_len: int,
+                 fmt_s: str, fmt_p: str, fmt_e: str,
+                 rounding_s: str, rounding_p: str, rounding_e: str,
+                 saturate_s: bool, saturate_p: bool, saturate_e: bool):
+    b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                   pl.program_id(3))
+    j, phase = u % nk, u // nk
+    jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
+    active = (j >= jmin) & (j <= jmax)
+
+    # amax outputs are PER (b, h, iq) — like the forward kernel — so the
+    # parallel iq dimension carries no cross-iteration state (ops.py
+    # reduces with an exact jnp.max); accumulating a shared (b, h) block
+    # across iq would race if Mosaic partitioned the parallel dim.
+    @pl.when(u == 0)
+    def _init_row():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        rd_scr[...] = jnp.zeros_like(rd_scr)
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+        adp_ref[...] = jnp.zeros_like(adp_ref)
+        ads_ref[...] = jnp.zeros_like(ads_ref)
+
+    kw = dict(seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
+              col0=j * bkv, scal2=(scal_ref[0], scal_ref[1]),
+              mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
+              fmt_s=fmt_s, rounding_s=rounding_s, saturate_s=saturate_s)
+    bkw = dict(f_p=scal_ref[2], s_p=scal_ref[3], f_dp=scal_ref[4],
+               s_dp=scal_ref[5], fmt_p=fmt_p, fmt_e=fmt_e,
+               rounding_p=rounding_p, rounding_e=rounding_e,
+               saturate_p=saturate_p, saturate_e=saturate_e)
+
+    @pl.when(active & (phase == 0))
+    def _pass_m():
+        m, _, _ = _r.fwd_stripe_m(q_ref[0, 0], k_ref[0, 0], None,
+                                  m_scr[...], jnp.float32(0.0), **kw)
+        m_scr[...] = m
+
+    @pl.when(active & (phase == 1))
+    def _pass_l():
+        l_scr[...] = _r.fwd_stripe_l(q_ref[0, 0], k_ref[0, 0], None,
+                                     m_scr[...], l_scr[...], **kw)
+
+    @pl.when(active & (phase == 2))
+    def _pass_rd():
+        l = l_scr[...]
+        d_safe = jnp.where(l > 0, l, 1.0)
+        rd, amax_dp, _ = _r.bwd_stripe_rd(
+            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+            m_scr[...], d_safe, rd_scr[...], adp_ref[0, 0, 0], **kw, **bkw)
+        rd_scr[...] = rd
+        adp_ref[0, 0, 0] = amax_dp
+
+    @pl.when(active & (phase == 3))
+    def _pass_dq():
+        l = l_scr[...]
+        d_safe = jnp.where(l > 0, l, 1.0)
+        dq_acc, amax_ds, _ = _r.bwd_stripe_dq(
+            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+            m_scr[...], d_safe, rd_scr[...], dq_scr[...],
+            ads_ref[0, 0, 0], f_ds=scal_ref[6], **kw, **bkw)
+        dq_scr[...] = dq_acc
+        ads_ref[0, 0, 0] = amax_ds
+
+    @pl.when(u == 4 * nk - 1)
+    def _write():
+        dq_ref[0, 0] = dq_scr[...] * scal_ref[7]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+        rd_ref[0, 0] = rd_scr[...]
+
+
+# ---------------------------------------------------------------------------
+# backward kernel 2: dK/dV stripes  (grid streams GQA-group query tiles)
+# ---------------------------------------------------------------------------
+
+def _bwd_dkv_body(q_ref, do_ref, k_ref, v_ref, m_ref, l_ref, rd_ref,
+                  scal_ref, seed_ref, dk_ref, dv_ref, *,
+                  n_heads: int, group: int, bq: int, bkv: int,
+                  nq: int, nk: int, mask_mode: str, window: int,
+                  q_len: int, s_len: int,
+                  fmt_s: str, fmt_p: str, fmt_e: str,
+                  rounding_s: str, rounding_p: str, rounding_e: str,
+                  saturate_s: bool, saturate_p: bool, saturate_e: bool):
+    b, hkv, j, t = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                    pl.program_id(3))
+    iq = t % nq
+    h = hkv * group + t // nq
+    jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
+    active = (j >= jmin) & (j <= jmax)
+
+    @pl.when(t == 0)
     def _init():
         dk_ref[...] = jnp.zeros_like(dk_ref)
         dv_ref[...] = jnp.zeros_like(dv_ref)
 
-    q8, k8, v8, do8 = q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0]
-    amax_dp = jnp.float32(0.0)
-    amax_ds = jnp.float32(0.0)
-    nt = q8.shape[0] // TQ
-    for t in range(nt):
-        sl = slice(t * TQ, (t + 1) * TQ)
-        dq_t, dk_parts, dv_parts, a_dp, a_ds, _, _ = _r.bwd_q_tile(
-            q8[sl], k8, v8, do8[sl], None,
-            seed=seed_ref[0], bh=b * n_heads + h, row0=t * TQ,
-            scal=tuple(scal_ref[i] for i in range(10)),
-            mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
-            fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
-            rounding_s=rounding_s, rounding_p=rounding_p,
-            rounding_e=rounding_e, saturate_s=saturate_s,
-            saturate_p=saturate_p, saturate_e=saturate_e)
-        dq_ref[0, 0, sl, :] = dq_t
-        for j, (pk, pv_) in enumerate(zip(dk_parts, dv_parts)):
-            js = slice(j * _r.LANE, (j + 1) * _r.LANE)
-            dk_ref[0, 0, js, :] += pk
-            dv_ref[0, 0, js, :] += pv_
-        amax_dp = jnp.maximum(amax_dp, a_dp)
-        amax_ds = jnp.maximum(amax_ds, a_ds)
-    adp_ref[0, 0] = amax_dp
-    ads_ref[0, 0] = amax_ds
+    @pl.when(active)
+    def _accumulate():
+        bkw = dict(f_p=scal_ref[2], s_p=scal_ref[3], f_dp=scal_ref[4],
+                   s_dp=scal_ref[5], fmt_p=fmt_p, fmt_e=fmt_e,
+                   rounding_p=rounding_p, rounding_e=rounding_e,
+                   saturate_p=saturate_p, saturate_e=saturate_e)
 
-    # dK/dV accumulate in raw grid units; the scale is applied exactly once
-    # when the last query head of the kv-head group has contributed (see
-    # ref.bwd_q_tile on why scale-per-part would FMA-fuse).
-    @pl.when(h % group == group - 1)
+        # TQ sub-tiles via fori_loop (one traced body however large
+        # block_q is — a python loop would inline bq/TQ copies of the
+        # stripe math and blow up compile time at long context). The loop
+        # is sequential, so the per-slice add order over (head, TQ tile)
+        # is exactly the oracle's flat chain.
+        def t2_body(t2, carry):
+            r0 = t2 * TQ
+            kw = dict(seed=seed_ref[0], bh=b * n_heads + h,
+                      row0=iq * bq + r0, col0=j * bkv,
+                      scal2=(scal_ref[0], scal_ref[1]),
+                      mask_mode=mask_mode, window=window,
+                      q_len=q_len, s_len=s_len, fmt_s=fmt_s,
+                      rounding_s=rounding_s, saturate_s=saturate_s)
+            l = l_ref[0, 0, pl.dslice(r0, TQ)]
+            d_safe = jnp.where(l > 0, l, 1.0)
+            dk_parts, dv_parts = _r.bwd_stripe_dkv(
+                q_ref[0, 0, pl.dslice(r0, TQ)], k_ref[0, 0], v_ref[0, 0],
+                do_ref[0, 0, pl.dslice(r0, TQ)], None,
+                m_ref[0, 0, pl.dslice(r0, TQ)], d_safe,
+                rd_ref[0, 0, pl.dslice(r0, TQ)], f_ds=scal_ref[6],
+                **kw, **bkw)
+            # RAW grid-unit accumulation; the scale is applied exactly
+            # once below (see ref.bwd_stripe_dkv on the FMA hazard).
+            for jj, (pk, pv_) in enumerate(zip(dk_parts, dv_parts)):
+                js = slice(jj * _r.LANE, (jj + 1) * _r.LANE)
+                dk_ref[0, 0, js, :] += pk
+                dv_ref[0, 0, js, :] += pv_
+            return carry
+
+        jax.lax.fori_loop(0, max(1, bq // TQ), t2_body, 0)
+
+    @pl.when(t == group * nq - 1)
     def _scale():
         dk_ref[...] = dk_ref[...] * scal_ref[8]
         dv_ref[...] = dv_ref[...] * scal_ref[9]
 
 
 def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
+                             block_q: int = DEFAULT_BQ,
+                             block_kv: int = 0,
                              mask_mode: str = "causal", window: int = 0,
                              q_len: int, s_len: int,
                              fmt_s: str, fmt_p: str, fmt_e: str,
@@ -187,50 +368,106 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
                              saturate_e: bool,
                              interpret: bool = False):
     """Backward of the fused attention (training masks only: causal/full).
-    Inputs pre-padded (Qp a TQ multiple, Sp/Dp LANE multiples); scal (10,)
-    f32 (see ref.bwd_q_tile). Returns (dq (B,H,Qp,Dp) f32,
-    dk/dv (B,Hkv,Sp,Dp) f32, amax_dp (B,H) f32, amax_ds (B,H) f32) with
-    amaxes in grid units."""
+    Inputs pre-padded (Qp a block_q multiple — block_q a TQ multiple when
+    larger, Sp a block_kv multiple, Dp a LANE multiple); scal (10,) f32
+    (see ref.bwd_q_tile). Runs the two streamed kernels (stats+dQ, then
+    dK/dV) with the per-row (m, l, rd) statistics round-tripped through HBM
+    in exact f32. Returns (dq (B,H,Qp,Dp) f32, dk/dv (B,Hkv,Sp,Dp) f32,
+    amax_dp (B,H,nq) f32, amax_ds (B,H,nq) f32) with amaxes in grid units
+    per query block (reduce with an exact max)."""
     b_, h_, qp, dp = q8.shape
     hkv, sp = k8.shape[1], k8.shape[2]
     group = h_ // hkv
-    grid = (b_, h_)
+    bq = min(block_q, qp)
+    if bq > TQ and bq % TQ:
+        raise ValueError(f"backward block_q must be a multiple of {TQ}")
+    bkv = sp if not block_kv else min(block_kv, sp)
+    nk = sp // bkv
+    nq = qp // bq
+    fmt_kw = dict(mask_mode=mask_mode, window=window, q_len=q_len,
+                  s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
+                  rounding_s=rounding_s, rounding_p=rounding_p,
+                  rounding_e=rounding_e, saturate_s=saturate_s,
+                  saturate_p=saturate_p, saturate_e=saturate_e)
 
-    def kv_index(b, h):
-        return (b, h // group, 0, 0)
+    def kv_index(b, h, iq, u):
+        jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
+        return (b, h // group, jnp.clip(u % nk, jmin, jmax), 0)
 
-    return pl.pallas_call(
-        functools.partial(_bwd_body, n_heads=h_, group=group,
-                          mask_mode=mask_mode, window=window,
-                          q_len=q_len, s_len=s_len,
-                          fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
-                          rounding_s=rounding_s, rounding_p=rounding_p,
-                          rounding_e=rounding_e, saturate_s=saturate_s,
-                          saturate_p=saturate_p, saturate_e=saturate_e),
-        grid=grid,
+    dq, m, l, rd, amax_dp, amax_ds = pl.pallas_call(
+        functools.partial(_bwd_dq_body, n_heads=h_, bq=bq, bkv=bkv, nk=nk,
+                          **fmt_kw),
+        grid=(b_, h_, nq, 4 * nk),
         in_specs=[
-            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, sp, dp), kv_index),
-            pl.BlockSpec((1, 1, sp, dp), kv_index),
-            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, dp), kv_index),
+            pl.BlockSpec((1, 1, bkv, dp), kv_index),
+            pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=(
-            pl.BlockSpec((1, 1, qp, dp), lambda b, h: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, sp, dp), kv_index),
-            pl.BlockSpec((1, 1, sp, dp), kv_index),
-            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
-            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+            pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+            jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q8, k8, v8, do8, scal, seed)
+
+    def q_index(b, hkv_, j, t):
+        # Shared by the q/do blocks AND the m/l/rd statistics blocks —
+        # they must be sliced identically per (head, q-tile).
+        imin, imax = _qspan(j, bq, bkv, nq, mask_mode, window)
+        return (b, hkv_ * group + t // nq, jnp.clip(t % nq, imin, imax), 0)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_body, n_heads=h_, group=group, bq=bq,
+                          bkv=bkv, nq=nq, nk=nk, **fmt_kw),
+        grid=(b_, hkv, nk, group * nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dp), q_index),
+            pl.BlockSpec((1, 1, bq, dp), q_index),
+            pl.BlockSpec((1, 1, bkv, dp),
+                         lambda b, hkv_, j, t: (b, hkv_, j, 0)),
+            pl.BlockSpec((1, 1, bkv, dp),
+                         lambda b, hkv_, j, t: (b, hkv_, j, 0)),
+            pl.BlockSpec((1, 1, bq, 1), q_index),
+            pl.BlockSpec((1, 1, bq, 1), q_index),
+            pl.BlockSpec((1, 1, bq, 1), q_index),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, bkv, dp),
+                         lambda b, hkv_, j, t: (b, hkv_, j, 0)),
+            pl.BlockSpec((1, 1, bkv, dp),
+                         lambda b, hkv_, j, t: (b, hkv_, j, 0)),
+        ),
+        out_shape=(
             jax.ShapeDtypeStruct((b_, hkv, sp, dp), jnp.float32),
             jax.ShapeDtypeStruct((b_, hkv, sp, dp), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_), jnp.float32),
         ),
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
-    )(q8, k8, v8, do8, scal, seed)
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q8, do8, k8, v8, m, l, rd, scal, seed)
+    return dq, dk, dv, amax_dp, amax_ds

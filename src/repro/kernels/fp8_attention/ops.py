@@ -1,12 +1,19 @@
-"""Jit'd public wrappers for the fused FP8 attention kernels.
+"""Jit'd public wrappers for the streamed-KV fused FP8 attention kernels.
 
-Padding contract: Q pads to a block_q multiple, the KV length and head dim
-to LANE (128) multiples — all with zeros, which the shared tile math makes
-numerically invisible (exact-0.0 contributions; observations masked to the
-logical region), so outputs and amaxes are invariant to padding and to the
-block_q choice. SR bits come from a counter-based hash of absolute
-coordinates (ref.sr_hash_bits), so no rand array is ever materialized and
-every tiling draws identical bits.
+Padding contract: Q pads to a block_q multiple, the KV length to a block_kv
+multiple (block_kv itself a LANE multiple, capped at the padded length so
+short sequences keep one stripe), the head dim to a LANE (128) multiple —
+all with zeros, which the shared stripe math makes numerically invisible
+(exact-0.0 contributions; observations masked to the attended region), so
+outputs and amaxes are invariant to padding and to the block_q / block_kv
+choices. SR bits come from a counter-based hash of absolute coordinates
+(ref.sr_hash_bits), so no rand array is ever materialized and every tiling
+draws identical bits.
+
+VMEM residency is O(block_q * D + block_kv * D) per grid step — the
+sequence length only grows the grid, so 32k+ contexts train and serve
+through the same kernels; causal / sliding-window tiles skip their
+fully-masked stripes entirely (ref.kv_stripe_span).
 """
 from __future__ import annotations
 
@@ -20,11 +27,12 @@ from repro.kernels.fp8_attention import ref as _r
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "mask_mode", "window", "block_q", "fmt_s", "fmt_p",
+    "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p",
     "rounding_s", "rounding_p", "saturate_s", "saturate_p", "interpret"))
 def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
                       window: int = 0, kv_mask=None,
                       block_q: int = _k.DEFAULT_BQ,
+                      block_kv: int = None,
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
                       rounding_s: str = "sr", rounding_p: str = "sr",
                       saturate_s: bool = True, saturate_p: bool = True,
@@ -35,23 +43,28 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     e5m2 payloads compose with an e4m3 recipe; tiles upcast to bf16 for the
     MXU); seed u32 scalar; scal (4,) f32 [f_s, s_s, f_p, f_o] (ref module
     docstring). kv_mask: (B, S) int8/bool validity for mask_mode='kv'.
+    block_kv: kv-stripe rows resident in VMEM per grid step (None ->
+    kernel default).
 
     Returns (o (B,H,Q,D) bf16, amax_s, amax_p) — scalar amaxes of the
     quantized S/P tiles in grid units (multiply by s_s / s_p for real
-    units), bit-identical to `fp8_amax_bits` over the materialized logical
-    payloads of the unfused composition.
+    units), masked to the attended region: bit-identical to
+    `fp8_amax_bits` over the masked logical payloads of the unfused
+    composition.
     """
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
     bq = min(block_q, max(1, q_len))
-    qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq)
+    bkv = _r.resolve_block_kv(s_len, block_kv)
+    qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq, bkv)
     mask = None
     if mask_mode == "kv":
-        mask = _r._pad_to(kv_mask.astype(jnp.int8), 1, _r.LANE)
+        mask = _r._pad_to(kv_mask.astype(jnp.int8), 1, bkv)
     seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
     scal = jnp.asarray(scal, jnp.float32).reshape((4,))
     o, amax_s, amax_p = _k.fp8_attention_fwd_kernel(
-        qp, kp, vp, mask, seed, scal, block_q=bq, mask_mode=mask_mode,
+        qp, kp, vp, mask, seed, scal, block_q=bq, block_kv=bkv,
+        mask_mode=mask_mode,
         window=window, q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p,
         rounding_s=rounding_s, rounding_p=rounding_p,
         saturate_s=saturate_s, saturate_p=saturate_p, interpret=interpret)
@@ -59,11 +72,13 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "mask_mode", "window", "fmt_s", "fmt_p", "fmt_e",
+    "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p", "fmt_e",
     "rounding_s", "rounding_p", "rounding_e",
     "saturate_s", "saturate_p", "saturate_e", "interpret"))
 def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       mask_mode: str = "causal", window: int = 0,
+                      block_q: int = _k.DEFAULT_BQ,
+                      block_kv: int = None,
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
                       fmt_e: str = "e5m2",
                       rounding_s: str = "sr", rounding_p: str = "sr",
@@ -73,20 +88,25 @@ def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       interpret: bool = False):
     """Fused FP8 attention backward (training masks: 'causal'/'full').
     do8: the error-quantized output cotangent payload (B,H,Q,D). scal (10,)
-    f32 (ref.bwd_q_tile). Returns (dq (B,H,Q,D) f32, dk/dv (B,Hkv,S,D) f32,
-    amax_dp, amax_ds) with amaxes in grid units."""
+    f32 (ref.bwd_q_tile). block_q must be a TQ (128) multiple when larger
+    than TQ — dK/dV contraction granularity is pinned to TQ rows, so
+    results are invariant to both block knobs. Returns (dq (B,H,Q,D) f32,
+    dk/dv (B,Hkv,S,D) f32, amax_dp, amax_ds) with amaxes in grid units."""
     if mask_mode not in ("causal", "full"):
         raise ValueError(
             f"fused attention backward supports causal/full, not "
             f"{mask_mode!r}")
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
-    qp, kp, vp = _r.pad_qkv(q8, k8, v8, _k.TQ)
-    dop = _r._pad_to(_r._pad_to(do8, 2, _k.TQ), 3, _r.LANE)
+    bq = max(_k.TQ, block_q)
+    bkv = _r.resolve_block_kv(s_len, block_kv)
+    qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq, bkv)
+    dop = _r._pad_to(_r._pad_to(do8, 2, bq), 3, _r.LANE)
     seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
     scal = jnp.asarray(scal, jnp.float32).reshape((10,))
     dq, dk, dv, amax_dp, amax_ds = _k.fp8_attention_bwd_kernel(
-        qp, kp, vp, dop, seed, scal, mask_mode=mask_mode, window=window,
+        qp, kp, vp, dop, seed, scal, block_q=bq, block_kv=bkv,
+        mask_mode=mask_mode, window=window,
         q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
         rounding_s=rounding_s, rounding_p=rounding_p, rounding_e=rounding_e,
         saturate_s=saturate_s, saturate_p=saturate_p, saturate_e=saturate_e,

@@ -233,6 +233,11 @@ def build_cell(arch: str, shape: str, mesh, *,
         meta["scaling"] = cfg.policy.quant.scaling
         meta["fuse_epilogue"] = cfg.policy.quant.fuse_epilogue
         meta["fuse_attention"] = cfg.policy.quant.fuse_attention
+        if cfg.policy.quant.fuse_attention:
+            # Streamed-KV knobs (results are bit-invariant to them; they
+            # set the kernel's VMEM working set per grid step).
+            meta["attn_block_q"] = cfg.policy.quant.attn_block_q
+            meta["attn_block_kv"] = cfg.policy.quant.attn_block_kv
         if cfg.policy.quant.scaling == "delayed":
             from repro.scaling.calibrate import discover_lm_sites
             from repro.scaling.state import DelayedScaling

@@ -10,7 +10,11 @@ Local (sliding-window) attention slices the static band instead of the full
 prefix. Decode uses a ring-buffer cache of `window` slots for local layers —
 softmax is permutation-invariant over KV slots, so ring order is fine as long
 as RoPE is applied before caching; slot validity is tracked by absolute
-position.
+position, and entries always live at slot `pos % capacity` (prefill included)
+so appends evict exactly the oldest position. The permutation-invariance
+claim holds through the fused `fp8_sdpa_decode` kernel too — out-of-order
+(wrapped) slots are handled by the validity mask, for FP8 and bf16 caches
+alike (locked by TestRingDecode in tests/test_fp8_attention.py).
 
 KV caches can be stored in FP8 e5m2 (beyond-paper; halves the decode
 bandwidth, which the roofline shows is the decode bottleneck).
@@ -290,7 +294,12 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             # Fused FP8 flash path: K/V stay UNREPEATED (B, Hkv, S, dh) —
             # GQA grouping happens in the kernel's block index maps — and
             # the kernel chunks queries internally (no python q-chunk loop,
-            # no remat: backward recomputes from the FP8 residuals).
+            # no remat: backward recomputes from the FP8 residuals). With
+            # the streamed-KV grid this IS the long-sequence path: VMEM
+            # holds one (attn_block_q, attn_block_kv) working set whatever
+            # the context length, and sliding-window layers skip their
+            # fully-masked kv stripes — the python chunked loop below only
+            # serves the unfused fallback.
             kt = constrain(k.transpose(0, 2, 1, 3), "dp", "model", None,
                            None)
             vt = constrain(v.transpose(0, 2, 1, 3), "dp", "model", None,
@@ -386,11 +395,24 @@ def _prefill_cache(cache_layer, k, v, positions, *, k_scale: float = 1.0,
         slot = jax.lax.dynamic_update_slice(slot, positions.astype(jnp.int32),
                                             (0, 0))
     else:
-        # Ring cache smaller than the prompt: keep the last `cap` tokens.
+        # Ring cache smaller than the prompt: keep the last `cap` tokens AT
+        # THEIR RING SLOTS (pos % cap) — the invariant `_append_cache`
+        # relies on. Writing them sequentially to slots 0..cap-1 instead
+        # (the pre-fix behavior) desynchronizes the ring whenever
+        # s % cap != 0: the next append overwrites a slot that still holds
+        # an in-window position while older out-of-window entries survive,
+        # silently dropping valid keys from local attention. Slot order is
+        # irrelevant to correctness (softmax is permutation-invariant over
+        # KV slots; validity tracks absolute positions).
         kq = _to_cache_dtype(k[:, -cap:], dtype, k_scale)
         vq = _to_cache_dtype(v[:, -cap:], dtype, v_scale)
-        new_k, new_v = kq, vq
-        slot = positions[:, -cap:].astype(jnp.int32)
+        keep_pos = positions[:, -cap:].astype(jnp.int32)      # (B, cap)
+        ring = keep_pos % cap
+        b_idx = jnp.arange(k.shape[0])[:, None]
+        new_k = jnp.zeros_like(cache_layer["k"]).at[b_idx, ring].set(kq)
+        new_v = jnp.zeros_like(cache_layer["v"]).at[b_idx, ring].set(vq)
+        slot = jnp.full(cache_layer["slot_pos"].shape, -1,
+                        jnp.int32).at[b_idx, ring].set(keep_pos)
     length = jnp.minimum(
         jnp.full(cache_layer["length"].shape, s, jnp.int32), cap)
     return {"k": new_k, "v": new_v, "slot_pos": slot, "length": length}

@@ -37,6 +37,14 @@ delayed scaling; one site replaces the unfused qk/pv qeinsum pair) register:
     "{S}#dp.E"      — the backward intermediate dP = Q_E(dO.V^T)
     "{S}#ds.E"      — the backward intermediate dS (softmax VJP output)
 
+The in-kernel attention observations (#qk.A, #p.A, #dp.E, #ds.E) are
+scalars masked to the ATTENDED region — causal/window/kv-masked positions
+never contribute. Under the streamed-KV kernel grid, fully-masked kv
+stripes are skipped entirely, so observing masked positions would make the
+observation depend on the stripe partition; masking keeps the amaxes
+invariant to block sizes and the stripe count out of every observation
+shape (they stay scalars — nothing here changes with context length).
+
 Raw (non-qeinsum) sites — the FP8 KV cache — use "{S}#A".
 
 Modes

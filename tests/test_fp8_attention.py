@@ -167,9 +167,10 @@ class TestFusedLowering:
 
         counts = _count_prims(jax.make_jaxpr(step)(
             q, k, v, ds.zero_tokens()).jaxpr)
-        # One fused forward kernel + one fused backward kernel; every inner
-        # product (QK^T, PV, dP, dQ, dK, dV) lives inside them.
-        assert counts["pallas"] == 2, counts
+        # One fused forward kernel + the two streamed backward kernels
+        # (stats+dQ, then dK/dV stripes); every inner product (QK^T, PV,
+        # dP, dQ, dK, dV) lives inside them.
+        assert counts["pallas"] == 3, counts
         assert counts["outside_dot"] == 0, counts
 
     def test_attention_block_has_no_xla_dots(self):
@@ -215,8 +216,9 @@ class TestFusedLowering:
 
         counts = _count_prims(jax.make_jaxpr(step)(
             params, x, ds.zero_tokens()).jaxpr)
-        # 4 projection qeinsums x 3 fused GEMMs + attention fwd/bwd kernels.
-        assert counts["pallas"] == 14, counts
+        # 4 projection qeinsums x 3 fused GEMMs + the attention fwd kernel
+        # + the two streamed backward kernels (stats+dQ, dK/dV).
+        assert counts["pallas"] == 15, counts
         assert counts["outside_dot"] == 0, counts
 
     def test_fuse_attention_predicate(self):
@@ -438,6 +440,241 @@ class TestTilingInvariance:
 
 
 # ---------------------------------------------------------------------------
+# streamed-KV grid: stripe-skip proofs + block-size invariance
+# ---------------------------------------------------------------------------
+
+def _brute_span(row0, bq, bkv, nk, mask_mode, window, s_len):
+    """Ground truth for kv_stripe_span: the stripes with >= 1 valid cell
+    for any row of the tile, from the mask definition itself."""
+    active = []
+    for j in range(nk):
+        hit = False
+        for r in range(row0, row0 + bq):
+            for c in range(j * bkv, (j + 1) * bkv):
+                ok = c < s_len
+                if mask_mode == "causal":
+                    ok = ok and c <= r
+                    if window:
+                        ok = ok and c > r - window
+                if ok:
+                    hit = True
+                    break
+            if hit:
+                break
+        if hit:
+            active.append(j)
+    return active
+
+
+class TestStripeSkip:
+    @pytest.mark.parametrize("bq,bkv,s,window", [
+        (128, 128, 1024, 0),
+        (128, 256, 1024, 200),
+        (256, 128, 1280, 384),
+        (128, 512, 2048, 512),
+    ])
+    def test_kv_stripe_span_matches_mask(self, bq, bkv, s, window):
+        """The static skip range is EXACTLY the set of stripes with any
+        attended cell — skipping is never lossy, and never visits a fully
+        masked stripe (the block-index-map contract)."""
+        nk = s // bkv
+        nq = s // bq
+        for iq in range(nq):
+            jmin, jmax = attn_ref.kv_stripe_span(
+                iq * bq, bq, block_kv=bkv, n_kv=nk, mask_mode="causal",
+                window=window)
+            want = _brute_span(iq * bq, bq, bkv, nk, "causal", window, s)
+            assert list(range(jmin, jmax + 1)) == want, (iq, jmin, jmax)
+
+    @pytest.mark.parametrize("bq,bkv,s,window", [
+        (128, 256, 1024, 200),
+        (256, 128, 1280, 384),
+    ])
+    def test_q_tile_span_is_inverse(self, bq, bkv, s, window):
+        """q_tile_span (the dK/dV kernel's clamp range) is the exact
+        inverse relation of kv_stripe_span."""
+        nk, nq = s // bkv, s // bq
+        for j in range(nk):
+            imin, imax = attn_ref.q_tile_span(
+                j, block_q=bq, block_kv=bkv, n_q=nq, mask_mode="causal",
+                window=window)
+            want = [i for i in range(nq)
+                    if attn_ref.kv_stripe_span(
+                        i * bq, bq, block_kv=bkv, n_kv=nk,
+                        mask_mode="causal", window=window)[0] <= j
+                    <= attn_ref.kv_stripe_span(
+                        i * bq, bq, block_kv=bkv, n_kv=nk,
+                        mask_mode="causal", window=window)[1]]
+            assert list(range(imin, imax + 1)) == want, (j, imin, imax)
+
+    def test_skipped_stripes_never_touched(self):
+        """NaN-poisoning proof: fill every fully-masked (future) stripe of
+        K/V with FP8 NaN payloads — forward outputs/amaxes and backward
+        grads are bit-identical to the zero-filled run, so the kernels
+        provably never feed those stripes to compute (a single read would
+        poison the running max and every downstream value)."""
+        s, q_len, d = 2048, 256, 64
+        dt = jnp.float8_e4m3fn
+        q8 = (jax.random.normal(jax.random.PRNGKey(0), (1, 2, q_len, d))
+              * 0.3).astype(dt)
+        k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i), (1, 1, s, d))
+                   * 0.3).astype(dt) for i in (1, 2)]
+
+        def poison(x):
+            raw = np.asarray(x).view(np.uint8).copy()
+            raw[:, :, q_len:, :] = 0x7F            # e4m3fn NaN
+            return jnp.asarray(raw).view(dt)
+
+        seed = jnp.uint32(5)
+        scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+        kw = dict(mask_mode="causal", block_q=256, block_kv=256,
+                  fmt_s="e4m3", fmt_p="e4m3", rounding_s="sr",
+                  rounding_p="sr", interpret=True)
+        clean = fp8_attention_fwd(q8, k8, v8, seed, scal, **kw)
+        dirty = fp8_attention_fwd(q8, poison(k8), poison(v8), seed, scal,
+                                  **kw)
+        np.testing.assert_array_equal(_bits(clean[0]), _bits(dirty[0]))
+        assert float(clean[1]) == float(dirty[1])
+        assert float(clean[2]) == float(dirty[2])
+        assert np.isfinite(np.asarray(clean[0], np.float32)).all()
+
+        do8 = (jax.random.normal(jax.random.PRNGKey(3), (1, 2, q_len, d))
+               * 0.2).astype(jnp.float8_e5m2)
+        bscal = jnp.array([0.5, 2.0, 8.0, 0.125, 0.7, 1.5, 0.3, 0.8, 0.9,
+                           0.05], jnp.float32)
+        bkw = dict(mask_mode="causal", block_q=256, block_kv=256,
+                   fmt_s="e4m3", fmt_p="e4m3", fmt_e="e5m2",
+                   rounding_s="sr", rounding_p="sr", rounding_e="sr",
+                   saturate_e=False, interpret=True)
+        cb = fp8_attention_bwd(q8, k8, v8, do8, seed, bscal, **bkw)
+        db = fp8_attention_bwd(q8, poison(k8), poison(v8), do8, seed,
+                               bscal, **bkw)
+        for a, b in zip(cb, db):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # ... and the skipped stripes' dK/dV are exactly zero.
+        assert not np.asarray(cb[1])[:, :, q_len:, :].any()
+        assert not np.asarray(cb[2])[:, :, q_len:, :].any()
+
+    def test_fwd_grid_has_kv_stripe_dimension(self):
+        """Jaxpr grid check: the forward pallas_call carries the
+        (B, H, nq, 3*nk) streamed grid, not the PR-4 (B, H, nq) one."""
+        s, bkv = 1024, 256
+        q8, k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                         (1, 2, s, 64)) * 0.3).astype(
+            jnp.float8_e5m2) for i in range(3)]
+        jaxpr = jax.make_jaxpr(
+            lambda q, k, v: fp8_attention_fwd(
+                q, k, v, jnp.uint32(0),
+                jnp.ones((4,), jnp.float32), block_q=128, block_kv=bkv,
+                fmt_s="e5m2", fmt_p="e5m2", rounding_s="rne",
+                rounding_p="rne", interpret=True))(q8, k8, v8)
+        grids = [eqn.params["grid_mapping"].grid
+                 for eqn in _all_eqns(jaxpr.jaxpr)
+                 if eqn.primitive.name == "pallas_call"]
+        assert (1, 2, s // 128, 3 * (s // bkv)) in grids, grids
+
+
+def _all_eqns(jaxpr):
+    out = list(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: hasattr(x, "eqns")
+                    or hasattr(x, "jaxpr")):
+                if hasattr(sub, "jaxpr"):
+                    out += _all_eqns(sub.jaxpr)
+                elif hasattr(sub, "eqns"):
+                    out += _all_eqns(sub)
+    return out
+
+
+class TestStreamedInvariance:
+    def test_fwd_invariant_to_block_kv(self):
+        """Outputs and amaxes are bit-identical across kv stripe sizes
+        (carries cross stripe boundaries; the LANE-step chain is the same
+        however it is cut) and match the oracle at every size."""
+        s = 640
+        q8, k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                         (1, 2, s, 64)) * 0.3).astype(
+            jnp.float8_e4m3fn) for i in range(3)]
+        seed = jnp.uint32(7)
+        scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+        for window in (0, 200):
+            kw = dict(mask_mode="causal", window=window, fmt_s="e4m3",
+                      fmt_p="e4m3", rounding_s="sr", rounding_p="sr")
+            outs = []
+            for bkv in (128, 256, 640):
+                o, a_s, a_p = fp8_attention_fwd(
+                    q8, k8, v8, seed, scal, block_q=128, block_kv=bkv,
+                    interpret=True, **kw)
+                outs.append((_bits(o), float(a_s), float(a_p)))
+            for got in outs[1:]:
+                np.testing.assert_array_equal(got[0], outs[0][0])
+                assert got[1:] == outs[0][1:]
+            ro, rs, rp, _, _ = fp8_attention_fwd_ref(
+                q8, k8, v8, seed, scal, block_kv=256, **kw)
+            np.testing.assert_array_equal(outs[0][0], _bits(ro))
+            assert outs[0][1:] == (float(rs), float(rp))
+
+    def test_bwd_bit_equal_across_block_configs(self):
+        """The FMA-fusion parity pin (PR-4's documented hazard) extended
+        to the streamed grid: the backward compiled at different
+        (block_q, block_kv) configs — including the single-stripe config
+        equivalent to the PR-4 kernel — produces BIT-EQUAL dQ/dK/dV and
+        amaxes, and matches the oracle. A raw-accumulation + scale-once
+        regression (or any reduction regrouping) breaks this."""
+        s = 512
+        q8, k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                         (1, 4, s, 64)) * 0.3).astype(
+            jnp.float8_e4m3fn) for i in range(3)]
+        k8, v8 = k8[:, :2], v8[:, :2]          # GQA group of 2
+        do8 = (jax.random.normal(jax.random.PRNGKey(4), (1, 4, s, 64))
+               * 0.2).astype(jnp.float8_e5m2)
+        seed = jnp.uint32(11)
+        scal = jnp.array([0.5, 2.0, 8.0, 0.125, 0.7, 1.5, 0.3, 0.8, 0.9,
+                          0.05], jnp.float32)
+        for window in (0, 160):
+            kw = dict(mask_mode="causal", window=window, fmt_s="e4m3",
+                      fmt_p="e4m3", fmt_e="e5m2", rounding_s="sr",
+                      rounding_p="sr", rounding_e="sr", saturate_e=False)
+            outs = []
+            for bq, bkv in ((128, 128), (256, 256), (128, 512)):
+                outs.append(fp8_attention_bwd(
+                    q8, k8, v8, do8, seed, scal, block_q=bq, block_kv=bkv,
+                    interpret=True, **kw))
+            for got in outs[1:]:
+                for a, b in zip(outs[0][:3], got[:3]):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+                assert (float(got[3]), float(got[4])) \
+                    == (float(outs[0][3]), float(outs[0][4]))
+            refs = fp8_attention_bwd_ref(q8, k8, v8, do8, seed, scal,
+                                         block_kv=128, **kw)
+            for a, r in zip(outs[0][:3], refs[:3]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+    def test_sdpa_invariant_to_attn_block_knobs(self):
+        """End to end through fp8_sdpa: the QuantConfig streamed-KV knobs
+        change only the grid — outputs, all three grads, and every
+        observation are bit-identical across them."""
+        cfg = _cfg("hybrid")
+        keys, reg, ds = _site_bundle(cfg)
+        q, k, v = _qkv(b=1, h=2, hkv=1, s=300)
+        key = jax.random.PRNGKey(5)
+        state = ds.init()
+        base = _run_step(ds, state, cfg, q, k, v, key)
+        small = dataclasses.replace(cfg, attn_block_q=128,
+                                    attn_block_kv=128)
+        got = _run_step(ds, state, small, q, k, v, key)
+        np.testing.assert_array_equal(_bits(base[0]), _bits(got[0]))
+        for a, b in zip(base[1], got[1]):
+            np.testing.assert_array_equal(_bits(a), _bits(b))
+        for kk in base[2]:
+            assert np.float32(base[2][kk]).tobytes() \
+                == np.float32(got[2][kk]).tobytes(), kk
+
+
+# ---------------------------------------------------------------------------
 # decode ('kv' mask) + frozen-KV serving through the kernel
 # ---------------------------------------------------------------------------
 
@@ -526,6 +763,184 @@ class TestDecode:
 
 
 # ---------------------------------------------------------------------------
+# ring-buffer (sliding-window) decode through the fused kernel
+# ---------------------------------------------------------------------------
+
+class TestRingDecode:
+    def test_prefill_ring_layout_keeps_append_invariant(self):
+        """Regression for the ring-desync bug: a prompt longer than the
+        ring wrote its tail sequentially to slots 0..cap-1, while appends
+        use slot = pos % cap — so unless s % cap == 0 the next append
+        overwrote an IN-WINDOW entry and left the truly-oldest one alive,
+        silently dropping a valid key from local attention. Prefill must
+        place position p at slot p % cap."""
+        from repro.models.attention import _append_cache, _prefill_cache
+        cap, s, hkv, dh = 4, 6, 2, 8
+        cache = {"k": jnp.zeros((1, cap, hkv, dh), jnp.bfloat16),
+                 "v": jnp.zeros((1, cap, hkv, dh), jnp.bfloat16),
+                 "slot_pos": jnp.full((1, cap), -1, jnp.int32),
+                 "length": jnp.zeros((1,), jnp.int32)}
+        k = jnp.arange(s, dtype=jnp.float32)[None, :, None, None] \
+            * jnp.ones((1, s, hkv, dh), jnp.float32)
+        pos = jnp.arange(s)[None]
+        c = _prefill_cache(cache, k.astype(jnp.bfloat16),
+                           k.astype(jnp.bfloat16), pos)
+        # positions 2..5 live at slots pos % cap = [2, 3, 0, 1]
+        np.testing.assert_array_equal(np.asarray(c["slot_pos"][0]),
+                                      [4, 5, 2, 3])
+        np.testing.assert_array_equal(
+            np.asarray(c["k"][0, :, 0, 0], np.float32), [4, 5, 2, 3])
+        # the next append (pos 6 -> slot 2) evicts EXACTLY the oldest (2)
+        k1 = jnp.full((1, 1, hkv, dh), 6.0, jnp.bfloat16)
+        c1 = _append_cache(c, k1, k1, jnp.array([[6]]))
+        np.testing.assert_array_equal(np.asarray(c1["slot_pos"][0]),
+                                      [4, 5, 6, 3])
+        cur, window = 6, cap
+        valid = (np.asarray(c1["slot_pos"][0]) >= 0) \
+            & (np.asarray(c1["slot_pos"][0]) > cur - window)
+        assert sorted(np.asarray(c1["slot_pos"][0])[valid]) == [3, 4, 5, 6]
+
+    def test_wrapped_ring_permutation_invariance_through_kernel(self):
+        """The module-docstring claim, proven through the fused kernel: a
+        ring cache whose slot_pos wraps across the stripe boundary (out of
+        position order) decodes (a) bit-identically to the oracle fed the
+        SAME slot order, and (b) numerically identically to the same
+        logical window served in sorted order (softmax permutation
+        invariance; f32 tolerance covers the reduction-order change)."""
+        cap, hkv, h, dh = 320, 2, 4, 64
+        q8 = (jax.random.normal(jax.random.PRNGKey(0), (1, h, 1, dh))
+              * 0.3).astype(jnp.float8_e5m2)
+        k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                     (1, hkv, cap, dh)) * 0.3).astype(
+            jnp.float8_e5m2) for i in (1, 2)]
+        # wrapped ring: slots [0, cap) hold positions out of order, with
+        # a few stale (invalid) entries sprinkled in
+        slot_pos = np.roll(np.arange(cap), 131)
+        slot_pos[7] = -1
+        valid = jnp.asarray((slot_pos >= 0)[None], jnp.int8)
+        seed = jnp.uint32(13)
+        scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+        kw = dict(mask_mode="kv", fmt_s="e5m2", fmt_p="e5m2",
+                  rounding_s="rne", rounding_p="rne")
+        o, a_s, a_p = fp8_attention_fwd(q8, k8, v8, seed, scal,
+                                        kv_mask=valid, block_kv=128,
+                                        interpret=True, **kw)
+        ro, rs, rp, _, _ = fp8_attention_fwd_ref(
+            q8, k8, v8, seed, scal, kv_mask=valid, block_kv=128, **kw)
+        np.testing.assert_array_equal(_bits(o), _bits(ro))
+        assert (float(a_s), float(a_p)) == (float(rs), float(rp))
+        # permutation to sorted position order == same logical attention
+        order = np.argsort(np.where(slot_pos < 0, 10 ** 9, slot_pos))
+        o_sorted, _, _ = fp8_attention_fwd(
+            q8, k8[:, :, order], v8[:, :, order], seed, scal,
+            kv_mask=valid[:, order], block_kv=128, interpret=True, **kw)
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(o_sorted, np.float32),
+            rtol=0.05, atol=0.05)
+
+    def test_bf16_ring_decode_routes_through_fused_kernel(self):
+        """attention(mode='decode') with a bf16 ring cache under a fused
+        config goes through fp8_sdpa_decode's validity-mask path (no
+        `_sdpa` fallback: the jaxpr has a pallas_call and no XLA
+        dot_general), across the wrap-around boundary."""
+        from repro.core.precision_policy import PrecisionPolicy
+        from repro.models.attention import attention, init_attention
+        from repro.models.config import ModelConfig
+        quant = _cfg("hybrid")
+        window = 8
+        cfg = ModelConfig(arch="t", n_layers=1, d_model=64, n_heads=4,
+                          n_kv_heads=2, d_ff=128, vocab_size=64,
+                          max_seq_len=64, window=window,
+                          policy=PrecisionPolicy(quant=quant), remat=False)
+        params = init_attention(jax.random.PRNGKey(0), cfg)
+        from repro.models.attention import init_cache
+        cache = jax.tree_util.tree_map(
+            lambda x: x[0], init_cache(cfg, 1, 64, n_layers=1,
+                                       window=window))
+        assert cache["k"].dtype == jnp.bfloat16
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 64),
+                              jnp.bfloat16)
+        pos = jnp.arange(12)[None]
+        _, cache = attention(params, x, cfg=cfg, qcfg=quant,
+                             qkey=jax.random.PRNGKey(2), positions=pos,
+                             mode="prefill", cache_layer=cache,
+                             window=window)
+        # decode across the ring wrap: positions 12..14, cap == window == 8
+        def decode(params, xt, cache, p):
+            return attention(params, xt, cfg=cfg, qcfg=quant,
+                             qkey=jax.random.PRNGKey(3),
+                             positions=p, mode="decode",
+                             cache_layer=cache, window=window)
+        for t in range(12, 15):
+            xt = jax.random.normal(jax.random.fold_in(
+                jax.random.PRNGKey(4), t), (1, 1, 64), jnp.bfloat16)
+            y, cache = decode(params, xt, cache, jnp.array([[t]]))
+            assert np.isfinite(np.asarray(y, np.float32)).all()
+            assert int(jnp.max(cache["slot_pos"])) == t
+        jaxpr = jax.make_jaxpr(
+            lambda *a: decode(*a)[0])(params, xt, cache,
+                                      jnp.array([[15]]))
+        counts = _count_prims(jaxpr.jaxpr)
+        assert counts["pallas"] >= 1, counts
+        assert counts["outside_dot"] == 0, counts
+
+
+# ---------------------------------------------------------------------------
+# 32k streamed long-context smoke (nightly)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestLongContext32k:
+    @pytest.mark.parametrize("recipe", ["paper_e5m2", "hybrid"])
+    def test_32k_windowed_fwd_bwd_parity(self, recipe):
+        """S=32k sliding-window training step through the streamed grid:
+        fwd outputs + amaxes and bwd grads + amaxes bit-match the
+        (payload-free) oracle. Ragged length (not a block multiple), GQA,
+        and a window that crosses stripe boundaries; large blocks keep the
+        interpret-mode grid small while VMEM-sized blocks on hardware only
+        change the grid (bit-invariance locked by the fast tests)."""
+        s_len, q_len, d, window = 32640, 32640, 64, 1536
+        bq = bkv = 4096
+        fmt_a = "e4m3" if recipe == "hybrid" else "e5m2"
+        dt = jnp.float8_e4m3fn if recipe == "hybrid" else jnp.float8_e5m2
+        q8 = (jax.random.normal(jax.random.PRNGKey(0), (1, 2, q_len, d))
+              * 0.3).astype(dt)
+        k8, v8 = [(jax.random.normal(jax.random.PRNGKey(i),
+                                     (1, 1, s_len, d)) * 0.3).astype(dt)
+                  for i in (1, 2)]
+        seed = jnp.uint32(17)
+        scal = jnp.array([0.5, 2.0, 8.0, 0.25], jnp.float32)
+        kw = dict(mask_mode="causal", window=window, fmt_s=fmt_a,
+                  fmt_p=fmt_a, rounding_s="sr", rounding_p="sr")
+        o, a_s, a_p = fp8_attention_fwd(q8, k8, v8, seed, scal,
+                                        block_q=bq, block_kv=bkv,
+                                        interpret=True, **kw)
+        ro, rs, rp, _, _ = fp8_attention_fwd_ref(
+            q8, k8, v8, seed, scal, block_q=bq, block_kv=bkv,
+            payload=False, **kw)
+        np.testing.assert_array_equal(_bits(o), _bits(ro))
+        assert (float(a_s), float(a_p)) == (float(rs), float(rp))
+
+        do8 = (jax.random.normal(jax.random.PRNGKey(3), (1, 2, q_len, d))
+               * 0.2).astype(jnp.float8_e5m2)
+        bscal = jnp.array([0.5, 2.0, 8.0, 0.125, 0.7, 1.5, 0.3, 0.8, 0.9,
+                           0.05], jnp.float32)
+        bkw = dict(mask_mode="causal", window=window, fmt_s=fmt_a,
+                   fmt_p=fmt_a, fmt_e="e5m2", rounding_s="sr",
+                   rounding_p="sr", rounding_e="sr", saturate_e=False)
+        outs = fp8_attention_bwd(q8, k8, v8, do8, seed, bscal,
+                                 block_q=bq, block_kv=bkv, interpret=True,
+                                 **bkw)
+        refs = fp8_attention_bwd_ref(q8, k8, v8, do8, seed, bscal,
+                                     block_q=bq, block_kv=bkv,
+                                     payload=False, **bkw)
+        for a, r in zip(outs[:3], refs[:3]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+        assert (float(outs[3]), float(outs[4])) \
+            == (float(refs[3]), float(refs[4]))
+
+
+# ---------------------------------------------------------------------------
 # slow property tests (hypothesis; nightly)
 # ---------------------------------------------------------------------------
 
@@ -611,6 +1026,11 @@ class TestProperties:
                              p8_naive.astype(jnp.bfloat16),
                              v8.astype(jnp.bfloat16),
                              preferred_element_type=jnp.float32) * scal[3]
+        # The oracle materializes its payloads masked to the attended
+        # region (stripe-skip observation semantics) — mask the naive
+        # side the same way before comparing.
+        s8_naive = jnp.where(mask[None, None], s8_naive,
+                             jnp.zeros_like(s8_naive))
         np.testing.assert_array_equal(_bits(s8), _bits(s8_naive))
         mismatch = (_bits(p8) != _bits(p8_naive)).mean()
         assert mismatch < 0.01, mismatch   # boundary flips only
