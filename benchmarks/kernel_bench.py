@@ -449,16 +449,24 @@ def bench_speed(*, smoke=False):
     state, _ = step_fn(state, batch, jax.random.PRNGKey(1))   # compile
     jax.block_until_ready(state.master)
     steps = 5 if smoke else 25
+    # Per-step wall times (sync each step) so the artifact records the
+    # p50/p99 span the health dashboard compares against, not just the
+    # mean — a straggler tail is invisible in an aggregate-loop time.
+    times = []
     t0 = time.time()
     for i in range(steps):
+        ts = time.time()
         state, m = step_fn(state, next(data),
                            jax.random.fold_in(jax.random.PRNGKey(2), i))
-    jax.block_until_ready(m)
+        jax.block_until_ready(m)
+        times.append(time.time() - ts)
     step_s = (time.time() - t0) / steps
     tokens_per_step = batch_size * seq
     q = cfg.policy.quant
     out = {
         "step_time_s": step_s,
+        "step_time_p50_s": float(np.percentile(times, 50)),
+        "step_time_p99_s": float(np.percentile(times, 99)),
         "tokens_per_s": tokens_per_step / step_s,
         "tokens_per_step": tokens_per_step,
         "steps_measured": steps,

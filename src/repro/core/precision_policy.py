@@ -95,6 +95,12 @@ class QuantConfig:
     # larger than 128; attn_block_kv a multiple of 128.
     attn_block_q: int = 128
     attn_block_kv: int = 512
+    # Precision-health counters (repro.obs): per-site saturation / flush
+    # fractions observed next to the delayed-scaling amax reads — payload
+    # bit patterns on the XLA side, VMEM tile counts in the fused kernel
+    # epilogues. Telemetry only: enabling it changes no computed bits
+    # (parity-locked in tests/test_obs.py). Requires scaling="delayed".
+    track_health: bool = False
 
     def __post_init__(self):
         # The recipe OWNS the per-class formats (idempotent under

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision_policy import ACT, ERROR, QuantConfig, dtype_of
-from repro.core.qlinear import _observe, _quant_operand
+from repro.core.qlinear import _health, _observe, _quant_operand, _track
 from repro.scaling import context as scale_ctx
 
 Array = jax.Array
@@ -94,9 +94,11 @@ def _fp8_sdpa(cfg: QuantConfig, mask_mode: str, window: int,
               sm_scale: float, q: Array, k: Array, v: Array, key: Array,
               scales: Array, token: Array):
     """Returns (o, fwd_obs) with fwd_obs = [amax_q, amax_k, amax_v,
-    amax_s, amax_p] in real units (zeros unless cfg.scaling == 'delayed').
-    token: f32[TOKEN_CHANNELS] whose cotangent carries
-    [amax_dO, 0, 0, amax_dP, amax_dS]."""
+    amax_s, amax_p] in real units (zeros unless cfg.scaling == 'delayed');
+    when cfg.track_health, fwd_obs extends to (15,) with the (sat, flush)
+    fraction pairs of q/k/v (payload reads) and in-kernel S/P. token:
+    f32[token_width] whose cotangent carries
+    [amax_dO, 0, 0, amax_dP, amax_dS] (+ health pairs when tracking)."""
     out, _ = _fp8_sdpa_fwd(cfg, mask_mode, window, sm_scale, q, k, v, key,
                            scales, token)
     return out
@@ -112,12 +114,21 @@ def _fp8_sdpa_fwd(cfg, mask_mode, window, sm_scale, q, k, v, key, scales,
     # In-kernel SR bits come from a counter hash of this seed + absolute
     # coordinates (no rand array in HBM; bits are tiling-invariant).
     seed = jax.random.bits(k_seed, (), jnp.uint32)
-    o, amax_s, amax_p = attn_ops.fp8_attention_fwd(
+    outs = attn_ops.fp8_attention_fwd(
         q8.data, k8.data, v8.data, seed, _fwd_factors(scales, sm_scale),
-        mask_mode=mask_mode, window=window, **_kernel_kwargs(cfg))
+        mask_mode=mask_mode, window=window, with_counts=_track(cfg),
+        **_kernel_kwargs(cfg))
+    if _track(cfg):
+        o, amax_s, amax_p, hs, hp = outs
+    else:
+        o, amax_s, amax_p = outs
     obs = jnp.stack([_observe(q8, cfg), _observe(k8, cfg),
                      _observe(v8, cfg), amax_s * scales[3],
                      amax_p * scales[4]])
+    if _track(cfg):
+        obs = jnp.concatenate([obs, _health(q8, cfg, ACT),
+                               _health(k8, cfg, ACT),
+                               _health(v8, cfg, ACT), hs, hp])
     res = (q8, k8, v8, seed, scales, k_bwd,
            jnp.zeros((0,), q.dtype), jnp.zeros((0,), k.dtype),
            jnp.zeros((0,), v.dtype))
@@ -129,15 +140,23 @@ def _fp8_sdpa_bwd(cfg, mask_mode, window, sm_scale, res, ct):
     dy, _ = ct   # fwd_obs cotangent discarded
     q8, k8, v8, seed, scales, k_bwd, q_wit, k_wit, v_wit = res
     qdo = _quant_operand(dy, ERROR, cfg, k_bwd, scale=scales[5])
-    dq, dk, dv, amax_dp, amax_ds = attn_ops.fp8_attention_bwd(
+    outs = attn_ops.fp8_attention_bwd(
         q8.data, k8.data, v8.data, qdo.data, seed,
         _bwd_factors(scales, sm_scale),
         mask_mode=mask_mode, window=window,
         fmt_e=cfg.format_for(ERROR), rounding_e=cfg.rounding_for(ERROR),
-        saturate_e=cfg.saturate_for(ERROR), **_kernel_kwargs(cfg))
+        saturate_e=cfg.saturate_for(ERROR), with_counts=_track(cfg),
+        **_kernel_kwargs(cfg))
+    health = None
+    if _track(cfg):
+        dq, dk, dv, amax_dp, amax_ds, hdp, hds = outs
+        health = scale_ctx.health_pairs(
+            [_health(qdo, cfg, ERROR), None, None, hdp, hds])
+    else:
+        dq, dk, dv, amax_dp, amax_ds = outs
     token_ct = scale_ctx.token_cotangent(
         e=_observe(qdo, cfg), dp=amax_dp * scales[6],
-        ds=amax_ds * scales[7])
+        ds=amax_ds * scales[7], health=health)
     return (dq.astype(q_wit.dtype), dk.astype(k_wit.dtype),
             dv.astype(v_wit.dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
@@ -202,10 +221,16 @@ def fp8_sdpa(q: Array, k: Array, v: Array, *, key: Optional[Array],
                            scales, token)
         for i, n in enumerate(_ORDER[:5]):
             ctx.record(keys[n], obs[i])
+        if _track(cfg):
+            # Health pairs follow the 5 amaxes: q/k/v payloads, then the
+            # in-kernel S/P tiles.
+            for i, n in enumerate(_ORDER[:5]):
+                ctx.record_health(keys[n], obs[5 + 2 * i: 7 + 2 * i])
         return o
     o, _ = _fp8_sdpa(cfg, mask_mode, window, sm_scale, q, k, v, key,
                      jnp.ones((ATTN_SCALES,), jnp.float32),
-                     jnp.zeros((scale_ctx.TOKEN_CHANNELS,), jnp.float32))
+                     jnp.zeros((scale_ctx.token_width(_track(cfg)),),
+                               jnp.float32))
     return o
 
 

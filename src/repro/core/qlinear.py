@@ -48,6 +48,7 @@ from repro.core.quantize import quantize as _quantize
 from repro.core.fp8_formats import get_format
 from repro.core.precision_policy import (ACT, ERROR, GRAD, WEIGHT, PAPER_FP8,
                                          QuantConfig, dtype_of)
+from repro.obs.counters import payload_health
 from repro.scaling import context as scale_ctx
 
 Array = jax.Array
@@ -142,10 +143,11 @@ def _fused_epilogue(spec: str, classes: Tuple[str, str],
 
 
 def _fused_gemm(x8: Array, w8: Array, sx: Array, sw: Array, s_out: Array,
-                cfg: QuantConfig, key: Array, out_cls: str,
-                dims: str) -> Tuple[Array, Array]:
+                cfg: QuantConfig, key: Array, out_cls: str, dims: str):
     """One fused output-quantizing GEMM: fp8 operands (2D) in, fp8 output +
-    grid-amax observation out.
+    grid-amax observation out — plus a (2,) [sat_frac, flush_frac] health
+    pair from the kernel's count epilogue under cfg.track_health (None
+    otherwise; counted in VMEM next to the amax, zero extra HBM passes).
 
     Value semantics: out8 = Q_cls((x8.w8 * sx * sw) / s_out), computed as
     Q((x8.w8) / (s_out / (sx*sw))) so the scaling collapses into the
@@ -155,14 +157,18 @@ def _fused_gemm(x8: Array, w8: Array, sx: Array, sw: Array, s_out: Array,
     from repro.kernels.fused_quant_matmul import ops as fq_ops  # lazy
     s_prod = (sx * sw).astype(jnp.float32)
     kscale = s_out.astype(jnp.float32) / s_prod
-    out8, amax_grid = fq_ops.fused_quant_matmul(
+    res = fq_ops.fused_quant_matmul(
         x8, w8, key, kscale, dims=dims,
         out_format=cfg.format_for(out_cls),
         rounding=cfg.rounding_for(out_cls),
         saturate=cfg.saturate_for(out_cls),
-        with_amax=True, amax_units="grid",
+        with_amax=True, with_counts=_track(cfg), amax_units="grid",
         interpret=cfg.backend == "pallas_interpret")
-    return out8, amax_grid * s_out.astype(jnp.float32)
+    if _track(cfg):
+        out8, amax_grid, health = res
+    else:
+        (out8, amax_grid), health = res, None
+    return out8, amax_grid * s_out.astype(jnp.float32), health
 
 
 def _fused_dequant(out8: Array, s_out: Array, cfg: QuantConfig) -> Array:
@@ -207,6 +213,19 @@ def _observe(q: QTensor, cfg: QuantConfig) -> Array:
     return fp8_amax_bits(q.data) * q.scale.astype(jnp.float32)
 
 
+def _track(cfg: QuantConfig) -> bool:
+    """Precision-health counters on? (delayed scaling only — the counters
+    ride the delayed-scaling observation channels)."""
+    return cfg.track_health and cfg.delayed
+
+
+def _health(q: QTensor, cfg: QuantConfig, cls: str) -> Array:
+    """(sat_frac, flush_frac) of a quantized operand, from the same uint8
+    payload read `_observe` performs — XLA fuses the two reductions into
+    one pass over the 1-byte payload."""
+    return payload_health(q.data, cfg.format_for(cls))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
 def _qeinsum(spec: str, classes: Tuple[str, str], cfg: QuantConfig,
              a: Array, b: Array, key: Array, scales: Array,
@@ -237,14 +256,23 @@ def _qeinsum_fwd(spec, classes, cfg, a, b, key, scales, token):
     if fused:
         # Y = Q_A(A.W) with the Q node + amax observation in the epilogue.
         a2 = qa.data.reshape((-1, qa.data.shape[-1]))
-        y8, obs_y = _fused_gemm(a2, qb.data, qa.scale, qb.scale, scales[4],
-                                cfg, k_y, ACT, "nn")
+        y8, obs_y, hy = _fused_gemm(a2, qb.data, qa.scale, qb.scale,
+                                    scales[4], cfg, k_y, ACT, "nn")
         y = _fused_dequant(y8, scales[4], cfg) \
             .reshape(qa.data.shape[:-1] + (qb.data.shape[-1],))
         obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg), obs_y])
+        if _track(cfg):
+            # Health pairs ride behind the amaxes in the fwd_obs vector:
+            # [.., ha(2), hb(2), hy(2)] — operand pairs from the payload
+            # bits, the output pair from the kernel's count epilogue.
+            obs = jnp.concatenate([obs, _health(qa, cfg, classes[0]),
+                                   _health(qb, cfg, classes[1]), hy])
     else:
         y = _compute(spec, qa, qb, cfg)
         obs = jnp.stack([_observe(qa, cfg), _observe(qb, cfg)])
+        if _track(cfg):
+            obs = jnp.concatenate([obs, _health(qa, cfg, classes[0]),
+                                   _health(qb, cfg, classes[1])])
     # Zero-size dtype witnesses so bwd can emit cotangents in primal dtypes.
     return (y, obs), (qa, qb, k_bwd, scales,
                       jnp.zeros((0,), a.dtype), jnp.zeros((0,), b.dtype))
@@ -265,13 +293,20 @@ def _qeinsum_bwd(spec, classes, cfg, res, ct):
     # Weight gradients are stored in FP8 (tensor class G, paper Fig. 1b).
     # Implemented as fake-quant here; the optimizer unscales in FP32.
     obs_g = jnp.float32(0.0)
+    h_g = jnp.zeros((2,), jnp.float32) if _track(cfg) else None
     if classes[0] == WEIGHT:
-        da, og = _fake_quant_grad(da, cfg, k_ga, scale=scales[3])
+        da, og, hg = _fake_quant_grad(da, cfg, k_ga, scale=scales[3])
         obs_g = jnp.maximum(obs_g, og)
+        h_g = jnp.maximum(h_g, hg) if h_g is not None else None
     if classes[1] == WEIGHT:
-        db, og = _fake_quant_grad(db, cfg, k_gb, scale=scales[3])
+        db, og, hg = _fake_quant_grad(db, cfg, k_gb, scale=scales[3])
         obs_g = jnp.maximum(obs_g, og)
-    token_ct = scale_ctx.token_cotangent(e=_observe(qdy, cfg), g=obs_g)
+        h_g = jnp.maximum(h_g, hg) if h_g is not None else None
+    health = scale_ctx.health_pairs(
+        [_health(qdy, cfg, ERROR), h_g, None, None, None]) \
+        if _track(cfg) else None
+    token_ct = scale_ctx.token_cotangent(e=_observe(qdy, cfg), g=obs_g,
+                                         health=health)
     # Cotangents match primal dtypes; the integer PRNG key gets float0 zeros.
     return (da.astype(a_dtype), db.astype(b_dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
@@ -296,32 +331,42 @@ def _qeinsum_bwd_fused(spec, classes, cfg, qa, qb, k_bwd, scales,
     s_da = scales[3] if cls_a == GRAD else scales[5]
     s_db = scales[3] if cls_b == GRAD else scales[5]
     # dA = Q(dY . W^T): (M, N) x (K, N) -> (M, K)
-    da8, obs_da = _fused_gemm(dy2, qb.data, qdy.scale, qb.scale, s_da,
-                              cfg, k_da, cls_a, "nt")
+    da8, obs_da, h_da = _fused_gemm(dy2, qb.data, qdy.scale, qb.scale, s_da,
+                                    cfg, k_da, cls_a, "nt")
     da = _fused_dequant(da8, s_da, cfg).reshape(qa.data.shape)
     # dW = Q(A^T . dY): (M, K) x (M, N) -> (K, N)
-    db8, obs_db = _fused_gemm(a2, dy2, qa.scale, qdy.scale, s_db,
-                              cfg, k_db, cls_b, "tn")
+    db8, obs_db, h_db = _fused_gemm(a2, dy2, qa.scale, qdy.scale, s_db,
+                                    cfg, k_db, cls_b, "tn")
     db = _fused_dequant(db8, s_db, cfg).reshape(qb.data.shape)
     obs_g = jnp.float32(0.0)
     obs_err = jnp.float32(0.0)
+    track = _track(cfg)
+    h_g = jnp.zeros((2,), jnp.float32) if track else None
+    h_err = None
     if cls_a == GRAD:
         obs_g = jnp.maximum(obs_g, obs_da)
+        h_g = jnp.maximum(h_g, h_da) if track else None
     else:
         obs_err = obs_da
+        h_err = h_da
     if cls_b == GRAD:
         obs_g = jnp.maximum(obs_g, obs_db)
+        h_g = jnp.maximum(h_g, h_db) if track else None
     else:
         obs_err = obs_db
+        h_err = h_db
+    health = scale_ctx.health_pairs(
+        [_health(qdy, cfg, ERROR), h_g, h_err, None, None]) \
+        if track else None
     token_ct = scale_ctx.token_cotangent(e=_observe(qdy, cfg), g=obs_g,
-                                         err=obs_err)
+                                         err=obs_err, health=health)
     return (da.astype(a_dtype), db.astype(b_dtype),
             np.zeros(np.shape(k_bwd), dtype=jax.dtypes.float0),
             jnp.zeros((N_SCALES,), jnp.float32), token_ct)
 
 
 def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array,
-                     scale: Optional[Array] = None) -> Tuple[Array, Array]:
+                     scale: Optional[Array] = None):
     fmt = get_format(cfg.format_for(GRAD))
     if cfg.delayed:
         q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
@@ -330,7 +375,8 @@ def _fake_quant_grad(g: Array, cfg: QuantConfig, key: Array,
         q = _quantize(g, fmt, rounding=cfg.rounding_for(GRAD), key=key,
                       use_amax_scale=cfg.amax_for(GRAD),
                       saturate=cfg.saturate_for(GRAD))
-    return _dequantize(q, dtype=g.dtype), _observe(q, cfg)
+    h = _health(q, cfg, GRAD) if _track(cfg) else None
+    return _dequantize(q, dtype=g.dtype), _observe(q, cfg), h
 
 
 _qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
@@ -397,10 +443,17 @@ def qeinsum(spec: str, a: Array, b: Array, *,
         ctx.record(keys["b"], obs[1])
         if fused:
             ctx.record(fkeys["y"], obs[2])
+        if _track(cfg):
+            base = 3 if fused else 2
+            ctx.record_health(keys["a"], obs[base:base + 2])
+            ctx.record_health(keys["b"], obs[base + 2:base + 4])
+            if fused:
+                ctx.record_health(fkeys["y"], obs[base + 4:base + 6])
         return y
     y, _ = _qeinsum(spec, classes, cfg, a, b, key,
                     jnp.ones((N_SCALES,), jnp.float32),
-                    jnp.zeros((scale_ctx.TOKEN_CHANNELS,), jnp.float32))
+                    jnp.zeros((scale_ctx.token_width(_track(cfg)),),
+                              jnp.float32))
     return y
 
 

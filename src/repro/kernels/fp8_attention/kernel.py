@@ -82,7 +82,12 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
               n_heads: int, bq: int, bkv: int, nk: int,
               mask_mode: str, window: int, q_len: int, s_len: int,
               fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
-              saturate_s: bool, saturate_p: bool):
+              saturate_s: bool, saturate_p: bool,
+              hs_ref=None, hp_ref=None):
+    # hs_ref/hp_ref: optional (1, 1, 1, 3) per-q-tile S/P precision-health
+    # count outputs ([saturated, flushed, observed] — repro.obs), bound via
+    # the _fwd_body_counts adapter. Observation-only: the stripe carries
+    # and every quantize are untouched, so counts on/off is bit-identical.
     b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
                    pl.program_id(3))
     j, phase = u % nk, u // nk
@@ -96,6 +101,9 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
         as_ref[...] = jnp.zeros_like(as_ref)
         ap_ref[...] = jnp.zeros_like(ap_ref)
+        if hs_ref is not None:
+            hs_ref[...] = jnp.zeros_like(hs_ref)
+            hp_ref[...] = jnp.zeros_like(hp_ref)
 
     kvmask = None if msk_ref is None else msk_ref[...]
     kw = dict(seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
@@ -105,8 +113,14 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
 
     @pl.when(active & (phase == 0))
     def _pass_m():
-        m, amax_s, _ = _r.fwd_stripe_m(q_ref[0, 0], k_ref[0, 0], kvmask,
-                                       m_scr[...], as_ref[0, 0, 0], **kw)
+        if hs_ref is None:
+            m, amax_s, _ = _r.fwd_stripe_m(q_ref[0, 0], k_ref[0, 0], kvmask,
+                                           m_scr[...], as_ref[0, 0, 0], **kw)
+        else:
+            m, amax_s, _, hs = _r.fwd_stripe_m(
+                q_ref[0, 0], k_ref[0, 0], kvmask, m_scr[...],
+                as_ref[0, 0, 0], health=hs_ref[0, 0, 0], **kw)
+            hs_ref[0, 0, 0] = hs
         m_scr[...] = m
         as_ref[0, 0, 0] = amax_s
 
@@ -119,10 +133,18 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
     def _pass_pv():
         l = l_scr[...]
         d_safe = jnp.where(l > 0, l, 1.0)
-        acc, amax_p, _ = _r.fwd_stripe_pv(
-            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
-            d_safe, acc_scr[...], ap_ref[0, 0, 0], f_p=scal_ref[2],
-            fmt_p=fmt_p, rounding_p=rounding_p, saturate_p=saturate_p, **kw)
+        pkw = dict(f_p=scal_ref[2], fmt_p=fmt_p, rounding_p=rounding_p,
+                   saturate_p=saturate_p)
+        if hp_ref is None:
+            acc, amax_p, _ = _r.fwd_stripe_pv(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
+                d_safe, acc_scr[...], ap_ref[0, 0, 0], **pkw, **kw)
+        else:
+            acc, amax_p, _, hp = _r.fwd_stripe_pv(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
+                d_safe, acc_scr[...], ap_ref[0, 0, 0],
+                health=hp_ref[0, 0, 0], **pkw, **kw)
+            hp_ref[0, 0, 0] = hp
         acc_scr[...] = acc
         ap_ref[0, 0, 0] = amax_p
 
@@ -139,6 +161,7 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                              fmt_s: str, fmt_p: str,
                              rounding_s: str, rounding_p: str,
                              saturate_s: bool, saturate_p: bool,
+                             with_counts: bool = False,
                              interpret: bool = False):
     """q8 (B,H,Qp,Dp), k8/v8 (B,Hkv,Sp,Dp) fp8 payloads (pre-padded: Qp a
     block_q multiple, Sp a block_kv multiple, Dp a LANE multiple); kv_mask
@@ -146,6 +169,13 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
 
     Returns (o (B,H,Qp,Dp) bf16, amax_s (B,H,nq) f32, amax_p (B,H,nq) f32)
     with amaxes in grid units, masked to the attended region.
+
+    with_counts=True (training masks only) additionally returns hs, hp:
+    (B, H, nq, 3) f32 per-q-tile [saturated, flushed, observed] counts of
+    the in-kernel quantized S / P tiles — the repro.obs precision-health
+    counters, accumulated next to the amaxes while the tiles are still in
+    VMEM (S/P never reach HBM, so this is the ONLY place they can be
+    counted). The stripe math is untouched: counts on/off is bit-identical.
     """
     b_, h_, qp, dp = q8.shape
     hkv, sp = k8.shape[1], k8.shape[2]
@@ -167,15 +197,34 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
     ]
     args = [q8, k8, v8]
     if mask_mode == "kv":
+        if with_counts:
+            raise ValueError("with_counts supports the training masks "
+                             "(causal/full), not 'kv'")
         in_specs.append(pl.BlockSpec((1, bkv),
                                      lambda b, h, iq, u: (b, u % nk)))
         args.append(kv_mask)
         body = _fwd_body
+    elif with_counts:
+        body = _fwd_body_counts
     else:
         body = functools.partial(_masked_none_fwd, _fwd_body)
     in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
                  pl.BlockSpec(memory_space=pltpu.SMEM)]
     args += [scal, seed]
+    out_specs = (pl.BlockSpec((1, 1, bq, dp),
+                              lambda b, h, iq, u: (b, h, iq, 0)),
+                 pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
+                 pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)))
+    out_shape = (jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+                 jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32))
+    if with_counts:
+        out_specs += (pl.BlockSpec((1, 1, 1, 3),
+                                   lambda b, h, iq, u: (b, h, iq, 0)),
+                      pl.BlockSpec((1, 1, 1, 3),
+                                   lambda b, h, iq, u: (b, h, iq, 0)))
+        out_shape += (jax.ShapeDtypeStruct((b_, h_, nq, 3), jnp.float32),
+                      jax.ShapeDtypeStruct((b_, h_, nq, 3), jnp.float32))
     return pl.pallas_call(
         functools.partial(body, n_heads=h_, bq=bq, bkv=bkv, nk=nk,
                           mask_mode=mask_mode, window=window,
@@ -184,13 +233,8 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                           saturate_s=saturate_s, saturate_p=saturate_p),
         grid=grid,
         in_specs=in_specs,
-        out_specs=(pl.BlockSpec((1, 1, bq, dp),
-                                lambda b, h, iq, u: (b, h, iq, 0)),
-                   pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
-                   pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq))),
-        out_shape=(jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.bfloat16),
-                   jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
-                   jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32)),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, dp), jnp.float32)],
@@ -208,6 +252,17 @@ def _masked_none_fwd(body, q_ref, k_ref, v_ref, scal_ref, seed_ref,
          o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr, **kw)
 
 
+def _fwd_body_counts(q_ref, k_ref, v_ref, scal_ref, seed_ref,
+                     o_ref, as_ref, ap_ref, hs_ref, hp_ref,
+                     m_scr, l_scr, acc_scr, **kw):
+    """Mask-free forward body with the S/P health-count outputs bound
+    (training masks only — the counts path is never used for serving's
+    'kv' mode)."""
+    _fwd_body(q_ref, k_ref, v_ref, None, scal_ref, seed_ref,
+              o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr,
+              hs_ref=hs_ref, hp_ref=hp_ref, **kw)
+
+
 # ---------------------------------------------------------------------------
 # backward kernel 1: softmax statistics + dQ  (grid streams kv stripes)
 # ---------------------------------------------------------------------------
@@ -219,7 +274,8 @@ def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
                  mask_mode: str, window: int, q_len: int, s_len: int,
                  fmt_s: str, fmt_p: str, fmt_e: str,
                  rounding_s: str, rounding_p: str, rounding_e: str,
-                 saturate_s: bool, saturate_p: bool, saturate_e: bool):
+                 saturate_s: bool, saturate_p: bool, saturate_e: bool,
+                 hdp_ref=None, hds_ref=None):
     b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
                    pl.program_id(3))
     j, phase = u % nk, u // nk
@@ -238,6 +294,9 @@ def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
         dq_scr[...] = jnp.zeros_like(dq_scr)
         adp_ref[...] = jnp.zeros_like(adp_ref)
         ads_ref[...] = jnp.zeros_like(ads_ref)
+        if hdp_ref is not None:
+            hdp_ref[...] = jnp.zeros_like(hdp_ref)
+            hds_ref[...] = jnp.zeros_like(hds_ref)
 
     kw = dict(seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
               col0=j * bkv, scal2=(scal_ref[0], scal_ref[1]),
@@ -263,9 +322,17 @@ def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
     def _pass_rd():
         l = l_scr[...]
         d_safe = jnp.where(l > 0, l, 1.0)
-        rd, amax_dp, _ = _r.bwd_stripe_rd(
-            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
-            m_scr[...], d_safe, rd_scr[...], adp_ref[0, 0, 0], **kw, **bkw)
+        if hdp_ref is not None:
+            rd, amax_dp, _, hdp = _r.bwd_stripe_rd(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+                m_scr[...], d_safe, rd_scr[...], adp_ref[0, 0, 0],
+                health=hdp_ref[0, 0, 0], **kw, **bkw)
+            hdp_ref[0, 0, 0] = hdp
+        else:
+            rd, amax_dp, _ = _r.bwd_stripe_rd(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+                m_scr[...], d_safe, rd_scr[...], adp_ref[0, 0, 0],
+                **kw, **bkw)
         rd_scr[...] = rd
         adp_ref[0, 0, 0] = amax_dp
 
@@ -273,10 +340,18 @@ def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
     def _pass_dq():
         l = l_scr[...]
         d_safe = jnp.where(l > 0, l, 1.0)
-        dq_acc, amax_ds, _ = _r.bwd_stripe_dq(
-            q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
-            m_scr[...], d_safe, rd_scr[...], dq_scr[...],
-            ads_ref[0, 0, 0], f_ds=scal_ref[6], **kw, **bkw)
+        if hds_ref is not None:
+            dq_acc, amax_ds, _, hds = _r.bwd_stripe_dq(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+                m_scr[...], d_safe, rd_scr[...], dq_scr[...],
+                ads_ref[0, 0, 0], f_ds=scal_ref[6],
+                health=hds_ref[0, 0, 0], **kw, **bkw)
+            hds_ref[0, 0, 0] = hds
+        else:
+            dq_acc, amax_ds, _ = _r.bwd_stripe_dq(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0], None,
+                m_scr[...], d_safe, rd_scr[...], dq_scr[...],
+                ads_ref[0, 0, 0], f_ds=scal_ref[6], **kw, **bkw)
         dq_scr[...] = dq_acc
         ads_ref[0, 0, 0] = amax_ds
 
@@ -286,6 +361,20 @@ def _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
         m_ref[0, 0] = m_scr[...]
         l_ref[0, 0] = l_scr[...]
         rd_ref[0, 0] = rd_scr[...]
+
+
+def _bwd_dq_body_counts(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
+                        dq_ref, m_ref, l_ref, rd_ref, adp_ref, ads_ref,
+                        hdp_ref, hds_ref,
+                        m_scr, l_scr, rd_scr, dq_scr, **kw):
+    """Positional-ref adapter: the dP/dS health count outputs land after the
+    amax outputs in pallas_call order; rebind them as keywords. Only the dQ
+    kernel counts dP/dS — the dK/dV kernel replays the same quantized tiles
+    and would double-count."""
+    _bwd_dq_body(q_ref, k_ref, v_ref, do_ref, scal_ref, seed_ref,
+                 dq_ref, m_ref, l_ref, rd_ref, adp_ref, ads_ref,
+                 m_scr, l_scr, rd_scr, dq_scr,
+                 hdp_ref=hdp_ref, hds_ref=hds_ref, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +455,7 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
                              rounding_e: str,
                              saturate_s: bool, saturate_p: bool,
                              saturate_e: bool,
+                             with_counts: bool = False,
                              interpret: bool = False):
     """Backward of the fused attention (training masks only: causal/full).
     Inputs pre-padded (Qp a block_q multiple — block_q a TQ multiple when
@@ -374,7 +464,14 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
     dK/dV) with the per-row (m, l, rd) statistics round-tripped through HBM
     in exact f32. Returns (dq (B,H,Qp,Dp) f32, dk/dv (B,Hkv,Sp,Dp) f32,
     amax_dp (B,H,nq) f32, amax_ds (B,H,nq) f32) with amaxes in grid units
-    per query block (reduce with an exact max)."""
+    per query block (reduce with an exact max).
+
+    with_counts=True additionally returns hdp, hds: (B, H, nq, 3) f32
+    per-q-tile [saturated, flushed, observed] counts of the in-kernel
+    quantized dP / dS tiles, accumulated in the dQ kernel's epilogue (the
+    dK/dV kernel re-quantizes the same tiles and is deliberately excluded
+    so nothing is counted twice). Stripe math is unchanged: counts on/off
+    is bit-identical."""
     b_, h_, qp, dp = q8.shape
     hkv, sp = k8.shape[1], k8.shape[2]
     group = h_ // hkv
@@ -394,8 +491,33 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
         jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
         return (b, h // group, jnp.clip(u % nk, jmin, jmax), 0)
 
-    dq, m, l, rd, amax_dp, amax_ds = pl.pallas_call(
-        functools.partial(_bwd_dq_body, n_heads=h_, bq=bq, bkv=bkv, nk=nk,
+    dq_out_specs = (
+        pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
+    )
+    dq_out_shape = (
+        jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.float32),
+        jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+        jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
+    )
+    dq_body = _bwd_dq_body
+    if with_counts:
+        dq_body = _bwd_dq_body_counts
+        dq_out_specs += (pl.BlockSpec((1, 1, 1, 3),
+                                      lambda b, h, iq, u: (b, h, iq, 0)),
+                         pl.BlockSpec((1, 1, 1, 3),
+                                      lambda b, h, iq, u: (b, h, iq, 0)))
+        dq_out_shape += (jax.ShapeDtypeStruct((b_, h_, nq, 3), jnp.float32),
+                         jax.ShapeDtypeStruct((b_, h_, nq, 3), jnp.float32))
+    dq_outs = pl.pallas_call(
+        functools.partial(dq_body, n_heads=h_, bq=bq, bkv=bkv, nk=nk,
                           **fmt_kw),
         grid=(b_, h_, nq, 4 * nk),
         in_specs=[
@@ -406,22 +528,8 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=(
-            pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq, 1), lambda b, h, iq, u: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
-            pl.BlockSpec((1, 1, 1), lambda b, h, iq, u: (b, h, iq)),
-        ),
-        out_shape=(
-            jax.ShapeDtypeStruct((b_, h_, qp, dp), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_, qp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
-            jax.ShapeDtypeStruct((b_, h_, nq), jnp.float32),
-        ),
+        out_specs=dq_out_specs,
+        out_shape=dq_out_shape,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
@@ -431,6 +539,10 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(q8, k8, v8, do8, scal, seed)
+    if with_counts:
+        dq, m, l, rd, amax_dp, amax_ds, hdp, hds = dq_outs
+    else:
+        dq, m, l, rd, amax_dp, amax_ds = dq_outs
 
     def q_index(b, hkv_, j, t):
         # Shared by the q/do blocks AND the m/l/rd statistics blocks —
@@ -470,4 +582,6 @@ def fp8_attention_bwd_kernel(q8, k8, v8, do8, seed, scal, *,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(q8, do8, k8, v8, m, l, rd, scal, seed)
+    if with_counts:
+        return dq, dk, dv, amax_dp, amax_ds, hdp, hds
     return dq, dk, dv, amax_dp, amax_ds

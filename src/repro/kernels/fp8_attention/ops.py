@@ -26,9 +26,16 @@ from repro.kernels.fp8_attention import kernel as _k
 from repro.kernels.fp8_attention import ref as _r
 
 
+def _health_frac(h):
+    """(B, H, nq, 3) [sat, flush, observed] counts -> (2,) fractions."""
+    tot = jnp.sum(h.reshape(-1, 3), axis=0)
+    return tot[:2] / jnp.maximum(tot[2], 1.0)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p",
-    "rounding_s", "rounding_p", "saturate_s", "saturate_p", "interpret"))
+    "rounding_s", "rounding_p", "saturate_s", "saturate_p", "with_counts",
+    "interpret"))
 def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
                       window: int = 0, kv_mask=None,
                       block_q: int = _k.DEFAULT_BQ,
@@ -36,6 +43,7 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
                       rounding_s: str = "sr", rounding_p: str = "sr",
                       saturate_s: bool = True, saturate_p: bool = True,
+                      with_counts: bool = False,
                       interpret: bool = False):
     """Fused FP8 attention forward on logical fp8 payloads.
 
@@ -51,6 +59,12 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     units), masked to the attended region: bit-identical to
     `fp8_amax_bits` over the masked logical payloads of the unfused
     composition.
+
+    with_counts=True (training masks only) additionally returns
+    (health_s, health_p): (2,) f32 [saturated_fraction, flushed_fraction]
+    of the in-kernel quantized S / P tiles over the attended region — the
+    repro.obs precision-health counters, read in the same VMEM epilogue as
+    the amaxes (S/P never hit HBM). Counts on/off is bit-identical.
     """
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
@@ -62,19 +76,25 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
         mask = _r._pad_to(kv_mask.astype(jnp.int8), 1, bkv)
     seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
     scal = jnp.asarray(scal, jnp.float32).reshape((4,))
-    o, amax_s, amax_p = _k.fp8_attention_fwd_kernel(
+    outs = _k.fp8_attention_fwd_kernel(
         qp, kp, vp, mask, seed, scal, block_q=bq, block_kv=bkv,
         mask_mode=mask_mode,
         window=window, q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p,
         rounding_s=rounding_s, rounding_p=rounding_p,
-        saturate_s=saturate_s, saturate_p=saturate_p, interpret=interpret)
+        saturate_s=saturate_s, saturate_p=saturate_p,
+        with_counts=with_counts, interpret=interpret)
+    if with_counts:
+        o, amax_s, amax_p, hs, hp = outs
+        return (o[:, :, :q_len, :d], jnp.max(amax_s), jnp.max(amax_p),
+                _health_frac(hs), _health_frac(hp))
+    o, amax_s, amax_p = outs
     return o[:, :, :q_len, :d], jnp.max(amax_s), jnp.max(amax_p)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p", "fmt_e",
     "rounding_s", "rounding_p", "rounding_e",
-    "saturate_s", "saturate_p", "saturate_e", "interpret"))
+    "saturate_s", "saturate_p", "saturate_e", "with_counts", "interpret"))
 def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       mask_mode: str = "causal", window: int = 0,
                       block_q: int = _k.DEFAULT_BQ,
@@ -85,13 +105,19 @@ def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       rounding_e: str = "sr",
                       saturate_s: bool = True, saturate_p: bool = True,
                       saturate_e: bool = False,
+                      with_counts: bool = False,
                       interpret: bool = False):
     """Fused FP8 attention backward (training masks: 'causal'/'full').
     do8: the error-quantized output cotangent payload (B,H,Q,D). scal (10,)
     f32 (ref.bwd_q_tile). block_q must be a TQ (128) multiple when larger
     than TQ — dK/dV contraction granularity is pinned to TQ rows, so
     results are invariant to both block knobs. Returns (dq (B,H,Q,D) f32,
-    dk/dv (B,Hkv,S,D) f32, amax_dp, amax_ds) with amaxes in grid units."""
+    dk/dv (B,Hkv,S,D) f32, amax_dp, amax_ds) with amaxes in grid units.
+
+    with_counts=True additionally returns (health_dp, health_ds): (2,) f32
+    [saturated_fraction, flushed_fraction] of the in-kernel quantized
+    dP / dS tiles, counted once in the dQ kernel (the dK/dV kernel replays
+    the same tiles and is excluded). Counts on/off is bit-identical."""
     if mask_mode not in ("causal", "full"):
         raise ValueError(
             f"fused attention backward supports causal/full, not "
@@ -104,12 +130,18 @@ def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
     dop = _r._pad_to(_r._pad_to(do8, 2, bq), 3, _r.LANE)
     seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
     scal = jnp.asarray(scal, jnp.float32).reshape((10,))
-    dq, dk, dv, amax_dp, amax_ds = _k.fp8_attention_bwd_kernel(
+    outs = _k.fp8_attention_bwd_kernel(
         qp, kp, vp, dop, seed, scal, block_q=bq, block_kv=bkv,
         mask_mode=mask_mode, window=window,
         q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p, fmt_e=fmt_e,
         rounding_s=rounding_s, rounding_p=rounding_p, rounding_e=rounding_e,
         saturate_s=saturate_s, saturate_p=saturate_p, saturate_e=saturate_e,
-        interpret=interpret)
+        with_counts=with_counts, interpret=interpret)
+    if with_counts:
+        dq, dk, dv, amax_dp, amax_ds, hdp, hds = outs
+        return (dq[:, :, :q_len, :d], dk[:, :, :s_len, :d],
+                dv[:, :, :s_len, :d], jnp.max(amax_dp), jnp.max(amax_ds),
+                _health_frac(hdp), _health_frac(hds))
+    dq, dk, dv, amax_dp, amax_ds = outs
     return (dq[:, :, :q_len, :d], dk[:, :, :s_len, :d],
             dv[:, :, :s_len, :d], jnp.max(amax_dp), jnp.max(amax_ds))

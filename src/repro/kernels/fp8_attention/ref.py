@@ -201,6 +201,23 @@ def _zeros_like_fp8(x):
     return jnp.zeros_like(x)
 
 
+def _health_counts(q8t, obs, fmt_name: str):
+    """(3,) f32 [saturated, flushed, observed] counts of one quantized tile
+    over its observed region — the precision-health counters (repro.obs)
+    accumulated next to the amax observations, from values already in
+    VMEM/registers. Saturated: |q| at/above the format ceiling, inf/nan
+    included (non-saturating error tensors keep inf). Flushed: |q| below
+    min_normal (exact zeros + subnormals)."""
+    fmt = get_format(fmt_name)
+    qf = q8t.astype(jnp.float32)
+    a = jnp.abs(qf)
+    sat = (a >= jnp.float32(fmt.max_normal)) | ~jnp.isfinite(qf)
+    flush = a < jnp.float32(fmt.min_normal)
+    return jnp.stack([jnp.sum(jnp.where(obs & sat, 1.0, 0.0)),
+                      jnp.sum(jnp.where(obs & flush, 1.0, 0.0)),
+                      jnp.sum(jnp.where(obs, 1.0, 0.0))])
+
+
 def _sblocks(q8, k8s, kvmask_s, *, seed, bh, row0, col0, scal2,
              mask_mode, window, q_len, s_len,
              fmt_s, rounding_s, saturate_s):
@@ -227,17 +244,26 @@ def _sblocks(q8, k8s, kvmask_s, *, seed, bh, row0, col0, scal2,
         yield jj, s8, valid, x, cols, obs
 
 
-def fwd_stripe_m(q8, k8s, kvmask_s, m, amax_s, *, payload=False, **kw):
+def fwd_stripe_m(q8, k8s, kvmask_s, m, amax_s, *, payload=False,
+                 health=None, **kw):
     """Pass 1 over one stripe: exact running row-max carry + the S amax
     observation (masked to the attended region). Returns
-    (m, amax_s, s8_tiles) — tiles only when payload=True (oracle use)."""
+    (m, amax_s, s8_tiles) — tiles only when payload=True (oracle use).
+    With a (3,) `health` accumulator, additionally returns it advanced by
+    this stripe's S precision-health counts (4-tuple; the observation-only
+    extra output never perturbs the carries — counters on/off is
+    bit-identical)."""
     tiles = []
     for jj, s8, valid, x, cols, obs in _sblocks(q8, k8s, kvmask_s, **kw):
         m = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
         amax_s = jnp.maximum(amax_s, jnp.max(
             jnp.where(obs, jnp.abs(s8.astype(jnp.float32)), 0.0)))
+        if health is not None:
+            health = health + _health_counts(s8, obs, kw["fmt_s"])
         if payload:
             tiles.append(jnp.where(valid, s8, _zeros_like_fp8(s8)))
+    if health is not None:
+        return m, amax_s, tiles, health
     return m, amax_s, tiles
 
 
@@ -252,9 +278,10 @@ def fwd_stripe_l(q8, k8s, kvmask_s, m, l, **kw):
 
 def fwd_stripe_pv(q8, k8s, v8s, kvmask_s, m, d_safe, acc, amax_p, *,
                   seed, bh, f_p, fmt_p, rounding_p, saturate_p,
-                  payload=False, **kw):
+                  payload=False, health=None, **kw):
     """Pass 3 over one stripe: quantized probs + P amax + PV accumulation.
-    Returns (acc, amax_p, p8_tiles)."""
+    Returns (acc, amax_p, p8_tiles) — plus the advanced (3,) P health
+    counts when a `health` accumulator is given."""
     tiles = []
     bq = q8.shape[0]
     rows = kw["row0"] + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
@@ -267,10 +294,14 @@ def fwd_stripe_pv(q8, k8s, v8s, kvmask_s, m, d_safe, acc, amax_p, *,
         p8 = _quant_tile(p * f_p, bits, fmt_p, rounding_p, saturate_p)
         amax_p = jnp.maximum(amax_p, jnp.max(
             jnp.where(obs, jnp.abs(p8.astype(jnp.float32)), 0.0)))
+        if health is not None:
+            health = health + _health_counts(p8, obs, fmt_p)
         acc = acc + _dot_f32(p8, v8s[jj * LANE:(jj + 1) * LANE],
                              ((1,), (0,)))
         if payload:
             tiles.append(jnp.where(valid, p8, _zeros_like_fp8(p8)))
+    if health is not None:
+        return acc, amax_p, tiles, health
     return acc, amax_p, tiles
 
 
@@ -299,18 +330,23 @@ def _pdp_blocks(q8, k8s, v8s, do8, kvmask_s, m, d_safe, *, seed, bh,
 
 
 def bwd_stripe_rd(q8, k8s, v8s, do8, kvmask_s, m, d_safe, rd, amax_dp, *,
-                  payload=False, **kw):
+                  payload=False, health=None, **kw):
     """Backward pass A over one stripe: the softmax-VJP row reduction
     rowsum(P * dP) carry + the dP observation. Returns
-    (rd, amax_dp, dp8_tiles)."""
+    (rd, amax_dp, dp8_tiles) — plus the advanced (3,) dP health counts
+    when a `health` accumulator is given."""
     tiles = []
     for jj, p8, p_d, dp8, dp_d, cols, obs, valid in _pdp_blocks(
             q8, k8s, v8s, do8, kvmask_s, m, d_safe, **kw):
         rd = rd + jnp.sum(p_d * dp_d, axis=-1, keepdims=True)
         amax_dp = jnp.maximum(amax_dp, jnp.max(
             jnp.where(obs, jnp.abs(dp8.astype(jnp.float32)), 0.0)))
+        if health is not None:
+            health = health + _health_counts(dp8, obs, kw["fmt_e"])
         if payload:
             tiles.append(jnp.where(valid, dp8, _zeros_like_fp8(dp8)))
+    if health is not None:
+        return rd, amax_dp, tiles, health
     return rd, amax_dp, tiles
 
 
@@ -323,10 +359,12 @@ def _ds_block(p_d, dp_d, rd, rows, cols, *, seed, bh, f_ds, fmt_e,
 
 
 def bwd_stripe_dq(q8, k8s, v8s, do8, kvmask_s, m, d_safe, rd,
-                  dq_acc, amax_ds, *, f_ds, payload=False, **kw):
+                  dq_acc, amax_ds, *, f_ds, payload=False, health=None,
+                  **kw):
     """Backward pass B (query side) over one stripe: dS quantization, the
     dQ accumulation, and the dS observation. Returns
-    (dq_acc, amax_ds, ds8_tiles)."""
+    (dq_acc, amax_ds, ds8_tiles) — plus the advanced (3,) dS health counts
+    when a `health` accumulator is given."""
     bq = q8.shape[0]
     rows = kw["row0"] + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
     tiles = []
@@ -338,10 +376,14 @@ def bwd_stripe_dq(q8, k8s, v8s, do8, kvmask_s, m, d_safe, rd,
                         saturate_e=kw["saturate_e"])
         amax_ds = jnp.maximum(amax_ds, jnp.max(
             jnp.where(obs, jnp.abs(ds8.astype(jnp.float32)), 0.0)))
+        if health is not None:
+            health = health + _health_counts(ds8, obs, kw["fmt_e"])
         dq_acc = dq_acc + _dot_f32(ds8, k8s[jj * LANE:(jj + 1) * LANE],
                                    ((1,), (0,)))
         if payload:
             tiles.append(jnp.where(valid, ds8, _zeros_like_fp8(ds8)))
+    if health is not None:
+        return dq_acc, amax_ds, tiles, health
     return dq_acc, amax_ds, tiles
 
 

@@ -137,6 +137,46 @@ def _body_amax(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref, acc_ref, *,
         amax_ref[0, 0] = jnp.max(mag)
 
 
+def _body_amax_counts(a_ref, b_ref, rand_ref, scale_ref, o_ref, amax_ref,
+                      sat_ref, flush_ref, acc_ref, *,
+                      dims: str, fmt_name: str, rounding: str, saturate: bool,
+                      n_k: int, m: int, n: int):
+    """_body_amax plus per-tile precision-health counts (repro.obs): how many
+    quantized values landed at/above the format ceiling (saturated — inf/nan
+    from non-saturating error outputs included) and how many below min_normal
+    (flushed: exact zeros + subnormals). Counted from the fp8 tile while it
+    is STILL IN VMEM, in the same epilogue as the amax — the counters cost no
+    extra pass over HBM — and masked to the logical (m, n) region like the
+    amax. The quantize computation is untouched: counts on/off is
+    bit-identical output (the repro.obs parity law)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _tile_dot(a_ref[...], b_ref[...], dims)
+
+    bm, bn = acc_ref.shape
+    mask = _amax_mask(bm, bn, m, n)
+    fmt = get_format(fmt_name)
+    hi = jnp.float32(fmt.max_normal)
+    lo = jnp.float32(fmt.min_normal)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        inv = 1.0 / scale_ref[0]
+        q = _quantize_tile(acc_ref[...], rand_ref[...], inv,
+                           fmt_name=fmt_name, rounding=rounding,
+                           saturate=saturate)
+        o_ref[...] = q
+        qf = q.astype(jnp.float32)
+        mag = jnp.where(mask, jnp.abs(qf), 0.0)
+        amax_ref[0, 0] = jnp.max(mag)
+        sat = (jnp.abs(qf) >= hi) | ~jnp.isfinite(qf)
+        flush = jnp.abs(qf) < lo
+        sat_ref[0, 0] = jnp.sum(jnp.where(mask & sat, 1.0, 0.0))
+        flush_ref[0, 0] = jnp.sum(jnp.where(mask & flush, 1.0, 0.0))
+
+
 def _block_specs(dims: str, bm: int, bk: int, bn: int):
     if dims == "nn":
         return [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -169,6 +209,7 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
                               out_format: str = "e5m2",
                               rounding: str = "sr", saturate: bool = True,
                               with_amax: bool = False,
+                              with_counts: bool = False,
                               logical_mn=None,
                               interpret: bool = False):
     """fp8 GEMM (layout per `dims`, see module docstring) with the Q node in
@@ -178,7 +219,12 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
     with_amax=True additionally returns a (grid_m, grid_n) f32 array of
     per-tile observed amaxes in grid units (reduce with jnp.max for the
     scalar; multiply by the dequantization scale for real units), masked to
-    `logical_mn` (defaults to the padded (M, N))."""
+    `logical_mn` (defaults to the padded (M, N)).
+
+    with_counts=True (requires with_amax) further returns two (grid_m,
+    grid_n) f32 arrays of per-tile saturated / flushed value counts
+    (precision-health counters, see repro.obs.counters) — reduce with
+    jnp.sum and divide by the logical element count for fractions."""
     m, n, k = gemm_shape(a.shape, b.shape, dims)
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     lm, ln = logical_mn if logical_mn is not None else (m, n)
@@ -196,6 +242,8 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )
     out_dtype = get_format(out_format).dtype
+    if with_counts and not with_amax:
+        raise ValueError("with_counts requires with_amax")
     if not with_amax:
         return pl.pallas_call(
             functools.partial(_body, dims=dims, fmt_name=out_format,
@@ -205,13 +253,27 @@ def fused_quant_matmul_kernel(a, b, rand8, scale, *,
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
             **common,
         )(a, b, rand8, scale)
+    if not with_counts:
+        return pl.pallas_call(
+            functools.partial(_body_amax, dims=dims, fmt_name=out_format,
+                              rounding=rounding, saturate=saturate,
+                              n_k=grid[2], m=lm, n=ln),
+            out_specs=(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+                       pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))),
+            out_shape=(jax.ShapeDtypeStruct((m, n), out_dtype),
+                       jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32)),
+            **common,
+        )(a, b, rand8, scale)
+    tile_f32 = jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32)
     return pl.pallas_call(
-        functools.partial(_body_amax, dims=dims, fmt_name=out_format,
+        functools.partial(_body_amax_counts, dims=dims, fmt_name=out_format,
                           rounding=rounding, saturate=saturate,
                           n_k=grid[2], m=lm, n=ln),
         out_specs=(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
                    pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))),
         out_shape=(jax.ShapeDtypeStruct((m, n), out_dtype),
-                   jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32)),
+                   tile_f32, tile_f32, tile_f32),
         **common,
     )(a, b, rand8, scale)

@@ -20,6 +20,7 @@ def _pad_to(x, mult0, mult1):
 @functools.partial(jax.jit, static_argnames=("dims", "bm", "bk", "bn",
                                              "out_format", "rounding",
                                              "saturate", "with_amax",
+                                             "with_counts",
                                              "amax_units", "interpret"))
 def fused_quant_matmul(a, b, key, scale=None, *,
                        dims: str = "nn",
@@ -27,6 +28,7 @@ def fused_quant_matmul(a, b, key, scale=None, *,
                        out_format: str = "e5m2",
                        rounding: str = "sr", saturate: bool = True,
                        with_amax: bool = False,
+                       with_counts: bool = False,
                        amax_units: str = "real",
                        interpret: bool = False):
     """Q((a . b) / scale) -> fp8 in `out_format` ('e5m2' | 'e4m3'), with the
@@ -45,6 +47,12 @@ def fused_quant_matmul(a, b, key, scale=None, *,
     SR random bits are drawn over the *logical* (m, n) output and zero-padded
     alongside the operands, and the amax epilogue masks the padded region, so
     results are invariant to the (bm, bk, bn) tiling choice.
+
+    with_counts=True (requires with_amax) returns (out, amax, health) where
+    health is a (2,) f32 [saturated_fraction, flushed_fraction] of the
+    logical output — the repro.obs precision-health counters, taken from the
+    quantized tile in the same VMEM epilogue as the amax (no extra HBM
+    pass). The quantize math is identical with counts on or off.
     """
     m, n, c = _k.gemm_shape(a.shape, b.shape, dims)
     if scale is None:
@@ -69,14 +77,23 @@ def fused_quant_matmul(a, b, key, scale=None, *,
                                        out_format=out_format,
                                        rounding=rounding, saturate=saturate,
                                        with_amax=with_amax,
+                                       with_counts=with_counts,
                                        logical_mn=(m, n),
                                        interpret=interpret)
     if with_amax:
-        out, tile_amax = out
+        health = None
+        if with_counts:
+            out, tile_amax, tile_sat, tile_flush = out
+            health = jnp.stack([jnp.sum(tile_sat), jnp.sum(tile_flush)]) \
+                / jnp.float32(m * n)
+        else:
+            out, tile_amax = out
         amax = jnp.max(tile_amax)
         if amax_units == "real":
             amax = amax * scale[0]
         elif amax_units != "grid":
             raise ValueError(f"unknown amax_units {amax_units!r}")
+        if with_counts:
+            return out[:m, :n], amax, health
         return out[:m, :n], amax
     return out[:m, :n]

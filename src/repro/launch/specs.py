@@ -233,6 +233,11 @@ def build_cell(arch: str, shape: str, mesh, *,
         meta["scaling"] = cfg.policy.quant.scaling
         meta["fuse_epilogue"] = cfg.policy.quant.fuse_epilogue
         meta["fuse_attention"] = cfg.policy.quant.fuse_attention
+        # Precision-health counters (obs subsystem): recorded so dry-run
+        # artifacts document whether the cell's step carries the per-site
+        # saturation/flush observations (overridable per cell via
+        # {'policy.quant.track_health': True}).
+        meta["track_health"] = cfg.policy.quant.track_health
         if cfg.policy.quant.fuse_attention:
             # Streamed-KV knobs (results are bit-invariant to them; they
             # set the kernel's VMEM working set per grid step).

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core.precision_policy import QuantConfig
 from repro.distributed.sharding import constrain
 from repro.scaling import context as scale_ctx
-from repro.scaling.context import AMAX_PREFIX
+from repro.scaling.context import AMAX_PREFIX, HEALTH_PREFIX
 from repro.models.attention import attention, init_attention
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_norm, embed, init_embedding, init_mlp,
@@ -86,12 +86,13 @@ def init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 
 def _merge_aux(dst: Dict[str, Array], src: Dict[str, Array]):
-    """Accumulate aux entries: amax observations combine by max (they are
-    range statistics), everything else (aux losses) by sum."""
+    """Accumulate aux entries: amax observations and health fractions
+    combine by max (range/worst-case statistics — remat replay then cannot
+    double-count), everything else (aux losses) by sum."""
     for k, v in src.items():
         if k in dst:
-            dst[k] = jnp.maximum(dst[k], v) if k.startswith(AMAX_PREFIX) \
-                else dst[k] + v
+            dst[k] = jnp.maximum(dst[k], v) \
+                if k.startswith((AMAX_PREFIX, HEALTH_PREFIX)) else dst[k] + v
         else:
             dst[k] = v
     return dst
@@ -347,6 +348,12 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 # Per-layer threaded sites keep their (n_groups,) amax
                 # trajectory; legacy shared sites reduce by max as before.
                 red = v if k[len(AMAX_PREFIX):] in thread_scales else v.max()
+            elif k.startswith(HEALTH_PREFIX):
+                # Health (sat, flush) pairs: keep the per-layer trajectory
+                # for threaded sites (n_groups, 2), worst-case max over the
+                # group otherwise — always preserving the trailing pair dim.
+                red = v if k[len(HEALTH_PREFIX):] in thread_scales \
+                    else v.max(axis=0)
             else:
                 red = v.sum()   # aux losses sum over the group
             add_aux({k: red})
@@ -525,8 +532,9 @@ def lm_loss(params, batch: Dict[str, Array], *, cfg: ModelConfig, qkey=None,
     aux = _merge_aux(aux, enc_aux)
     aux = _merge_aux(aux, scale_ctx.drain_aux())   # head + any stragglers
     for k, v in aux.items():
-        if not k.startswith(AMAX_PREFIX):   # amax entries are observations,
-            loss = loss + v                 # not aux losses
+        if not k.startswith((AMAX_PREFIX, HEALTH_PREFIX)):
+            loss = loss + v   # amax/health entries are observations,
+    #                           not aux losses
     metrics = {"nll": nll_sum / denom, **aux}
     if loss_scale is not None:
         loss = loss * loss_scale.astype(loss.dtype)

@@ -1,0 +1,111 @@
+"""Typed metrics pipeline: versioned-schema jsonl sink + rolling windows.
+
+MetricsLogger replaces TrainLoop's inline `json.dumps`:
+
+ * scalar/vector-aware serialization — python/np/jax scalars become floats,
+   per-layer vectors (scanned-stack amax/health trajectories) become lists;
+   nothing raises on a vector metric (the old `float(np.asarray(v))` bug).
+ * versioned schema — every record carries `"v": SCHEMA_VERSION`; the field
+   reference lives in docs/metrics_schema.md. A sidecar `<path>.meta.json`
+   records the schema version plus run metadata (site registry order,
+   recipe, …) WITHOUT polluting the one-record-per-step jsonl stream.
+ * rolling-window aggregation — bounded deques per scalar key for
+   percentile / mean queries (healthdash, straggler baselines) with no
+   unbounded memory growth.
+
+The logger is a context manager; `close()` is idempotent and flush happens
+on every write (preemption may kill the process at any step).
+"""
+from __future__ import annotations
+
+import collections
+import json
+import math
+from pathlib import Path
+from typing import Any, Dict, Iterable, Optional
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+
+def jsonable(v: Any) -> Any:
+    """Scalar/vector-aware: scalars -> float/int, arrays -> (nested) lists."""
+    if isinstance(v, (bool, int, str)) or v is None:
+        return v
+    if isinstance(v, float):
+        return v if math.isfinite(v) else repr(v)
+    if isinstance(v, (list, tuple)):
+        return [jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {k: jsonable(x) for k, x in v.items()}
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        if np.issubdtype(arr.dtype, np.integer):
+            return int(arr)
+        if np.issubdtype(arr.dtype, np.bool_):
+            return bool(arr)
+        return jsonable(float(arr))
+    return [jsonable(x) for x in arr.astype(np.float64).tolist()]
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, *,
+                 meta: Optional[Dict[str, Any]] = None,
+                 window: int = 64):
+        self.path = path
+        self.window = window
+        self._f = None
+        self._windows: Dict[str, collections.deque] = {}
+        self.n_records = 0
+        if path:
+            Path(path).parent.mkdir(parents=True, exist_ok=True)
+            self._f = open(path, "a")
+            meta_rec = {"schema_version": SCHEMA_VERSION,
+                        **jsonable(meta or {})}
+            Path(str(path) + ".meta.json").write_text(json.dumps(meta_rec))
+
+    # -- sink -----------------------------------------------------------------
+    def log(self, record: Dict[str, Any]) -> Dict[str, Any]:
+        """Serialize + write one jsonl record; returns the serialized dict."""
+        rec = {"v": SCHEMA_VERSION}
+        rec.update({k: jsonable(v) for k, v in record.items()})
+        for k, v in rec.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                self._windows.setdefault(
+                    k, collections.deque(maxlen=self.window)).append(float(v))
+        self.n_records += 1
+        if self._f:
+            self._f.write(json.dumps(rec) + "\n")
+            self._f.flush()
+        return rec
+
+    # -- rolling windows ------------------------------------------------------
+    def values(self, key: str) -> Iterable[float]:
+        return tuple(self._windows.get(key, ()))
+
+    def mean(self, key: str) -> Optional[float]:
+        w = self._windows.get(key)
+        return float(np.mean(w)) if w else None
+
+    def percentile(self, key: str, q: float) -> Optional[float]:
+        w = self._windows.get(key)
+        return float(np.percentile(np.asarray(w), q)) if w else None
+
+    # -- lifecycle ------------------------------------------------------------
+    def flush(self):
+        if self._f:
+            self._f.flush()
+
+    def close(self):
+        if self._f:
+            self._f.flush()
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -72,6 +72,14 @@ import numpy as np
 _CLASS_LETTER = {"weight": "W", "act": "A", "error": "E", "grad": "G"}
 
 AMAX_PREFIX = "amax/"
+# Forward precision-health observations (repro.obs counters) ride the same
+# aux channel as amaxes under their own prefix: values are (2,) f32
+# [sat_frac, flush_frac] per site (or (n_layers, 2) for scanned stacks).
+HEALTH_PREFIX = "health/"
+# Internal marker inside ScaleContext.collected separating health entries
+# from amax entries, so drain_raw()/re_record() round-trip both through
+# remat/chunk boundaries unchanged. Site keys never contain '!'.
+_HEALTH_MARK = "health!"
 
 # Channels of a site's backward-observation token cotangent:
 #   [amax_E (quantized dY / dO), amax_G (FP8-stored weight grad),
@@ -80,13 +88,39 @@ AMAX_PREFIX = "amax/"
 #    amax of the fused-attention dP intermediate ("#dp.E"),
 #    amax of the fused-attention dS intermediate ("#ds.E")].
 TOKEN_CHANNELS = 5
+# With QuantConfig.track_health the token widens by a (sat_frac, flush_frac)
+# pair per amax channel: channels 5+2c / 6+2c carry the health pair of amax
+# channel c. The pairs are fractions, so the same sum-over-uses/divide-by-
+# use-count reduction that recovers the mean amax recovers mean fractions.
+HEALTH_TOKEN_CHANNELS = 2 * TOKEN_CHANNELS
 
 
-def token_cotangent(e=0.0, g=0.0, err=0.0, dp=0.0, ds=0.0):
-    """Assemble a (TOKEN_CHANNELS,) backward-observation cotangent; qeinsum
-    fills the first three channels, fused attention e/dp/ds."""
-    return jnp.stack([jnp.asarray(v, jnp.float32)
+def token_width(track_health: bool) -> int:
+    return TOKEN_CHANNELS + (HEALTH_TOKEN_CHANNELS if track_health else 0)
+
+
+def token_cotangent(e=0.0, g=0.0, err=0.0, dp=0.0, ds=0.0, health=None):
+    """Assemble a backward-observation cotangent; qeinsum fills the first
+    three channels, fused attention e/dp/ds. `health` (iff
+    QuantConfig.track_health): (HEALTH_TOKEN_CHANNELS,) of [sat, flush]
+    pairs, one per amax channel, appended as channels 5..14."""
+    base = jnp.stack([jnp.asarray(v, jnp.float32)
                       for v in (e, g, err, dp, ds)])
+    if health is None:
+        return base
+    return jnp.concatenate(
+        [base, jnp.asarray(health, jnp.float32).reshape((-1,))])
+
+
+def health_pairs(pairs) -> jnp.ndarray:
+    """Pack per-channel [sat_frac, flush_frac] pairs (None => zeros) into
+    the (HEALTH_TOKEN_CHANNELS,) tail of a token cotangent. `pairs` lists
+    one entry per amax channel, in channel order."""
+    out = []
+    for p in pairs:
+        out.append(jnp.zeros((2,), jnp.float32) if p is None
+                   else jnp.asarray(p, jnp.float32))
+    return jnp.concatenate(out)
 
 
 @dataclasses.dataclass
@@ -123,6 +157,10 @@ class ScaleContext:
         default_factory=list)
     _layer_tokens: List[Mapping[str, Any]] = dataclasses.field(
         default_factory=list)
+    # Width of the backward-observation tokens this trace runs with
+    # (TOKEN_CHANNELS, or +HEALTH_TOKEN_CHANNELS under track_health); the
+    # token_for fallback must match the cotangent width the call sites emit.
+    token_channels: int = TOKEN_CHANNELS
 
     # -- scoping -------------------------------------------------------------
     def site_key(self, site: str) -> str:
@@ -197,22 +235,44 @@ class ScaleContext:
                 return t
         t = self.tokens.get(site_key)
         if t is None:
-            return jnp.zeros((TOKEN_CHANNELS,), jnp.float32)
+            return jnp.zeros((self.token_channels,), jnp.float32)
         return t
 
     # -- forward observation -------------------------------------------------
     def record(self, key: str, amax):
+        if key.startswith(_HEALTH_MARK):
+            # re_record() replaying a drain_raw() dict: route health entries
+            # back to their own channel (no registry side effects).
+            self.record_health(key[len(_HEALTH_MARK):], amax)
+            return
         self.register(key)
         if self.mode in ("collect", "calibrate"):
             prev = self.collected.get(key)
             self.collected[key] = amax if prev is None \
                 else jnp.maximum(prev, amax)
 
+    def record_health(self, key: str, frac2):
+        """Record a (2,) [sat_frac, flush_frac] forward health observation
+        for `key` (a site already registered by its amax record). Multiple
+        uses max-combine — remat replay then cannot double-count, and a
+        high fraction in ANY use is the signal of interest."""
+        if self.mode in ("collect", "calibrate"):
+            k = _HEALTH_MARK + key
+            prev = self.collected.get(k)
+            self.collected[k] = frac2 if prev is None \
+                else jnp.maximum(prev, frac2)
+
     def drain_aux(self) -> Dict[str, Any]:
-        """Pull collected amaxes as aux entries. Must be called inside the
-        same scan body that recorded them (apply_layer does this) so the
-        traced values exit the scan functionally via the aux ys."""
-        out = {AMAX_PREFIX + k: v for k, v in self.collected.items()}
+        """Pull collected amaxes (and health pairs) as aux entries. Must be
+        called inside the same scan body that recorded them (apply_layer
+        does this) so the traced values exit the scan functionally via the
+        aux ys."""
+        out = {}
+        for k, v in self.collected.items():
+            if k.startswith(_HEALTH_MARK):
+                out[HEALTH_PREFIX + k[len(_HEALTH_MARK):]] = v
+            else:
+                out[AMAX_PREFIX + k] = v
         self.collected.clear()
         return out
 
@@ -341,12 +401,16 @@ def discover_context() -> ScaleContext:
 
 
 def collect_context(scales: Mapping[str, Any],
-                    tokens: Mapping[str, Any]) -> ScaleContext:
-    return ScaleContext(mode="collect", scales=scales, tokens=tokens)
+                    tokens: Mapping[str, Any], *,
+                    token_channels: int = TOKEN_CHANNELS) -> ScaleContext:
+    return ScaleContext(mode="collect", scales=scales, tokens=tokens,
+                        token_channels=token_channels)
 
 
-def calibrate_context(scales: Mapping[str, Any]) -> ScaleContext:
-    return ScaleContext(mode="calibrate", scales=scales, tokens={})
+def calibrate_context(scales: Mapping[str, Any],
+                      token_channels: int = TOKEN_CHANNELS) -> ScaleContext:
+    return ScaleContext(mode="calibrate", scales=scales, tokens={},
+                        token_channels=token_channels)
 
 
 def frozen_context(scales: Mapping[str, Any]) -> ScaleContext:

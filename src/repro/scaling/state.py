@@ -192,8 +192,11 @@ class DelayedScaling:
         input of the loss, the token 'gradients' come back as observed bwd
         amaxes. Per-layer (scanned-stack) sites get a stacked
         (n_layers, TOKEN_CHANNELS) token whose rows are threaded through
-        scan xs — their cotangents come back one row per layer."""
-        c = scale_ctx.TOKEN_CHANNELS
+        scan xs — their cotangents come back one row per layer.
+
+        Under qcfg.track_health the tokens widen to carry a (sat, flush)
+        health pair per amax channel (scale_ctx.token_width)."""
+        c = scale_ctx.token_width(self.qcfg.track_health)
         return {s: jnp.zeros((n, c) if n > 1 else (c,), jnp.float32)
                 for s, n in self.registry.token_site_layers.items()}
 
@@ -204,13 +207,16 @@ class DelayedScaling:
 
     # -- contexts ------------------------------------------------------------
     def collect(self, state: ScaleState, tokens: Mapping[str, Array]):
-        ctx = scale_ctx.collect_context(self.scales_dict(state), tokens)
+        ctx = scale_ctx.collect_context(
+            self.scales_dict(state), tokens,
+            token_channels=scale_ctx.token_width(self.qcfg.track_health))
         ctx.use_sink = self.registry.token_uses
         return scale_ctx.activate(ctx)
 
     def calibrate_ctx(self, state: ScaleState):
-        return scale_ctx.activate(
-            scale_ctx.calibrate_context(self.scales_dict(state)))
+        return scale_ctx.activate(scale_ctx.calibrate_context(
+            self.scales_dict(state),
+            token_channels=scale_ctx.token_width(self.qcfg.track_health)))
 
     # -- update --------------------------------------------------------------
     def update(self, state: ScaleState, observed: Mapping[str, Array], *,
@@ -319,10 +325,23 @@ def split_observations(metrics: Dict[str, Array],
     which the saturation-growth guard in DelayedScaling.update then probes
     back up — whereas an uncorrected sum would overstate scales with no
     mechanism pulling them back down.
+
+    Tokens wider than TOKEN_CHANNELS (QuantConfig.track_health) carry a
+    (sat, flush) health pair per amax channel in their tail; the pairs are
+    routed into `metrics` under scale_ctx.HEALTH_PREFIX (telemetry only —
+    they never enter ScaleState), use-count-averaged like the amaxes.
     """
     observed: Dict[str, Array] = {}
     for k in [k for k in metrics if k.startswith(scale_ctx.AMAX_PREFIX)]:
         observed[k[len(scale_ctx.AMAX_PREFIX):]] = metrics.pop(k)
+
+    def health(tok, site_key, channel, inv):
+        if tok.shape[-1] <= scale_ctx.TOKEN_CHANNELS:
+            return
+        c0 = scale_ctx.TOKEN_CHANNELS + 2 * channel
+        metrics[scale_ctx.HEALTH_PREFIX + site_key] = \
+            tok[..., c0:c0 + 2] * inv
+
     for site, tok in token_grads.items():
         inv = 1.0 / max(1, registry.token_uses.get(site, 1))
         ek, gk = f"{site}#E", f"{site}#G"
@@ -332,8 +351,10 @@ def split_observations(metrics: Dict[str, Array],
         # (n_layers,) vector.
         if ek in registry.index:
             observed[ek] = tok[..., 0] * inv
+            health(tok, ek, 0, inv)
         if gk in registry.index:
             observed[gk] = tok[..., 1] * inv
+            health(tok, gk, 1, inv)
         if tok.shape[-1] > 2:
             # Fused-epilogue sites: channel 2 is the error-class dgrad
             # output observation ("#da.E" / "#db.E" by which operand the
@@ -341,10 +362,12 @@ def split_observations(metrics: Dict[str, Array],
             for dk in (f"{site}#da.E", f"{site}#db.E"):
                 if dk in registry.index:
                     observed[dk] = tok[..., 2] * inv
+                    health(tok, dk, 2, inv)
         if tok.shape[-1] > 4:
             # Fused-attention sites: channels 3/4 carry the in-kernel dP/dS
             # intermediate observations.
             for c, dk in ((3, f"{site}#dp.E"), (4, f"{site}#ds.E")):
                 if dk in registry.index:
                     observed[dk] = tok[..., c] * inv
+                    health(tok, dk, c, inv)
     return observed

@@ -9,11 +9,20 @@ Slot model: `max_batch` concurrent sequences. add_request() fills a free
 slot (prefilling its cache region); step() decodes one token for every
 active slot; finished sequences (EOS or max_len) free their slot. The jitted
 decode step is shape-stable — request churn never recompiles.
+
+Observability: prefill and decode run inside `obs.trace.Tracer` spans
+(perfetto-exportable via `engine.tracer`), per-request prefill/decode
+latencies and KV-slot occupancy accumulate into rolling windows, and
+`stats()` snapshots the serving counters (latency percentiles, decode
+tokens/s, occupancy) in the same jsonable shape the metrics pipeline and
+`repro.tools.healthdash` consume.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +30,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_stack_state
+from repro.obs.trace import Tracer
 from repro.train.step import make_serve_decode, make_serve_prefill
 
 Array = jax.Array
@@ -42,6 +52,11 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- per-request telemetry (wall-clock, host side) -----------------------
+    t_added: float = 0.0      # time.perf_counter() at add_request entry
+    prefill_s: float = 0.0    # prefill latency (includes slot merge + sample)
+    decode_s: float = 0.0     # summed decode-step share while active
+    t_finished: float = 0.0   # perf_counter when the slot freed
 
 
 class ServeEngine:
@@ -74,6 +89,18 @@ class ServeEngine:
         self.positions = np.zeros((b,), np.int64)
         self.last_token = np.zeros((b,), np.int32)
         self._uid = 0
+        # -- serving counters (host wall-clock; window bounds memory) --------
+        self.tracer = Tracer()
+        win = 512
+        self._prefill_lat = collections.deque(maxlen=win)
+        self._decode_lat = collections.deque(maxlen=win)
+        self._req_lat = collections.deque(maxlen=win)
+        self._occupancy = collections.deque(maxlen=win)
+        self._n_requests = 0
+        self._n_finished = 0
+        self._prefill_tokens = 0
+        self._decode_tokens = 0
+        self._decode_time_s = 0.0
 
     def _check_formats(self, frozen_formats: Dict[str, str]):
         from repro.scaling.state import format_for_site
@@ -103,7 +130,7 @@ class ServeEngine:
         slot = free[0]
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens)
+                      max_new_tokens, t_added=time.perf_counter())
         self.slots[slot] = req
         # Prefill this slot: run a batch-1-style prefill into the slot's
         # cache rows (the whole batch is passed; only this slot's rows are
@@ -111,13 +138,18 @@ class ServeEngine:
         s = req.prompt.shape[0]
         tokens = np.zeros((len(self.slots), s), np.int32)
         tokens[slot] = req.prompt
-        logits, new_states = self._prefill(
-            self.params, {"tokens": jnp.asarray(tokens)},
-            self.states)
-        # Merge: take the new cache rows for this slot only.
-        self.states = _merge_slot(self.states, new_states, slot)
-        self.positions[slot] = s
-        nxt = self._sample(np.asarray(logits)[slot, -1])
+        with self.tracer.span("prefill", uid=req.uid, tokens=s):
+            logits, new_states = self._prefill(
+                self.params, {"tokens": jnp.asarray(tokens)},
+                self.states)
+            # Merge: take the new cache rows for this slot only.
+            self.states = _merge_slot(self.states, new_states, slot)
+            self.positions[slot] = s
+            nxt = self._sample(np.asarray(logits)[slot, -1])
+        req.prefill_s = time.perf_counter() - req.t_added
+        self._prefill_lat.append(req.prefill_s)
+        self._n_requests += 1
+        self._prefill_tokens += s
         self.last_token[slot] = nxt
         req.generated.append(int(nxt))
         return req.uid
@@ -128,15 +160,23 @@ class ServeEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return {}
+        t0 = time.perf_counter()
+        self._occupancy.append(len(active) / len(self.slots))
         tokens = jnp.asarray(self.last_token[:, None])
         positions = jnp.asarray(self.positions[:, None].astype(np.int32))
-        logits, self.states = self._decode(
-            self.params, {"tokens": tokens, "positions": positions},
-            self.states)
-        logits = np.asarray(logits)[:, 0]
+        with self.tracer.span("decode", active=len(active)):
+            logits, self.states = self._decode(
+                self.params, {"tokens": tokens, "positions": positions},
+                self.states)
+            logits = np.asarray(logits)[:, 0]
+        dt = time.perf_counter() - t0
+        self._decode_lat.append(dt)
+        self._decode_time_s += dt
+        self._decode_tokens += len(active)
         finished: Dict[int, List[int]] = {}
         for i in active:
             req = self.slots[i]
+            req.decode_s += dt
             nxt = self._sample(logits[i])
             req.generated.append(int(nxt))
             self.positions[i] += 1
@@ -144,6 +184,10 @@ class ServeEngine:
             hit_eos = (self.serve.eos_id >= 0 and nxt == self.serve.eos_id)
             if hit_eos or len(req.generated) >= req.max_new_tokens \
                     or self.positions[i] >= self.serve.max_len - 1:
+                req.t_finished = time.perf_counter()
+                req.done = True
+                self._n_finished += 1
+                self._req_lat.append(req.t_finished - req.t_added)
                 finished[req.uid] = req.generated
                 self.slots[i] = None
         return finished
@@ -155,6 +199,31 @@ class ServeEngine:
             if not any(self.slots):
                 break
         return out
+
+    # -- telemetry ------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Snapshot of the serving counters (jsonable; shape documented in
+        docs/metrics_schema.md, rendered by repro.tools.healthdash)."""
+        def pct(win, q):
+            return float(np.percentile(np.asarray(win), q)) if win else None
+        return {
+            "requests": self._n_requests,
+            "finished": self._n_finished,
+            "active": sum(s is not None for s in self.slots),
+            "max_batch": len(self.slots),
+            "kv_slot_occupancy": (float(np.mean(self._occupancy))
+                                  if self._occupancy else 0.0),
+            "prefill_tokens": self._prefill_tokens,
+            "decode_tokens": self._decode_tokens,
+            "decode_tokens_per_s": (self._decode_tokens / self._decode_time_s
+                                    if self._decode_time_s > 0 else 0.0),
+            "prefill_latency_s": {"p50": pct(self._prefill_lat, 50),
+                                  "p99": pct(self._prefill_lat, 99)},
+            "decode_step_s": {"p50": pct(self._decode_lat, 50),
+                              "p99": pct(self._decode_lat, 99)},
+            "request_latency_s": {"p50": pct(self._req_lat, 50),
+                                  "p99": pct(self._req_lat, 99)},
+        }
 
     def _sample(self, logits: np.ndarray) -> int:
         logits = logits[:self.cfg.vocab_size]

@@ -12,6 +12,7 @@ from repro.roofline.analysis import analyze_record, build_table, suggestion
 DRYRUN = Path("experiments/dryrun")
 BENCH = Path("experiments/bench")
 PERF = Path("experiments/perf")
+OBS = Path("experiments/obs")
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
@@ -183,6 +184,29 @@ def validation_section() -> str:
     return "\n".join(out)
 
 
+def obs_section() -> str:
+    """Precision-health dashboards for every metrics stream under
+    experiments/obs/ (written by the nightly metrics-enabled smoke; see
+    repro.tools.healthdash for the standalone CLI)."""
+    from repro.tools import healthdash
+    streams = sorted(OBS.glob("*.jsonl"))
+    if not streams:
+        return ("_No metrics streams under experiments/obs/ — run a "
+                "metrics-enabled training (LoopConfig.metrics_path) and "
+                "rerun the report._")
+    out = []
+    for p in streams:
+        records, meta = healthdash.load_metrics(str(p))
+        serve_path = p.with_suffix(".serve.json")
+        serve = _load(serve_path) if serve_path.exists() else None
+        md = healthdash.render(records, meta, serve, title=f"`{p.stem}`")
+        # demote two levels: dashboard "# title"/"## section" nest under
+        # this file's "## §Observability"
+        md = md.replace("\n## ", "\n#### ").replace("# ", "### ", 1)
+        out.append(md)
+    return "\n".join(out)
+
+
 def perf_section() -> str:
     out = ["Hypothesis -> change -> measure iterations on the three chosen "
            "cells (launch/perf.py records under experiments/perf/). Terms "
@@ -234,6 +258,8 @@ def main():
     doc.append(dryrun_section())
     doc.append("\n\n## §Roofline — three-term analysis (single pod)\n")
     doc.append(roofline_section())
+    doc.append("\n\n## §Observability — precision-health telemetry\n")
+    doc.append(obs_section())
     doc.append("\n\n## §Perf — hillclimb log\n")
     doc.append(perf_section())
     manual = Path("experiments/PERF_NOTES.md")

@@ -11,18 +11,23 @@ Production behaviors for the 1000-node regime, exercised at CPU scale:
    `straggler_factor` x EMA are counted and surfaced through metrics and the
    `on_straggler` hook (at fleet scale the hook triggers host replacement /
    data re-sharding; here it logs and optionally checkpoints so the restart
-   lands on a healthy machine).
- * overflow telemetry — the paper's dynamic loss scaling makes overflow a
-   *normal* event; counts stream into the metrics log (jsonl) for the
-   Fig. 2b-style scale-schedule plots.
+   lands on a healthy machine). EMA and straggler count ride the checkpoint
+   manifest, so a resumed run keeps its timing baseline instead of
+   re-learning it (and mis-flagging the first post-restore steps).
+ * observability — each step's phases run inside `obs.trace.Tracer` spans
+   (data_wait / step_dispatch / device_sync / checkpoint), metrics stream
+   through `obs.metrics.MetricsLogger` (versioned-schema jsonl; vector
+   metrics such as per-layer amax trajectories serialize as lists), and
+   `obs.health.HealthMonitor` attaches structured `health_events` (overflow,
+   loss-scale flapping, per-site FP8 saturation/underflow, stuck amax,
+   straggler streaks) to the record that triggered them. The `on_metrics`
+   hook sees every serialized record.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import signal
 import time
-from pathlib import Path
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
@@ -32,6 +37,9 @@ from repro.checkpoint import Checkpointer
 from repro.core.master_weights import MixedPrecisionOptimizer
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm
+from repro.obs.health import HealthConfig, HealthMonitor
+from repro.obs.metrics import MetricsLogger, jsonable
+from repro.obs.trace import Tracer
 from repro.scaling.state import DelayedScaling
 from repro.train.step import make_train_step
 
@@ -46,6 +54,8 @@ class LoopConfig:
     keep_last_k: int = 3
     log_every: int = 10
     metrics_path: Optional[str] = None
+    trace_path: Optional[str] = None
+    metrics_window: int = 64
     straggler_factor: float = 3.0
     straggler_ema: float = 0.95
     n_microbatches: int = 1
@@ -56,17 +66,25 @@ class TrainLoop:
                  data: Iterator[Dict[str, np.ndarray]],
                  loop: LoopConfig, *, seed: int = 0,
                  on_straggler: Optional[Callable[[int, float], None]] = None,
+                 on_metrics: Optional[
+                     Callable[[int, Dict[str, Any]], None]] = None,
+                 health: Optional[HealthConfig] = None,
                  scaling: Optional[DelayedScaling] = None,
                  amax_sync=None):
         """scaling: optional DelayedScaling bundle (delayed per-tensor FP8
         scaling). Its ScaleState rides through the jitted step and is
-        checkpointed/restored next to the optimizer state."""
+        checkpointed/restored next to the optimizer state.
+
+        on_metrics(step, record): called with every serialized metrics
+        record (the exact dict written to the jsonl sink, health_events
+        included) — the seam for external sinks (wandb, fleet telemetry)."""
         self.cfg = cfg
         self.optimizer = optimizer
         self.data = data
         self.loop = loop
         self.seed = seed
         self.on_straggler = on_straggler
+        self.on_metrics = on_metrics
         self.scaling = scaling
         self.ckpt = Checkpointer(loop.checkpoint_dir,
                                  keep_last_k=loop.keep_last_k)
@@ -74,10 +92,26 @@ class TrainLoop:
         self._step_fn = jax.jit(make_train_step(
             cfg, optimizer, n_microbatches=loop.n_microbatches,
             scaling=scaling, amax_sync=amax_sync))
-        self._metrics_f = None
-        if loop.metrics_path:
-            Path(loop.metrics_path).parent.mkdir(parents=True, exist_ok=True)
-            self._metrics_f = open(loop.metrics_path, "a")
+        self.tracer = Tracer(loop.trace_path)
+        self.monitor = HealthMonitor(
+            health,
+            site_names=list(scaling.registry.keys) if scaling else None,
+            scaler=optimizer.scaler)
+
+    def _logger_meta(self) -> Dict[str, Any]:
+        meta: Dict[str, Any] = {
+            "arch": self.cfg.arch,
+            "n_microbatches": self.loop.n_microbatches,
+            "total_steps": self.loop.total_steps,
+        }
+        pol = getattr(self.cfg, "policy", None)
+        if pol is not None and getattr(pol, "quant", None) is not None:
+            meta["recipe"] = pol.quant.recipe
+            meta["track_health"] = bool(pol.quant.track_health)
+        if self.scaling is not None:
+            # Row order of the dense health/amax_sites vector.
+            meta["sites"] = list(self.scaling.registry.keys)
+        return meta
 
     # -- preemption ----------------------------------------------------------
     def install_signal_handlers(self):
@@ -100,16 +134,32 @@ class TrainLoop:
         return tree["train"], tree["amax_scales"]
 
     def run(self) -> Dict[str, Any]:
+        with MetricsLogger(self.loop.metrics_path, meta=self._logger_meta(),
+                           window=self.loop.metrics_window) as logger:
+            try:
+                return self._run(logger)
+            finally:
+                self.tracer.export()
+
+    def _run(self, logger: MetricsLogger) -> Dict[str, Any]:
         params = init_lm(jax.random.PRNGKey(self.seed), self.cfg)
         state = self.optimizer.init(params)
         scale_state = self.scaling.init() if self.scaling else None
         del params
         start_step = 0
+        ema = None
+        stragglers = 0
         if self.ckpt.latest_step() is not None:
             proto = jax.eval_shape(lambda s: s,
                                    self._pack(state, scale_state))
             tree, start_step = self.ckpt.restore(proto)
             state, scale_state = self._unpack(tree)
+            # Straggler baseline survives restarts: a resumed run otherwise
+            # re-learns the EMA from scratch and both forgets its count and
+            # risks flagging warm steps against a cold baseline.
+            extra = self.ckpt.manifest(start_step).get("extra", {}) or {}
+            ema = extra.get("straggler_ema")
+            stragglers = int(extra.get("stragglers", 0))
             print(f"[train] restored checkpoint at step {start_step}")
             # Fast-forward the data stream so a resumed run consumes exactly
             # the batches an uninterrupted run would have (bit-identical
@@ -122,21 +172,22 @@ class TrainLoop:
         elif callable(self.data):
             self.data = self.data(0)
 
-        ema = None
-        stragglers = 0
         last_metrics: Dict[str, Any] = {}
         step = start_step
         for step in range(start_step, self.loop.total_steps):
-            batch = next(self.data)
             t0 = time.time()
+            with self.tracer.span("data_wait", step=step):
+                batch = next(self.data)
             step_key = jax.random.fold_in(
                 jax.random.PRNGKey(self.seed + 17), step)
-            if self.scaling is None:
-                state, metrics = self._step_fn(state, batch, step_key)
-            else:
-                (state, scale_state), metrics = self._step_fn(
-                    state, scale_state, batch, step_key)
-            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            with self.tracer.span("step_dispatch", step=step):
+                if self.scaling is None:
+                    state, metrics = self._step_fn(state, batch, step_key)
+                else:
+                    (state, scale_state), metrics = self._step_fn(
+                        state, scale_state, batch, step_key)
+            with self.tracer.span("device_sync", step=step):
+                metrics = jax.block_until_ready(metrics)
             dt = time.time() - t0
             # straggler detection (skip the compile step)
             if step > start_step:
@@ -149,23 +200,41 @@ class TrainLoop:
                 ema = dt if ema is None else \
                     self.loop.straggler_ema * ema \
                     + (1 - self.loop.straggler_ema) * dt
-            metrics.update(step=step, step_time_s=round(dt, 4),
-                           stragglers=stragglers)
-            last_metrics = metrics
-            if self._metrics_f:
-                self._metrics_f.write(json.dumps(metrics) + "\n")
-                self._metrics_f.flush()
-            if step % self.loop.log_every == 0:
-                print(f"[train] step {step} loss={metrics.get('loss', 0):.4f} "
-                      f"scale={metrics.get('loss_scale', 0):.0f} "
-                      f"t={dt:.3f}s")
+
             done = step + 1 >= self.loop.total_steps
-            if self._stop or done or \
-                    (step + 1) % self.loop.checkpoint_every == 0:
-                self.ckpt.save(step + 1, self._pack(state, scale_state))
-                if self._stop:
-                    print(f"[train] preempted: checkpointed at {step + 1}")
-                    break
+            save = self._stop or done or \
+                (step + 1) % self.loop.checkpoint_every == 0
+            if save:
+                with self.tracer.span("checkpoint", step=step):
+                    self.ckpt.save(
+                        step + 1, self._pack(state, scale_state),
+                        extra={"straggler_ema": ema,
+                               "stragglers": stragglers})
+
+            # Serialize first (scalar/vector-aware), then let the health
+            # detectors see the exact record, so events land ON the record
+            # whose metrics triggered them.
+            record = {k: jsonable(v) for k, v in metrics.items()}
+            record.update(step=step, step_time_s=round(dt, 4),
+                          stragglers=stragglers, **self.tracer.durations())
+            events = self.monitor.observe(step, record)
+            if events:
+                record["health_events"] = events
+            record = logger.log(record)
+            if self.on_metrics:
+                self.on_metrics(step, record)
+            last_metrics = record
+            if step % self.loop.log_every == 0:
+                # non-finite metrics serialize as strings ("inf"/"nan")
+                loss = record.get("loss", 0)
+                scale = record.get("loss_scale", 0)
+                loss = f"{loss:.4f}" if isinstance(loss, float) else loss
+                scale = f"{scale:.0f}" if isinstance(scale, float) else scale
+                print(f"[train] step {step} loss={loss} scale={scale} "
+                      f"t={dt:.3f}s")
+            if self._stop and save:
+                print(f"[train] preempted: checkpointed at {step + 1}")
+                break
         self.ckpt.wait()
         return {"state": state, "scale_state": scale_state,
                 "last_step": step + 1,

@@ -23,7 +23,7 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import encode, forward, lm_loss
 from repro.optim import make_optimizer
 from repro.scaling import context as scale_ctx
-from repro.scaling.context import AMAX_PREFIX
+from repro.scaling.context import AMAX_PREFIX, HEALTH_PREFIX
 from repro.scaling.state import DelayedScaling, ScaleState, split_observations
 
 Array = jax.Array
@@ -117,7 +117,8 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
         # over the MICROBATCH axis only (axis 0): per-layer scanned-stack
         # observations are (n_groups,) vectors whose layer axis must
         # survive the reduction.
-        metrics = {k: (v.max(axis=0) if k.startswith(AMAX_PREFIX)
+        metrics = {k: (v.max(axis=0)
+                       if k.startswith((AMAX_PREFIX, HEALTH_PREFIX))
                        else v.mean())
                    for k, v in metricses.items()}
         return loss, metrics, grads, tok_grads
@@ -148,6 +149,15 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
         new_scale_state = scaling.update(scale_state, observed,
                                          sync=amax_sync)
         new_state, out = _finish(state, grads, loss, metrics, scale)
+        if scaling.qcfg.track_health:
+            # Scale-churn rate: fraction of registry rows whose derived
+            # scale moved this step; plus the dense freshest-amax vector
+            # (registry row order — the logger meta carries the matching
+            # site list) for the stuck/NaN-amax detectors.
+            out["health/scale_churn"] = jnp.mean(
+                (scale_state.scale != new_scale_state.scale)
+                .astype(jnp.float32))
+            out["health/amax_sites"] = new_scale_state.amax_history[:, 0]
         return (new_state, new_scale_state), out
 
     return train_step if scaling is None else train_step_scaled
