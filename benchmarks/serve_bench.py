@@ -1,0 +1,146 @@
+"""Paged serving-engine benchmark: end-to-end throughput / latency of
+`PagedServeEngine` (chunked prefill + paged KV + on-device sampling) at
+several concurrency levels, plus an exact prefix-cache reuse measurement.
+
+Emits the repo-root BENCH_serve.json perf trajectory (see
+benchmarks.common.save_bench): decode tokens/s and p50/p99 request latency
+per concurrency level, page-pool occupancy, prefix-cache hit rate.
+
+CPU numbers are correctness-scale (XLA interpret-path models), so the
+trajectory tracks RELATIVE movement across PRs, same as the kernel bench.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_bench
+from repro.models.registry import build_config
+from repro.models.transformer import init_lm
+from repro.serve import PagedServeConfig, PagedServeEngine
+
+
+def _bench_cfg(*, fp8_kv: bool):
+    """Reduced-scale qwen2: big enough that the step does real work, small
+    enough that a CPU run finishes in seconds."""
+    cfg = build_config("qwen2-1.5b", smoke=True)
+    cfg = cfg.replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab_size=512)
+    if fp8_kv:
+        cfg = cfg.replace(policy=dataclasses.replace(
+            cfg.policy, kv_cache_format="e5m2"))
+    return cfg
+
+
+def _run_level(cfg, params, *, concurrency: int, n_requests: int,
+               prompt_len: int, max_new: int, seed: int = 0):
+    """Serve `n_requests` distinct prompts at `concurrency` parallel rows;
+    returns the throughput/latency slice of the engine stats."""
+    serve = PagedServeConfig(
+        max_batch=concurrency, max_len=256, n_pages=128, page_size=16,
+        chunk_size=32, temperature=0.0, prefix_cache=False)
+    eng = PagedServeEngine(cfg, params, serve)
+    rng = np.random.default_rng(seed)
+    pending = [rng.integers(0, cfg.vocab_size, size=prompt_len)
+               for _ in range(n_requests)]
+    # Warm the jit cache outside the timed region (compile time would
+    # otherwise dominate the first request's latency on CPU).
+    eng.add_request(pending[0], max_new_tokens=2)
+    eng.run_to_completion()
+    t0 = time.perf_counter()
+    while pending or any(s is not None for s in eng.slots):
+        while pending and eng.free_slots():
+            eng.add_request(pending.pop(0), max_new_tokens=max_new)
+        eng.step()
+    wall = time.perf_counter() - t0
+    s = eng.stats()
+    return {
+        "concurrency": concurrency,
+        "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "max_new_tokens": max_new,
+        "wall_s": wall,
+        "decode_tokens_per_s": s["decode_tokens_per_s"],
+        "total_tokens_per_s": (s["prefill_tokens"] + s["decode_tokens"])
+                              / wall,
+        "request_latency_s": s["request_latency_s"],
+        "prefill_latency_s": s["prefill_latency_s"],
+        "step_s": s["step_s"],
+        "page_occupancy": s["page_occupancy"],
+    }
+
+
+def _run_prefix_cache(cfg, params, *, prompt_len: int, max_new: int,
+                      n_repeats: int):
+    """Same long prompt served repeatedly: every request after the first
+    should splice the cached full-page prefix (cold prefill only once)."""
+    serve = PagedServeConfig(
+        max_batch=2, max_len=256, n_pages=128, page_size=16,
+        chunk_size=32, temperature=0.0, prefix_cache=True)
+    eng = PagedServeEngine(cfg, params, serve)
+    prompt = np.arange(prompt_len) % cfg.vocab_size
+    lat = []
+    for _ in range(n_repeats):
+        t0 = time.perf_counter()
+        eng.add_request(prompt, max_new_tokens=max_new)
+        eng.run_to_completion()
+        lat.append(time.perf_counter() - t0)
+    s = eng.stats()
+    return {
+        "prompt_len": prompt_len,
+        "n_repeats": n_repeats,
+        "cold_request_s": lat[0],
+        "warm_request_s_p50": float(np.percentile(lat[1:], 50)),
+        "warm_speedup": lat[0] / float(np.percentile(lat[1:], 50)),
+        "prefix_cache_hit_rate": s["prefix_cache_hit_rate"],
+        "prefix_cache_entries": s["prefix_cache_entries"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="nightly-CI scale: fewer/shorter requests")
+    ap.add_argument("--fp8-kv", action="store_true")
+    args = ap.parse_args()
+
+    cfg = _bench_cfg(fp8_kv=args.fp8_kv)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    if args.smoke:
+        levels, n_req, plen, max_new, reps = [2, 4], 6, 24, 8, 3
+    else:
+        levels, n_req, plen, max_new, reps = [2, 4, 8], 16, 48, 24, 6
+
+    payload = {
+        "bench": "paged_serving_engine",
+        "model": {"arch": "qwen2-1.5b[reduced]", "n_layers": cfg.n_layers,
+                  "d_model": cfg.d_model,
+                  "kv_cache_format": cfg.policy.kv_cache_format,
+                  "recipe": cfg.policy.quant.recipe},
+        "levels": [],
+    }
+    for c in levels:
+        r = _run_level(cfg, params, concurrency=c, n_requests=n_req,
+                       prompt_len=plen, max_new=max_new)
+        payload["levels"].append(r)
+        print(f"concurrency={c}: {r['decode_tokens_per_s']:.1f} decode "
+              f"tok/s, request p50={r['request_latency_s']['p50']:.3f}s "
+              f"p99={r['request_latency_s']['p99']:.3f}s")
+    payload["prefix_cache"] = _run_prefix_cache(
+        cfg, params, prompt_len=plen, max_new=max_new, n_repeats=reps)
+    print(f"prefix cache: hit_rate="
+          f"{payload['prefix_cache']['prefix_cache_hit_rate']:.2f}, "
+          f"warm speedup {payload['prefix_cache']['warm_speedup']:.2f}x")
+    save_bench("serve", payload)
+    print("wrote BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -286,3 +286,68 @@ def fp8_sdpa_decode(q: Array, k_cached: Array, v_cached: Array,
         ctx.record(keys["s"], amax_s * s_s)
         ctx.record(keys["p"], amax_p * s_p)
     return o.astype(dtype_of(cfg.output_dtype))
+
+
+def fp8_sdpa_chunk(q: Array, k_cached: Array, v_cached: Array,
+                   slot_pos: Array, chunk_pos: Array, *, cfg: QuantConfig,
+                   sm_scale: float, window: int = 0,
+                   key: Optional[Array] = None,
+                   k_cache_scale=1.0, v_cache_scale=1.0,
+                   site: Optional[str] = None) -> Array:
+    """Serving chunk step through the fused kernel (forward only, 'chunk'
+    mask): T consecutive tokens per request attend a paged/gathered KV
+    layout in ONE kernel call — the chunked-prefill + decode unified path
+    (decode is the T=1 special case; the mask reduces exactly to the 'kv'
+    decode condition then).
+
+    q: (B,H,T,dh) high precision — the chunk's queries. k_cached/v_cached:
+    (B,Hkv,C,dh) gathered cache rows, FP8 payloads consumed DIRECTLY with
+    their frozen cache scales, bf16 quantized here at the #k.A/#v.A sites
+    (identical to `fp8_sdpa_decode`). slot_pos: (B,C) int32 absolute
+    position held by each gathered column (-1 = hole). chunk_pos: (B,2)
+    int32 [start, n_valid] — q row r of request b sits at position
+    start_b + r when r < n_valid_b, and is fully masked (exact-zero
+    output row) otherwise, so ragged chunks batch under one static shape.
+    Validity is (slot >= 0) & (slot <= qpos) [& window band] — in-chunk
+    causality emerges from the position comparison, with no separate
+    causal mask."""
+    ctx = scale_ctx.current()
+    keys = None
+    one = jnp.float32(1.0)
+    s_q = s_s = s_p = one
+    if cfg.delayed and ctx is not None and site is not None:
+        skey = ctx.site_key(site)
+        keys = scale_ctx.attention_keys(skey)
+        for n in ("q", "k", "v", "s", "p"):
+            ctx.register(keys[n])
+        _check_frozen_sites(ctx, keys)
+        s_q = ctx.scale_for(keys["q"])
+        s_s = ctx.scale_for(keys["s"])
+        s_p = ctx.scale_for(keys["p"])
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_q, k_k, k_v, k_seed = jax.random.split(key, 4)
+    q8 = _quant_operand(q, ACT, cfg, k_q, scale=s_q)
+    if k_cached.dtype in (jnp.float8_e5m2, jnp.float8_e4m3fn):
+        k8d, v8d = k_cached, v_cached
+        s_k = jnp.asarray(k_cache_scale, jnp.float32)
+        s_v = jnp.asarray(v_cache_scale, jnp.float32)
+    else:
+        s_k = ctx.scale_for(keys["k"]) if keys is not None else one
+        s_v = ctx.scale_for(keys["v"]) if keys is not None else one
+        qk8 = _quant_operand(k_cached, ACT, cfg, k_k, scale=s_k)
+        qv8 = _quant_operand(v_cached, ACT, cfg, k_v, scale=s_v)
+        k8d, v8d = qk8.data, qv8.data
+    from repro.kernels.fp8_attention import ops as attn_ops  # lazy
+    seed = jax.random.bits(k_seed, (), jnp.uint32)
+    f_s = s_q * s_k * jnp.float32(sm_scale) / s_s
+    scal = jnp.stack([f_s, s_s, 1.0 / s_p, s_p * s_v])
+    o, amax_s, amax_p = attn_ops.fp8_attention_fwd(
+        q8.data, k8d, v8d, seed, scal, mask_mode="chunk", window=window,
+        kv_mask=slot_pos.astype(jnp.int32),
+        chunk_pos=chunk_pos.astype(jnp.int32), **_kernel_kwargs(cfg))
+    if keys is not None:
+        ctx.record(keys["q"], _observe(q8, cfg))
+        ctx.record(keys["s"], amax_s * s_s)
+        ctx.record(keys["p"], amax_p * s_p)
+    return o.astype(dtype_of(cfg.output_dtype))

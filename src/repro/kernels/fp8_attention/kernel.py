@@ -83,11 +83,13 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
               mask_mode: str, window: int, q_len: int, s_len: int,
               fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
               saturate_s: bool, saturate_p: bool,
-              hs_ref=None, hp_ref=None):
+              hs_ref=None, hp_ref=None, chunk_ref=None):
     # hs_ref/hp_ref: optional (1, 1, 1, 3) per-q-tile S/P precision-health
     # count outputs ([saturated, flushed, observed] — repro.obs), bound via
     # the _fwd_body_counts adapter. Observation-only: the stripe carries
     # and every quantize are untouched, so counts on/off is bit-identical.
+    # chunk_ref ('chunk' mode): (B, 2) int32 SMEM [start, n_valid] rows —
+    # per-batch chunk coordinates, bound via the _fwd_body_chunk adapter.
     b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
                    pl.program_id(3))
     j, phase = u % nk, u // nk
@@ -110,6 +112,8 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
               col0=j * bkv, scal2=(scal_ref[0], scal_ref[1]),
               mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
               fmt_s=fmt_s, rounding_s=rounding_s, saturate_s=saturate_s)
+    if chunk_ref is not None:
+        kw["chunk"] = (chunk_ref[b, 0], chunk_ref[b, 1])
 
     @pl.when(active & (phase == 0))
     def _pass_m():
@@ -154,6 +158,7 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
 
 
 def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
+                             chunk_pos=None,
                              block_q: int = DEFAULT_BQ,
                              block_kv: int = 0,
                              mask_mode: str = "causal", window: int = 0,
@@ -165,7 +170,9 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
                              interpret: bool = False):
     """q8 (B,H,Qp,Dp), k8/v8 (B,Hkv,Sp,Dp) fp8 payloads (pre-padded: Qp a
     block_q multiple, Sp a block_kv multiple, Dp a LANE multiple); kv_mask
-    None or (B,Sp) int8; seed (1,) u32; scal (4,) f32 [f_s, s_s, f_p, f_o].
+    None or (B,Sp) int8 — (B,Sp) int32 slot positions for mask_mode='chunk',
+    padded with -1, with chunk_pos (B,2) int32 [start, n_valid] per batch;
+    seed (1,) u32; scal (4,) f32 [f_s, s_s, f_p, f_o].
 
     Returns (o (B,H,Qp,Dp) bf16, amax_s (B,H,nq) f32, amax_p (B,H,nq) f32)
     with amaxes in grid units, masked to the attended region.
@@ -196,14 +203,20 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
         pl.BlockSpec((1, 1, bkv, dp), kv_index),
     ]
     args = [q8, k8, v8]
-    if mask_mode == "kv":
+    if mask_mode in ("kv", "chunk"):
         if with_counts:
             raise ValueError("with_counts supports the training masks "
-                             "(causal/full), not 'kv'")
+                             f"(causal/full), not {mask_mode!r}")
         in_specs.append(pl.BlockSpec((1, bkv),
                                      lambda b, h, iq, u: (b, u % nk)))
         args.append(kv_mask)
         body = _fwd_body
+        if mask_mode == "chunk":
+            # Per-batch chunk coordinates ride whole in SMEM (scalars,
+            # dynamically indexed by the batch program id).
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+            args.append(chunk_pos)
+            body = _fwd_body_chunk
     elif with_counts:
         body = _fwd_body_counts
     else:
@@ -250,6 +263,17 @@ def _masked_none_fwd(body, q_ref, k_ref, v_ref, scal_ref, seed_ref,
     """Adapter for mask-free modes: re-inserts msk_ref=None."""
     body(q_ref, k_ref, v_ref, None, scal_ref, seed_ref,
          o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr, **kw)
+
+
+def _fwd_body_chunk(q_ref, k_ref, v_ref, msk_ref, chunk_ref, scal_ref,
+                    seed_ref, o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr,
+                    **kw):
+    """Adapter for 'chunk' mode: rebinds the positional (B, 2) SMEM chunk
+    coordinates (after the slot-position mask in pallas_call order) as the
+    chunk_ref keyword."""
+    _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
+              o_ref, as_ref, ap_ref, m_scr, l_scr, acc_scr,
+              chunk_ref=chunk_ref, **kw)
 
 
 def _fwd_body_counts(q_ref, k_ref, v_ref, scal_ref, seed_ref,

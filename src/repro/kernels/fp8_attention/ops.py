@@ -37,7 +37,7 @@ def _health_frac(h):
     "rounding_s", "rounding_p", "saturate_s", "saturate_p", "with_counts",
     "interpret"))
 def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
-                      window: int = 0, kv_mask=None,
+                      window: int = 0, kv_mask=None, chunk_pos=None,
                       block_q: int = _k.DEFAULT_BQ,
                       block_kv: int = None,
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
@@ -50,7 +50,12 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     q8 (B,H,Q,D); k8/v8 (B,Hkv,S,D) — any fp8 dtype (the FP8 KV cache's
     e5m2 payloads compose with an e4m3 recipe; tiles upcast to bf16 for the
     MXU); seed u32 scalar; scal (4,) f32 [f_s, s_s, f_p, f_o] (ref module
-    docstring). kv_mask: (B, S) int8/bool validity for mask_mode='kv'.
+    docstring). kv_mask: (B, S) int8/bool validity for mask_mode='kv';
+    (B, S) int32 slot POSITIONS (-1 = hole/padding) for mask_mode='chunk',
+    which additionally takes chunk_pos (B, 2) int32 [start, n_valid] —
+    q row r of batch b sits at absolute position start_b + r when
+    r < n_valid_b and is fully masked (exact-zero output) otherwise: the
+    causal condition on logical positions, for paged/gathered KV layouts.
     block_kv: kv-stripe rows resident in VMEM per grid step (None ->
     kernel default).
 
@@ -72,12 +77,19 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     bkv = _r.resolve_block_kv(s_len, block_kv)
     qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq, bkv)
     mask = None
+    cpos = None
     if mask_mode == "kv":
         mask = _r._pad_to(kv_mask.astype(jnp.int8), 1, bkv)
+    elif mask_mode == "chunk":
+        # Slot positions pad with -1: 0 is a VALID position, so the usual
+        # zero padding would alias slot 0 into every padded lane.
+        mask = _r._pad_to(kv_mask.astype(jnp.int32), 1, bkv, -1)
+        cpos = jnp.asarray(chunk_pos, jnp.int32)
     seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
     scal = jnp.asarray(scal, jnp.float32).reshape((4,))
     outs = _k.fp8_attention_fwd_kernel(
-        qp, kp, vp, mask, seed, scal, block_q=bq, block_kv=bkv,
+        qp, kp, vp, mask, seed, scal, chunk_pos=cpos,
+        block_q=bq, block_kv=bkv,
         mask_mode=mask_mode,
         window=window, q_len=q_len, s_len=s_len, fmt_s=fmt_s, fmt_p=fmt_p,
         rounding_s=rounding_s, rounding_p=rounding_p,

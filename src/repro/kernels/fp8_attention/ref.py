@@ -120,10 +120,15 @@ def _quant_tile(y, bits, fmt_name: str, rounding: str, saturate: bool):
     return sr_fp8_via_f16(y, bits, fmt, saturate=saturate)
 
 
-def _mask_block(mask_mode: str, rows, cols, s_len: int, window: int, kvmask):
+def _mask_block(mask_mode: str, rows, cols, s_len: int, window: int, kvmask,
+                qpos=None):
     """Validity of one (bq, LANE) score tile: KV padding is always masked;
     'causal' adds the triangular (+ optional sliding-window) condition from
-    absolute coordinates; 'kv' ANDs a runtime per-batch validity row."""
+    absolute coordinates; 'kv' ANDs a runtime per-batch validity row;
+    'chunk' compares a runtime int32 row of KV slot POSITIONS (-1 = hole /
+    padding) against per-q-row absolute positions `qpos` (-1 = inactive
+    row) — the causal condition on logical positions rather than physical
+    columns, which is what a paged/gathered KV layout needs."""
     valid = cols < s_len
     if mask_mode == "causal":
         valid = valid & (cols <= rows)
@@ -131,6 +136,10 @@ def _mask_block(mask_mode: str, rows, cols, s_len: int, window: int, kvmask):
             valid = valid & (cols > rows - window)
     elif mask_mode == "kv":
         valid = valid & (kvmask != 0)
+    elif mask_mode == "chunk":
+        valid = valid & (kvmask >= 0) & (kvmask <= qpos)
+        if window:
+            valid = valid & (kvmask > qpos - window)
     elif mask_mode != "full":
         raise ValueError(f"unknown mask mode {mask_mode!r}")
     return valid
@@ -220,14 +229,23 @@ def _health_counts(q8t, obs, fmt_name: str):
 
 def _sblocks(q8, k8s, kvmask_s, *, seed, bh, row0, col0, scal2,
              mask_mode, window, q_len, s_len,
-             fmt_s, rounding_s, saturate_s):
+             fmt_s, rounding_s, saturate_s, chunk=None):
     """Yield (jj, s8, valid, x, cols, obs) for each LANE-wide column block
     of one kv stripe. scal2 = (f_s, s_s). obs is the OBSERVED region:
     logical rows AND mask validity (stripe-skip semantics — see module
-    docstring)."""
+    docstring). chunk ('chunk' mode only): per-batch (start, n_valid) int32
+    scalars — q row r sits at absolute position start + r when r < n_valid,
+    and is inactive (fully masked, exact-zero output) otherwise. Chunk
+    positions are affine in the row index by construction (a chunk is a
+    run of consecutive tokens), so two scalars replace a per-row vector —
+    no cross-lane transpose in the kernel."""
     f_s, s_s = scal2
     bq = q8.shape[0]
     rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    qpos = None
+    if chunk is not None:
+        start, n_valid = chunk
+        qpos = jnp.where(rows < n_valid, start + rows, jnp.int32(-1))
     for jj in range(k8s.shape[0] // LANE):
         cols = col0 + jj * LANE \
             + jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
@@ -237,7 +255,7 @@ def _sblocks(q8, k8s, kvmask_s, *, seed, bh, row0, col0, scal2,
                           fmt_s, rounding_s, saturate_s)
         sub = None if kvmask_s is None \
             else kvmask_s[:, jj * LANE:(jj + 1) * LANE]
-        valid = _mask_block(mask_mode, rows, cols, s_len, window, sub)
+        valid = _mask_block(mask_mode, rows, cols, s_len, window, sub, qpos)
         x = jnp.where(valid, s8.astype(jnp.float32) * s_s,
                       jnp.float32(-1e30))
         obs = (rows < q_len) & valid
@@ -454,7 +472,7 @@ def fwd_q_tile(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
                mask_mode: str, window: int, q_len: int, s_len: int,
                fmt_s: str, fmt_p: str, rounding_s: str, rounding_p: str,
                saturate_s: bool, saturate_p: bool,
-               block_kv: int = 0, payload: bool = True):
+               block_kv: int = 0, payload: bool = True, chunk=None):
     """Fused FP8 attention forward for one (bq, D) query tile against the
     full padded (Sp, D) K/V of its (batch, kv-head), streamed in
     `block_kv`-row stripes (0 = one stripe; fully-masked stripes skipped).
@@ -474,6 +492,8 @@ def fwd_q_tile(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
                                 mask_mode=mask_mode, window=window)
     kw = _stripe_kw(seed, bh, row0, (f_s, s_s), mask_mode, window,
                     q_len, s_len, fmt_s, rounding_s, saturate_s)
+    if chunk is not None:
+        kw["chunk"] = chunk
 
     def stripes():
         for j in range(jmin, jmax + 1):
@@ -639,13 +659,13 @@ def fmt_dtype(fmt_name: str):
 # unfused reference drivers (the oracle the kernels are locked against)
 # ---------------------------------------------------------------------------
 
-def _pad_to(x, axis: int, mult: int):
+def _pad_to(x, axis: int, mult: int, value=0):
     pad = (-x.shape[axis]) % mult
     if not pad:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 def pad_qkv(q8, k8, v8, block_q: int, block_kv: int = LANE):
@@ -674,7 +694,7 @@ DEFAULT_BKV = 512
 
 
 def fp8_attention_fwd_ref(q8, k8, v8, seed, scal, *, mask_mode="causal",
-                          window: int = 0, kv_mask=None,
+                          window: int = 0, kv_mask=None, chunk_pos=None,
                           block_q: int = LANE, block_kv=None,
                           fmt_s="e5m2", fmt_p="e5m2",
                           rounding_s="sr", rounding_p="sr",
@@ -684,7 +704,9 @@ def fp8_attention_fwd_ref(q8, k8, v8, seed, scal, *, mask_mode="causal",
     payloads. Materializes and returns the S8/P8 payloads the fused kernel
     never writes (masked positions zeroed; payload=False skips them for
     long-context runs). Returns (o, amax_s, amax_p, s8, p8) with o
-    (B,H,Q,D) bf16, payloads (B,H,Q,S) or None, amaxes in grid units."""
+    (B,H,Q,D) bf16, payloads (B,H,Q,S) or None, amaxes in grid units.
+    mask_mode='chunk': kv_mask is (B, S) int32 slot POSITIONS (-1 = hole)
+    and chunk_pos is (B, 2) int32 [start, n_valid] per batch row."""
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
     g = h_ // k8.shape[1]
@@ -696,8 +718,14 @@ def fp8_attention_fwd_ref(q8, k8, v8, seed, scal, *, mask_mode="causal",
     amax_s = amax_p = jnp.float32(0.0)
     for b in range(b_):
         o_h, s8_h, p8_h = [], [], []
-        mrow = None if kv_mask is None \
-            else _pad_to(kv_mask[b:b + 1].astype(jnp.int8), 1, bkv)
+        if mask_mode == "chunk":
+            # Slot positions pad with -1 (slot 0 is a VALID position).
+            mrow = _pad_to(kv_mask[b:b + 1].astype(jnp.int32), 1, bkv, -1)
+            chunk = (chunk_pos[b, 0], chunk_pos[b, 1])
+        else:
+            mrow = None if kv_mask is None \
+                else _pad_to(kv_mask[b:b + 1].astype(jnp.int8), 1, bkv)
+            chunk = None
         for h in range(h_):
             o_t, s8_t, p8_t = [], [], []
             for iq in range(nq):
@@ -709,7 +737,8 @@ def fp8_attention_fwd_ref(q8, k8, v8, seed, scal, *, mask_mode="causal",
                     q_len=q_len, s_len=s_len,
                     fmt_s=fmt_s, fmt_p=fmt_p, rounding_s=rounding_s,
                     rounding_p=rounding_p, saturate_s=saturate_s,
-                    saturate_p=saturate_p, block_kv=bkv, payload=payload)
+                    saturate_p=saturate_p, block_kv=bkv, payload=payload,
+                    chunk=chunk)
                 amax_s = jnp.maximum(amax_s, a_s)
                 amax_p = jnp.maximum(amax_p, a_p)
                 o_t.append(ot)

@@ -1,9 +1,14 @@
 """Serving launcher: loads (or initializes) a model and runs a batched
-greedy-decoding demo through the continuous-batching engine.
+decoding demo through the paged continuous-batching engine (chunked
+prefill + paged KV + on-device sampling). `--legacy` selects the old
+fixed-slot engine (the differential-parity oracle).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --smoke --temperature 0.8 \\
+      --top-p 0.95 --page-size 8 --n-pages 32
 """
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -14,10 +19,29 @@ def main():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--legacy", action="store_true",
+                    help="use the fixed-slot ServeEngine instead of the "
+                         "paged engine")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--fp8-kv", action="store_true")
     ap.add_argument("--n-requests", type=int, default=6)
+    # -- paged-engine knobs --------------------------------------------------
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV tokens per page")
+    ap.add_argument("--n-pages", type=int, default=64,
+                    help="pool pages per layer (page 0 is the trash page)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prompt tokens prefilled per request per step")
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    # -- sampling ------------------------------------------------------------
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 => greedy argmax (on device either way)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print the engine stats() snapshot at the end")
     args = ap.parse_args()
 
     import dataclasses
@@ -25,7 +49,8 @@ def main():
     from repro.checkpoint import Checkpointer
     from repro.models.registry import build_config
     from repro.models.transformer import init_lm
-    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve import (PagedServeConfig, PagedServeEngine, ServeConfig,
+                             ServeEngine)
 
     cfg = build_config(args.arch, smoke=args.smoke)
     if args.fp8_kv:
@@ -39,14 +64,27 @@ def main():
             params, step = ck.restore(state_proto)
             print(f"restored params at step {step}")
 
-    eng = ServeEngine(cfg, params, ServeConfig(max_batch=args.max_batch,
-                                               max_len=args.max_len))
+    if args.legacy:
+        eng = ServeEngine(cfg, params, ServeConfig(
+            max_batch=args.max_batch, max_len=args.max_len,
+            temperature=args.temperature, seed=args.seed))
+    else:
+        eng = PagedServeEngine(cfg, params, PagedServeConfig(
+            max_batch=args.max_batch, max_len=args.max_len,
+            n_pages=args.n_pages, page_size=args.page_size,
+            chunk_size=args.chunk_size, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed,
+            prefix_cache=not args.no_prefix_cache))
     rng = np.random.default_rng(0)
     pending = [rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
                for _ in range(args.n_requests)]
     uid_to_req = {}
     i = 0
-    while pending or any(eng.slots):
+
+    def active():
+        return any(s is not None for s in eng.slots)
+
+    while pending or active():
         while pending and eng.free_slots():
             p = pending.pop(0)
             uid = eng.add_request(p, max_new_tokens=16)
@@ -55,6 +93,8 @@ def main():
         for uid, toks in eng.step().items():
             print(f"request {uid_to_req[uid]}: generated {toks}")
     print("all requests served")
+    if args.stats:
+        print(json.dumps(eng.stats(), indent=1))
 
 
 if __name__ == "__main__":

@@ -32,9 +32,11 @@ from repro.distributed.sharding import (batch_specs, param_specs, replicated,
 from repro.launch.mesh import dp_axes
 from repro.models.config import ModelConfig
 from repro.models.registry import build_config
-from repro.models.transformer import init_lm, init_stack_state
-from repro.train.step import (make_optimizer_for, make_serve_decode,
-                              make_serve_prefill, make_train_step)
+from repro.models.transformer import (init_lm, init_paged_stack_state,
+                                      init_stack_state)
+from repro.train.step import (make_optimizer_for, make_serve_chunk,
+                              make_serve_decode, make_serve_prefill,
+                              make_train_step)
 
 SHAPES = {
     "train_4k": dict(seq=4096, batch=256, mode="train"),
@@ -120,6 +122,26 @@ def pick_microbatches(cfg: ModelConfig, batch: int, seq: int, mesh,
     return n
 
 
+def _paged_state_specs(states_s, mesh):
+    """Specs for the paged KV slot pool. Unlike fixed-slot caches there is
+    no batch dim to shard — the pool is shared by every in-flight request
+    and slots are gathered by index, so the slot dim stays replicated over
+    the data axes; the kv-head dim shards over 'model' (matching attention
+    TP) when divisible."""
+    msize = dict(mesh.shape).get("model", 1)
+
+    def spec_one(x):
+        shape = jnp.shape(x)
+        hdim = len(shape) - 2       # (..., n_slots, n_kv_heads, head_dim)
+        if msize > 1 and len(shape) >= 3 and shape[hdim] % msize == 0:
+            spec = [None] * len(shape)
+            spec[hdim] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map(spec_one, states_s)
+
+
 @functools.lru_cache(maxsize=None)
 def _cfg_for_cell(arch: str, shape: str) -> ModelConfig:
     cfg = build_config(arch)
@@ -138,7 +160,11 @@ def build_cell(arch: str, shape: str, mesh, *,
 
     overrides: perf-iteration knobs applied to the ModelConfig; keys starting
     with 'policy.' modify the PrecisionPolicy (e.g. {'policy.kv_cache_format':
-    'e5m2', 'attn_chunk_size': 512, 'capacity_factor': 1.0}).
+    'e5m2', 'attn_chunk_size': 512, 'capacity_factor': 1.0}). Keys starting
+    with 'serve.' select/configure the paged serving step for decode cells
+    ({'serve.paged': True, 'serve.page_size': 64, 'serve.chunk_size': 1,
+    'serve.n_pages': N}) — KV memory then scales with the page pool, not
+    batch * max_len.
     """
     ok, why = cell_supported(arch, shape)
     if not ok:
@@ -148,14 +174,17 @@ def build_cell(arch: str, shape: str, mesh, *,
     cfg = _cfg_for_cell(arch, shape)
     force_nmb = None
     force_sp = None
+    serve_kw: Dict[str, Any] = {}
     if overrides:
         overrides = dict(overrides)
         force_nmb = overrides.pop("n_microbatches", None)
         force_sp = overrides.pop("force_sequence_parallel", None)
+        serve_kw = {k.split(".", 1)[1]: v for k, v in overrides.items()
+                    if k.startswith("serve.")}
         pol_kw = {k.split(".", 1)[1]: v for k, v in overrides.items()
                   if k.startswith("policy.")}
         cfg_kw = {k: v for k, v in overrides.items()
-                  if not k.startswith("policy.")}
+                  if not k.startswith(("policy.", "serve."))}
         if pol_kw:
             qkw = {k.split(".", 1)[1]: v for k, v in pol_kw.items()
                    if k.startswith("quant.")}
@@ -278,12 +307,46 @@ def build_cell(arch: str, shape: str, mesh, *,
         cfg = cfg.replace(sequence_parallel=True)
         meta["sequence_parallel"] = True
     cache_len = min(seq, 32768) if shape != "long_500k" else cfg.window or 1
+    meta["recipe"] = cfg.policy.quant.recipe
+    meta["kv_cache_format"] = cfg.policy.kv_cache_format
+    meta["fuse_attention"] = cfg.policy.quant.fuse_attention
+    paged = bool(serve_kw.get("paged"))
     if mode == "prefill":
         states_s = _shaped(
             lambda: init_stack_state(cfg, batch, max_len=seq,
                                      n_layers=cfg.n_layers))
         batch_s = _token_batch(cfg, batch, seq, labels=False)
         fn = make_serve_prefill(cfg)
+    elif paged:
+        # Paged-KV decode cell: the PagedServeEngine step minus sampling —
+        # block-table gather over a flat slot pool, per-row [start, n_valid]
+        # chunk bounds. KV memory scales with the pool (n_pages * page_size
+        # slots), not batch * max_len; chunk_size > 1 dry-runs the chunked-
+        # prefill shape of the same program.
+        if cfg.is_encoder_decoder:
+            raise ValueError("paged serving cells do not support "
+                             "encoder-decoder archs")
+        psize = int(serve_kw.get("page_size", 64))
+        tchunk = int(serve_kw.get("chunk_size", 1))
+        n_pages = int(serve_kw.get("n_pages",
+                                   batch * (cache_len // psize) + 1))
+        capacity = -(-cache_len // psize) * psize
+        n_slots = n_pages * psize
+        states_s = _shaped(
+            lambda: init_paged_stack_state(cfg, n_slots,
+                                           n_layers=cfg.n_layers))
+        sds = jax.ShapeDtypeStruct
+        batch_s = {"tokens": sds((batch, tchunk), jnp.int32),
+                   "positions": sds((batch, tchunk), jnp.int32),
+                   "write_slots": sds((batch, tchunk), jnp.int32),
+                   "read_slots": sds((batch, capacity), jnp.int32),
+                   "slot_pos": sds((batch, capacity), jnp.int32),
+                   "chunk_pos": sds((batch, 2), jnp.int32),
+                   "last_row": sds((batch,), jnp.int32)}
+        fn = make_serve_chunk(cfg)
+        meta["paged"] = dict(page_size=psize, chunk_size=tchunk,
+                             n_pages=n_pages, capacity=capacity,
+                             kv_pool_tokens=n_slots)
     else:  # decode
         states_s = _shaped(
             lambda: init_stack_state(cfg, batch, max_len=cache_len,
@@ -295,7 +358,8 @@ def build_cell(arch: str, shape: str, mesh, *,
                 (batch, 4096, cfg.d_model), jnp.bfloat16)
         fn = make_serve_decode(cfg)
 
-    sspecs = state_specs(states_s, mesh)
+    sspecs = (_paged_state_specs(states_s, mesh) if paged
+              else state_specs(states_s, mesh))
     bspecs = batch_specs(batch_s, mesh)
     sizes = dict(mesh.shape)
     dp_total = 1

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision_policy import QuantConfig
-from repro.core.qattention import fp8_sdpa, fp8_sdpa_decode, fuse_attention
+from repro.core.qattention import (fp8_sdpa, fp8_sdpa_chunk, fp8_sdpa_decode,
+                                   fuse_attention)
 from repro.core.qlinear import qeinsum
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
@@ -85,6 +86,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
         # Absolute position stored in each slot; -1 = empty.
         "slot_pos": jnp.full((l, batch, length), -1, jnp.int32),
         "length": jnp.zeros((l, batch), jnp.int32),
+    }
+
+
+def init_paged_pool(cfg: ModelConfig, n_slots: int, *,
+                    n_layers: Optional[int] = None):
+    """Flat paged KV pool: `n_slots` token slots per layer, carved into
+    pages by the serving-side allocator (serve/paging.py). Slot 0 lives on
+    the reserved trash page — chunk rows past `n_valid` write value 0
+    there, never to a live page."""
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    l = cfg.n_layers if n_layers is None else n_layers
+    fmt = cfg.policy.kv_cache_format
+    dtype = {"e5m2": jnp.float8_e5m2, "e4m3": jnp.float8_e4m3fn,
+             None: jnp.bfloat16}[fmt]
+    return {
+        "k": jnp.zeros((l, n_slots, hkv, dh), dtype),
+        "v": jnp.zeros((l, n_slots, hkv, dh), dtype),
     }
 
 
@@ -232,7 +250,8 @@ def full_bidirectional_attention(q, k, v, *, scale, qcfg, qkey,
 def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
               qkey, positions: Array, mode: str = "train",
               cache_layer=None, kv_x: Optional[Array] = None,
-              window: int = 0) -> Tuple[Array, Optional[dict]]:
+              window: int = 0,
+              page: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
     """Full attention block.
 
     modes:
@@ -241,7 +260,18 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
       cross   — queries from x, keys/values from kv_x (no cache, train) .
       prefill — causal; writes the cache and returns it.
       decode  — single-token step against cache_layer.
-    Returns (y, new_cache_layer) (new cache is None unless prefill/decode).
+      chunk   — T consecutive tokens per request against a PAGED cache
+                (cache_layer = flat slot pool from `init_paged_pool`);
+                `page` carries the per-step block-table indirection
+                (`write_slots`/`read_slots`/`slot_pos`/`chunk_pos`, shared
+                by every layer). One chunk step subsumes chunked prefill
+                AND decode (T=1): K/V are scattered to their pool slots
+                first, then the gathered cache — in-chunk tokens included
+                — is attended under the position mask, so in-chunk
+                causality emerges from `slot_pos <= qpos` with no separate
+                causal mask.
+    Returns (y, new_cache_layer) (new cache is None unless
+    prefill/decode/chunk).
     """
     b, sq, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -365,6 +395,51 @@ def attention(params, x: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                            None)
             o = _sdpa(qt, kt, vt, valid[:, None, None, :], scale, qcfg,
                       qkey, 40)
+    elif mode == "chunk":
+        assert cache_layer is not None and page is not None
+        dtype = _store_dtype(cache_layer)
+        rows = jnp.arange(sq)[None, :]               # (1, T)
+        row_ok = rows < page["chunk_pos"][:, 1:2]    # (B, T)
+        # Scatter the chunk's K/V into their pool slots. Rows past n_valid
+        # all target slot 0 (the reserved trash page) with value 0, so the
+        # duplicate scatter writes agree and write order is irrelevant.
+        kq = _to_cache_dtype(jnp.where(row_ok[..., None, None], k, 0),
+                             dtype, k_scale)
+        vq = _to_cache_dtype(jnp.where(row_ok[..., None, None], v, 0),
+                             dtype, v_scale)
+        wslots = jnp.where(row_ok, page["write_slots"], 0).reshape(-1)
+        new_k = cache_layer["k"].at[wslots].set(kq.reshape(b * sq, hkv, dh))
+        new_v = cache_layer["v"].at[wslots].set(vq.reshape(b * sq, hkv, dh))
+        new_cache = {"k": new_k, "v": new_v}
+        # Gather the block-table-ordered view: gathered column i holds
+        # logical position i (read_slots is built that way), so the
+        # position mask reproduces the contiguous-cache layout exactly.
+        kt = new_k[page["read_slots"]]               # (B, C, Hkv, dh)
+        vt = new_v[page["read_slots"]]
+        slot_pos = page["slot_pos"]                  # (B, C), -1 = hole
+        if fused:
+            kt = constrain(kt.transpose(0, 2, 1, 3), "dp", "model", None,
+                           None)
+            vt = constrain(vt.transpose(0, 2, 1, 3), "dp", "model", None,
+                           None)
+            o = fp8_sdpa_chunk(qt, kt, vt, slot_pos, page["chunk_pos"],
+                               cfg=qcfg, sm_scale=scale, window=window,
+                               key=subkey(qkey, 40), k_cache_scale=k_scale,
+                               v_cache_scale=v_scale, site="sdpa")
+        else:
+            dt = jnp.bfloat16
+            kt = _from_cache_dtype(kt, dt, k_scale).transpose(0, 2, 1, 3)
+            vt = _from_cache_dtype(vt, dt, v_scale).transpose(0, 2, 1, 3)
+            kt = constrain(_repeat_kv(kt, h // hkv), "dp", "model", None,
+                           None)
+            vt = constrain(_repeat_kv(vt, h // hkv), "dp", "model", None,
+                           None)
+            qpos = jnp.where(row_ok, page["chunk_pos"][:, 0:1] + rows, -1)
+            mask = ((slot_pos[:, None, :] >= 0)
+                    & (slot_pos[:, None, :] <= qpos[:, :, None]))
+            if window:
+                mask &= slot_pos[:, None, :] > qpos[:, :, None] - window
+            o = _sdpa(qt, kt, vt, mask[:, None], scale, qcfg, qkey, 40)
     else:
         raise ValueError(f"unknown attention mode {mode!r}")
 

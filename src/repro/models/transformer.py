@@ -100,7 +100,7 @@ def _merge_aux(dst: Dict[str, Array], src: Dict[str, Array]):
 
 def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
                 qcfg: QuantConfig, qkey, positions: Array, mode: str,
-                state=None, enc_out: Optional[Array] = None):
+                state=None, enc_out: Optional[Array] = None, page=None):
     """Returns (h, new_state, aux)."""
     aux = {}
     new_state = None
@@ -114,7 +114,7 @@ def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
     if kind in ("attn", "local_attn", "enc_attn"):
         window = cfg.window if kind == "local_attn" else 0
         attn_mode = {"train": "train", "prefill": "prefill",
-                     "decode": "decode"}[mode]
+                     "decode": "decode", "chunk": "chunk"}[mode]
         if kind == "enc_attn":
             attn_mode = "encode"
         with scale_ctx.scope("attn"):
@@ -123,7 +123,7 @@ def apply_layer(p, h: Array, *, kind: str, cfg: ModelConfig,
                 cfg=cfg, qcfg=qcfg, qkey=subkey(qkey, 100),
                 positions=positions, mode=attn_mode,
                 cache_layer=None if state is None else state.get("kv"),
-                window=window)
+                window=window, page=page)
         h = h + a
         if "cross_attn" in p and enc_out is not None:
             with scale_ctx.scope("cross_attn"):
@@ -249,10 +249,48 @@ def init_stack_state(cfg: ModelConfig, batch: int, max_len: int, *,
     return state
 
 
+def init_paged_stack_state(cfg: ModelConfig, n_slots: int, *,
+                           n_layers: int, kinds=None):
+    """Per-layer paged KV pools for mode='chunk' serving (mirrors
+    `init_stack_state`'s stack_/layer_/rem_ structure so the scan threading
+    is identical). Paged serving is an attention-stack feature: recurrent
+    kinds have no paged representation and are refused."""
+    from repro.models.attention import init_paged_pool
+    pat = tuple(kinds) if kinds else cfg.pattern()
+    bad = [k for k in pat if k not in ("attn", "local_attn")]
+    if bad:
+        raise ValueError(f"paged serving supports attention stacks only, "
+                         f"got layer kinds {bad}")
+    n_groups = n_layers // len(pat)
+    rem = n_layers - n_groups * len(pat)
+
+    def proto():
+        pool = init_paged_pool(cfg, n_slots, n_layers=1)
+        return {"kv": jax.tree_util.tree_map(lambda x: x[0], pool)}
+
+    def stacked():
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape).copy()
+            if n_groups > 1 else x[None], proto())
+
+    state: Dict[str, Any] = {}
+    if cfg.scan_layers and n_groups > 1:
+        for pos in range(len(pat)):
+            state[f"stack_{pos}"] = stacked()
+    else:
+        for i in range(n_groups * len(pat)):
+            state[f"layer_{i}"] = proto()
+    for i in range(rem):
+        state[f"rem_{i}"] = proto()
+    return state
+
+
 def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 qkey, positions, mode, states=None, enc_out=None,
-                n_layers: int, kinds=None, key_base: int = 0):
-    """Returns (h, new_states, aux_sums)."""
+                n_layers: int, kinds=None, key_base: int = 0, page=None):
+    """Returns (h, new_states, aux_sums). `page` (paged serving, mode
+    'chunk') is the per-step block-table indirection shared by every layer
+    — captured by the scan body as a closure constant, never sliced."""
     pat = tuple(kinds) if kinds else cfg.pattern()
     n_groups = n_layers // len(pat)
     rem = n_layers - n_groups * len(pat)
@@ -314,7 +352,7 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                         hh, ns, aux = apply_layer(
                             gp[p], hh, kind=kind, cfg=cfg, qcfg=qcfg,
                             qkey=lkey, positions=positions, mode=mode,
-                            state=gs[p], enc_out=enc_out)
+                            state=gs[p], enc_out=enc_out, page=page)
                     outs.append(ns)
                     _merge_aux(all_aux, aux)
             if cfg.sequence_parallel and mode in ("train", "prefill"):
@@ -370,7 +408,8 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
                 h, ns, aux = apply_layer(params[f"layer_{i}"], h, kind=kind,
                                          cfg=cfg, qcfg=qcfg, qkey=lkey,
                                          positions=positions, mode=mode,
-                                         state=st, enc_out=enc_out)
+                                         state=st, enc_out=enc_out,
+                                         page=page)
             add_aux(aux)
             if states is not None and ns is not None:
                 new_states[f"layer_{i}"] = ns
@@ -385,7 +424,7 @@ def apply_stack(params, h: Array, *, cfg: ModelConfig, qcfg: QuantConfig,
             h, ns, aux = apply_layer(params[f"rem_{i}"], h, kind=kind,
                                      cfg=cfg, qcfg=qcfg, qkey=lkey,
                                      positions=positions, mode=mode,
-                                     state=st, enc_out=enc_out)
+                                     state=st, enc_out=enc_out, page=page)
         add_aux(aux)
         if states is not None and ns is not None:
             new_states[f"rem_{i}"] = ns
@@ -434,13 +473,18 @@ def encode(params, enc_inputs: Array, *, cfg: ModelConfig, qkey=None,
 def forward(params, tokens: Array, *, cfg: ModelConfig, qkey=None,
             mode: str = "train", states=None, positions=None,
             extra_embeds: Optional[Array] = None,
-            enc_out: Optional[Array] = None, last_only: bool = False):
+            enc_out: Optional[Array] = None, last_only: bool = False,
+            page=None, gather_rows: Optional[Array] = None):
     """Backbone forward. Returns (logits, new_states, aux).
 
     extra_embeds: (B, P, D) precomputed patch/frame embeddings prepended to
     the token embeddings (llava anyres stub). enc_out: encoder output for
     enc-dec cross-attention. last_only=True computes logits only for the
     final position (prefill: avoids a (B, S, V) materialization).
+    page: block-table indirection for mode='chunk' (paged serving).
+    gather_rows: (B,) per-request row index — computes logits only at that
+    row of each sequence (the chunk step's last VALID token, which differs
+    per request under ragged chunks; mutually exclusive with last_only).
     """
     qcfg = cfg.policy.quant
     head_cfg = cfg.policy.quant_for_layer(is_head=True)
@@ -454,9 +498,11 @@ def forward(params, tokens: Array, *, cfg: ModelConfig, qkey=None,
         h, new_states, aux = apply_stack(
             params["decoder"], h, cfg=cfg, qcfg=qcfg, qkey=qkey,
             positions=positions, mode=mode, states=states, enc_out=enc_out,
-            n_layers=cfg.n_layers)
+            n_layers=cfg.n_layers, page=page)
     if last_only:
         h = h[:, -1:]
+    elif gather_rows is not None:
+        h = h[jnp.arange(b), gather_rows.astype(jnp.int32)][:, None]
     h = apply_norm(params["final_norm"], h, eps=cfg.norm_eps)
     logits = logits_head(params["embed"], h, qcfg=head_cfg, qkey=qkey)
     return logits, new_states, aux

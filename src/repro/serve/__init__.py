@@ -1,3 +1,6 @@
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (PagedServeConfig, PagedServeEngine,
+                                ServeConfig, ServeEngine)
+from repro.serve.paging import PageAllocator, PagesExhausted
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = ["ServeEngine", "ServeConfig", "PagedServeEngine",
+           "PagedServeConfig", "PageAllocator", "PagesExhausted"]

@@ -236,13 +236,383 @@ class ServeEngine:
 
 
 def _merge_slot(old_states, new_states, slot: int):
-    """Take slot `slot`'s rows from new_states, keep others from old."""
-    def merge(o, n):
-        if o.ndim >= 2 and o.shape == n.shape:
-            # batch dim is 1 for stacked leaves (G, B, ...) else 0
-            bdim = 1 if o.ndim >= 2 else 0
-            idx = [slice(None)] * o.ndim
-            idx[bdim] = slice(slot, slot + 1)
-            return o.at[tuple(idx)].set(n[tuple(idx)])
-        return n
-    return jax.tree_util.tree_map(merge, old_states, new_states)
+    """Take slot `slot`'s rows from new_states, keep others from old.
+
+    The batch dim depends on the stack layout, so it is resolved from the
+    state-dict KEY, not the leaf rank: scanned groups ("stack_*") stack a
+    leading group dim => batch at dim 1; unscanned ("layer_*"/"rem_*")
+    leaves put batch at dim 0. (Guessing from rank alone merged unscanned
+    KV caches along their LENGTH axis — every slot kept only its first
+    cached token and decode walked off garbage.)"""
+    def merge_with(bdim):
+        def merge(o, n):
+            if o.ndim > bdim and o.shape == n.shape:
+                idx = [slice(None)] * o.ndim
+                idx[bdim] = slice(slot, slot + 1)
+                return o.at[tuple(idx)].set(n[tuple(idx)])
+            return n
+        return merge
+    out = {}
+    for key in old_states:
+        bdim = 1 if key.startswith("stack_") else 0
+        out[key] = jax.tree_util.tree_map(merge_with(bdim), old_states[key],
+                                          new_states[key])
+    return out
+
+
+# ===========================================================================
+# Paged engine: block-table KV, chunked prefill, on-device sampling
+# ===========================================================================
+
+@dataclasses.dataclass
+class PagedServeConfig:
+    """Knobs for `PagedServeEngine`.
+
+    max_batch:   concurrent request rows per step (static shape).
+    max_len:     max logical sequence length per request.
+    n_pages:     KV pool pages per layer (page 0 is the reserved trash
+                 page, so `(n_pages - 1) * page_size` tokens are
+                 allocatable). KV memory scales with THIS, not with
+                 max_batch * max_len.
+    page_size:   tokens per page.
+    chunk_size:  prompt tokens prefillable per request per step; decode is
+                 the 1-token special case of the same jitted step.
+    temperature / top_k / top_p: sampling controls (temperature<=0 =>
+                 greedy argmax). seed: base of the per-request PRNG
+                 streams (seed + uid, folded with the per-request token
+                 index — batch-layout invariant).
+    prefix_cache: exact full-page prompt-prefix reuse (bitwise-safe only
+                 because frozen-scale serving is deterministic).
+    """
+    max_batch: int = 8
+    max_len: int = 512
+    n_pages: int = 64
+    page_size: int = 16
+    chunk_size: int = 32
+    eos_id: int = -1
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    prefix_cache: bool = True
+    max_cache_entries: int = 128
+
+
+@dataclasses.dataclass
+class _PagedRequest:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    table: list                 # block table: page ids, position-major
+    prefill_pos: int = 0        # next prompt position to prefill
+    pos: int = 0                # tokens materialized in KV so far
+    generated: list = dataclasses.field(default_factory=list)
+    cached_tokens: int = 0      # prompt tokens satisfied by the prefix cache
+    t_added: float = 0.0
+    prefill_s: float = 0.0
+    t_finished: float = 0.0
+
+
+class PagedServeEngine:
+    """Production serving loop over a paged KV pool.
+
+    One jitted fixed-shape `step()` serves every phase: each request row
+    carries either a prompt chunk (up to `chunk_size` tokens) or a decode
+    step (1 token) through the SAME compiled program — `mode='chunk'`
+    attention with a block-table gather, per-row `[start, n_valid]` ragged
+    bounds, and on-device sampling. The step's outputs are the updated KV
+    pools and one sampled token id per row: logits never leave the device
+    (no per-token host sync; the host reads only the (B,) token vector it
+    needs for EOS/scheduling).
+
+    Under frozen scales the token streams are bit-identical to the legacy
+    fixed-slot `ServeEngine` (locked by tests/test_paging.py): with a bf16
+    KV cache the FULL stream matches for any chunk size; with an FP8 KV
+    cache the decode phase matches given the same cache payloads, while
+    chunked prefill reads earlier chunks' FP8 payloads (the cache IS the
+    attention input — legacy prefill attends raw bf16 K/V, a documented
+    semantic difference of chunked prefill, not a bug).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, serve: PagedServeConfig,
+                 frozen_scales: Optional[Dict[str, float]] = None,
+                 frozen_formats: Optional[Dict[str, str]] = None):
+        from repro.models.transformer import init_paged_stack_state
+        from repro.serve.paging import PageAllocator
+        from repro.serve.prefix_cache import PrefixCache, scale_fingerprint
+        from repro.serve import sampling as _sampling
+        from repro.train.step import _eval_cfg, _maybe_frozen
+        from repro.models.transformer import forward
+
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.frozen_scales = frozen_scales
+        self.frozen_formats = frozen_formats
+        if frozen_formats:
+            ServeEngine._check_formats(self, frozen_formats)
+
+        self.pager = PageAllocator(serve.n_pages, serve.page_size)
+        psize = serve.page_size
+        # Static gather width: every position a request can ever hold.
+        self.capacity = -(-serve.max_len // psize) * psize
+        self.states = init_paged_stack_state(cfg, self.pager.n_slots,
+                                             n_layers=cfg.n_layers)
+        self.prefix_cache = None
+        if serve.prefix_cache:
+            fp = scale_fingerprint(
+                frozen_scales, frozen_formats,
+                recipe=cfg.policy.quant.recipe,
+                kv_format=cfg.policy.kv_cache_format)
+            self.prefix_cache = PrefixCache(
+                self.pager, fp, max_entries=serve.max_cache_entries)
+
+        ecfg = _eval_cfg(cfg, frozen_scales)
+        temperature, top_k, top_p = (serve.temperature, serve.top_k,
+                                     serve.top_p)
+        vocab = cfg.vocab_size
+
+        def step_fn(params, states, batch):
+            """The whole serving step: chunk attention + head + sampling.
+            Returns (sampled (B,) int32, new_states) — NO vocab-dim output,
+            which the jaxpr test asserts."""
+            with _maybe_frozen(frozen_scales):
+                page = {"write_slots": batch["write_slots"],
+                        "read_slots": batch["read_slots"],
+                        "slot_pos": batch["slot_pos"],
+                        "chunk_pos": batch["chunk_pos"]}
+                logits, new_states, _ = forward(
+                    params, batch["tokens"], cfg=ecfg, mode="chunk",
+                    states=states, positions=batch["positions"], page=page,
+                    gather_rows=batch["last_row"])
+            lg = logits[:, 0].astype(jnp.float32)
+            # Padded-vocab columns are masked BEFORE argmax/sampling — the
+            # on-device greedy then bit-matches the legacy host-side
+            # `logits[:vocab].argmax()`.
+            col = jnp.arange(lg.shape[-1])
+            lg = jnp.where(col[None, :] < vocab, lg, jnp.float32(-1e30))
+            keys = _sampling.row_keys(batch["seeds"], batch["steps"])
+            tok = _sampling.sample(lg, keys, temperature=temperature,
+                                   top_k=top_k, top_p=top_p)
+            return tok, new_states
+
+        self._step = jax.jit(step_fn)
+
+        b = serve.max_batch
+        self.slots: List[Optional[_PagedRequest]] = [None] * b
+        self._uid = 0
+        self.tracer = Tracer()
+        win = 512
+        self._prefill_lat = collections.deque(maxlen=win)
+        self._step_lat = collections.deque(maxlen=win)
+        self._req_lat = collections.deque(maxlen=win)
+        self._occupancy = collections.deque(maxlen=win)
+        self._n_requests = 0
+        self._n_finished = 0
+        self._prefill_tokens = 0
+        self._decode_tokens = 0
+        self._decode_time_s = 0.0
+
+    # -- admission ----------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def add_request(self, prompt: np.ndarray,
+                    max_new_tokens: int = 32) -> int:
+        """Admit a request (prefill happens inside subsequent step()s).
+        Raises `PagesExhausted` when the prompt needs more KV pages than
+        the pool can allocate (after shedding LRU prefix-cache entries) —
+        a structured refusal, never a silent truncation."""
+        from repro.serve.paging import PagesExhausted
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots; call step() until one frees")
+        prompt = np.asarray(prompt, np.int32)
+        n = int(prompt.shape[0])
+        if n < 1 or n >= self.serve.max_len:
+            raise ValueError(
+                f"prompt length {n} out of range [1, {self.serve.max_len})")
+        slot = free[0]
+        self._uid += 1
+        req = _PagedRequest(self._uid, prompt, max_new_tokens, table=[],
+                            t_added=time.perf_counter())
+        # Exact prefix reuse: splice cached full pages, prefill the rest.
+        if self.prefix_cache is not None:
+            pages, n_cached = self.prefix_cache.lookup(prompt)
+            req.table = pages
+            req.prefill_pos = req.pos = n_cached
+            req.cached_tokens = n_cached
+        need = self.pager.pages_for(n) - len(req.table)
+        try:
+            if need > self.pager.n_free and self.prefix_cache is not None:
+                self.prefix_cache.evict_for(need)
+            req.table += self.pager.alloc(max(need, 0),
+                                          what=f"prompt of {n} tokens")
+        except PagesExhausted:
+            if req.cached_tokens:
+                self.pager.release(req.table)   # undo the lookup retain
+            raise
+        self.slots[slot] = req
+        self._n_requests += 1
+        return req.uid
+
+    # -- the unified step ---------------------------------------------------
+
+    def _grow(self, req: _PagedRequest, pos: int):
+        """Ensure `pos` is backed by a page (decode growth)."""
+        from repro.serve.paging import PagesExhausted
+        pageno = pos // self.serve.page_size
+        if pageno < len(req.table):
+            return
+        try:
+            req.table += self.pager.alloc(1, what=f"decode of req {req.uid}")
+        except PagesExhausted:
+            if self.prefix_cache is None or \
+                    not self.prefix_cache.evict_for(1):
+                raise
+            req.table += self.pager.alloc(
+                1, what=f"decode of req {req.uid}")
+
+    def step(self) -> Dict[int, List[int]]:
+        """One fixed-shape step: a prompt chunk OR one decode token per
+        active row, interleaved freely. Returns finished requests."""
+        from repro.serve import paging as _paging
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return {}
+        t0 = time.perf_counter()
+        self._occupancy.append(len(active) / len(self.slots))
+        b, tchunk, cap = (self.serve.max_batch, self.serve.chunk_size,
+                          self.capacity)
+        psize = self.serve.page_size
+        tokens = np.zeros((b, tchunk), np.int32)
+        positions = np.zeros((b, tchunk), np.int32)
+        write_slots = np.zeros((b, tchunk), np.int32)
+        chunk_pos = np.zeros((b, 2), np.int32)
+        last_row = np.zeros((b,), np.int32)
+        seeds = np.zeros((b,), np.int32)
+        steps = np.zeros((b,), np.int32)
+        tables, lengths = [], []
+        plan = {}   # row -> ("prefill", t_eff) | ("decode",)
+        n_prefill_rows = n_decode_rows = 0
+        for i in range(b):
+            req = self.slots[i]
+            if req is None:
+                tables.append([])
+                lengths.append(0)
+                continue
+            seeds[i] = self.serve.seed + req.uid
+            steps[i] = len(req.generated)
+            if req.prefill_pos < len(req.prompt):
+                pp = req.prefill_pos
+                t_eff = min(tchunk, len(req.prompt) - pp)
+                tokens[i, :t_eff] = req.prompt[pp:pp + t_eff]
+                positions[i] = pp + np.arange(tchunk)
+                write_slots[i, :t_eff] = _paging.flat_slots(
+                    req.table, psize, pp, t_eff)
+                chunk_pos[i] = (pp, t_eff)
+                last_row[i] = t_eff - 1
+                lengths.append(pp + t_eff)
+                plan[i] = ("prefill", t_eff)
+                n_prefill_rows += 1
+            else:
+                pos = req.pos
+                self._grow(req, pos)
+                tokens[i, 0] = (req.generated[-1] if req.generated
+                                else req.prompt[-1])
+                positions[i] = pos + np.arange(tchunk)
+                write_slots[i, 0] = _paging.flat_slots(
+                    req.table, psize, pos, 1)[0]
+                chunk_pos[i] = (pos, 1)
+                last_row[i] = 0
+                lengths.append(pos + 1)
+                plan[i] = ("decode",)
+                n_decode_rows += 1
+            tables.append(req.table)
+        read_slots, slot_pos = _paging.gather_plan(tables, lengths, psize,
+                                                   cap)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "write_slots": jnp.asarray(write_slots),
+                 "read_slots": jnp.asarray(read_slots),
+                 "slot_pos": jnp.asarray(slot_pos),
+                 "chunk_pos": jnp.asarray(chunk_pos),
+                 "last_row": jnp.asarray(last_row),
+                 "seeds": jnp.asarray(seeds),
+                 "steps": jnp.asarray(steps)}
+        with self.tracer.span("step", prefill_rows=n_prefill_rows,
+                              decode_rows=n_decode_rows):
+            tok, self.states = self._step(self.params, self.states, batch)
+            tok = np.asarray(tok)          # (B,) int32 — the ONLY sync
+        dt = time.perf_counter() - t0
+        self._step_lat.append(dt)
+        finished: Dict[int, List[int]] = {}
+        for i, what in plan.items():
+            req = self.slots[i]
+            if what[0] == "prefill":
+                t_eff = what[1]
+                req.prefill_pos += t_eff
+                req.pos = req.prefill_pos
+                self._prefill_tokens += t_eff
+                if req.prefill_pos < len(req.prompt):
+                    continue            # prompt not done; sample discarded
+                req.prefill_s = time.perf_counter() - req.t_added
+                self._prefill_lat.append(req.prefill_s)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(req.prompt, req.table)
+            else:
+                req.pos += 1
+                self._decode_tokens += 1
+                self._decode_time_s += dt / max(len(plan), 1)
+            nxt = int(tok[i])
+            req.generated.append(nxt)
+            hit_eos = (self.serve.eos_id >= 0 and nxt == self.serve.eos_id)
+            if hit_eos or len(req.generated) >= req.max_new_tokens \
+                    or req.pos >= self.serve.max_len - 1:
+                req.t_finished = time.perf_counter()
+                self._n_finished += 1
+                self._req_lat.append(req.t_finished - req.t_added)
+                finished[req.uid] = req.generated
+                self.pager.release(req.table)
+                self.slots[i] = None
+        return finished
+
+    def run_to_completion(self,
+                          max_steps: int = 10_000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            out.update(self.step())
+            if not any(s is not None for s in self.slots):
+                break
+        return out
+
+    # -- telemetry ----------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters + page-pool occupancy + prefix-cache hit rate
+        (jsonable, same shape family as the legacy engine's stats())."""
+        def pct(win, q):
+            return float(np.percentile(np.asarray(win), q)) if win else None
+        out = {
+            "requests": self._n_requests,
+            "finished": self._n_finished,
+            "active": sum(s is not None for s in self.slots),
+            "max_batch": len(self.slots),
+            "slot_occupancy": (float(np.mean(self._occupancy))
+                               if self._occupancy else 0.0),
+            "prefill_tokens": self._prefill_tokens,
+            "decode_tokens": self._decode_tokens,
+            "decode_tokens_per_s": (self._decode_tokens / self._decode_time_s
+                                    if self._decode_time_s > 0 else 0.0),
+            "prefill_latency_s": {"p50": pct(self._prefill_lat, 50),
+                                  "p99": pct(self._prefill_lat, 99)},
+            "step_s": {"p50": pct(self._step_lat, 50),
+                       "p99": pct(self._step_lat, 99)},
+            "request_latency_s": {"p50": pct(self._req_lat, 50),
+                                  "p99": pct(self._req_lat, 99)},
+        }
+        out.update(self.pager.stats())
+        if self.prefix_cache is not None:
+            out.update(self.prefix_cache.stats())
+        return out

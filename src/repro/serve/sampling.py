@@ -1,0 +1,70 @@
+"""On-device batched sampling for the serving engine.
+
+Everything here runs inside the jitted serve step — no host logits
+round-trip. Reproducibility contract: each request's sample stream is a
+pure function of (request seed, n_generated), NOT of its batch row or of
+which other requests share the step — `row_keys` folds the per-request
+seed and per-request step count into an independent PRNG key per row, so
+the same request produces the same tokens whatever batch layout the
+scheduler packed it into (locked by the sampling tests).
+
+Greedy (temperature <= 0) is the argmax special case and bit-matches the
+legacy host-side `np.argmax` on the same logits row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def row_keys(seeds: Array, steps: Array) -> Array:
+    """Per-row PRNG keys from per-request (seed, n_generated) — batch-layout
+    invariant. seeds/steps: (B,) int32/uint32. Returns (B, 2) uint32."""
+    def one(seed, step):
+        return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.vmap(one)(seeds.astype(jnp.uint32), steps.astype(jnp.uint32))
+
+
+def top_k_mask(logits: Array, k: int) -> Array:
+    """Keep the k highest logits per row (ties at the threshold all kept),
+    mask the rest to -inf. k <= 0 disables."""
+    if k <= 0:
+        return logits
+    k = min(k, logits.shape[-1])
+    thresh = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits >= thresh, logits, NEG_INF)
+
+
+def top_p_mask(logits: Array, p: float) -> Array:
+    """Nucleus mask: keep the smallest set of tokens whose probability
+    mass reaches `p` (descending-probability order; the token that crosses
+    the boundary is kept). p >= 1 disables."""
+    if p >= 1.0:
+        return logits
+    sort_idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, sort_idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # Token i survives iff the mass BEFORE it is < p (so the crossing
+    # token is included and the top-1 token always survives).
+    keep_sorted = (cum - probs) < p
+    keep = jnp.zeros_like(keep_sorted).at[
+        jnp.arange(logits.shape[0])[:, None], sort_idx].set(keep_sorted)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample(logits: Array, keys: Array, *, temperature: float,
+           top_k: int = 0, top_p: float = 1.0) -> Array:
+    """Sample one token id per row. logits (B, V); keys (B, 2) uint32 from
+    `row_keys`. temperature <= 0 -> greedy argmax (keys unused)."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.float32(temperature)
+    scaled = top_k_mask(scaled, top_k)
+    scaled = top_p_mask(scaled, top_p)
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)

@@ -222,3 +222,29 @@ def make_serve_decode(cfg: ModelConfig, frozen_scales=None):
         return logits[:, -1:], new_states
 
     return decode
+
+
+def make_serve_chunk(cfg: ModelConfig, frozen_scales=None):
+    """Paged chunked serving step over a block-table KV pool: each batch
+    row carries either a prompt chunk or a single decode token through ONE
+    fixed-shape program (mode='chunk' attention with a gather plan and
+    per-row [start, n_valid] ragged bounds). `serve.engine.PagedServeEngine`
+    builds its jitted step on the same forward call plus on-device
+    sampling; this plain-logits variant is what the launch grid dry-runs.
+
+    batch keys: tokens/positions/write_slots (B, T) int32,
+    read_slots/slot_pos (B, C) int32, chunk_pos (B, 2) int32,
+    last_row (B,) int32. Returns (logits (B, 1, V), new_states)."""
+    ecfg = _eval_cfg(cfg, frozen_scales)
+
+    def chunk_step(params, batch, states):
+        with _maybe_frozen(frozen_scales):
+            page = {k: batch[k] for k in
+                    ("write_slots", "read_slots", "slot_pos", "chunk_pos")}
+            logits, new_states, _ = forward(
+                params, batch["tokens"], cfg=ecfg, mode="chunk",
+                states=states, positions=batch["positions"], page=page,
+                gather_rows=batch["last_row"])
+        return logits, new_states
+
+    return chunk_step

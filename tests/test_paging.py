@@ -1,0 +1,471 @@
+"""Differential serving-parity suite for the paged engine.
+
+Locks the paged serving rebuild's guarantees against the legacy fixed-slot
+engine (kept as the oracle):
+
+  1. Paged decode is BIT-IDENTICAL to the legacy engine — with quantization
+     disabled, and under frozen calibrated scales through the fused Pallas
+     path for BOTH recipes (bf16 KV: the full stream matches for any chunk
+     size; FP8 KV: the decode step matches given the same cache payloads).
+  2. Chunked prefill == monolithic prefill for every chunk size (in-chunk
+     tokens roundtrip through the pool, so the gathered layout IS the
+     contiguous layout).
+  3. The page allocator never aliases live pages and its accounting always
+     balances (hypothesis property tests, slow-marked).
+  4. A prompt that needs more pages than the pool can grant is REFUSED with
+     a structured `PagesExhausted` (and admission rolls back cleanly) —
+     never silently truncated.
+  5. An exact prefix-cache hit produces the same stream as a cold prefill.
+  6. The jitted paged step syncs ONE token id per row — its jaxpr has no
+     vocab-dim output (no per-token host logits transfer).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hyputil import given, settings, st
+
+from repro.core.precision_policy import (BASELINE_POLICY, PrecisionPolicy,
+                                         QuantConfig)
+from repro.models.config import ModelConfig
+from repro.models.registry import build_config
+from repro.models.transformer import init_lm
+from repro.scaling import context as sc
+from repro.scaling.calibrate import calibrate, freeze
+from repro.scaling.state import ScalingConfig
+from repro.serve import (PagedServeConfig, PagedServeEngine, PageAllocator,
+                         PagesExhausted, ServeConfig, ServeEngine)
+from repro.serve.paging import TRASH_PAGE, flat_slots, gather_plan
+from repro.serve.prefix_cache import PrefixCache, scale_fingerprint
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator unit + property tests
+# ---------------------------------------------------------------------------
+
+class TestPageAllocator:
+    def test_deterministic_ascending_handout(self):
+        a = PageAllocator(8, 4)
+        assert a.alloc(3) == [1, 2, 3]
+        a.release([2])
+        a.release([1])
+        # freed pages come back in ascending order too
+        assert a.alloc(3) == [1, 2, 4]
+
+    def test_trash_page_never_handed_out(self):
+        a = PageAllocator(4, 2)
+        assert TRASH_PAGE not in a.alloc(3)
+        with pytest.raises(AssertionError):
+            a.release([TRASH_PAGE])
+
+    def test_all_or_nothing_refusal(self):
+        a = PageAllocator(5, 8)
+        a.alloc(2)
+        free_before = a.n_free
+        with pytest.raises(PagesExhausted) as ei:
+            a.alloc(3)
+        assert (ei.value.needed, ei.value.free) == (3, 2)
+        assert (ei.value.n_pages, ei.value.page_size) == (5, 8)
+        assert a.n_free == free_before      # no partial grant
+        a.check()
+
+    def test_refcount_sharing(self):
+        a = PageAllocator(4, 2)
+        pages = a.alloc(2)
+        a.retain(pages)                     # second owner (prefix cache)
+        a.release(pages)
+        assert a.n_free == 1                # still held once
+        a.release(pages)
+        assert a.n_free == 3
+        with pytest.raises(AssertionError):
+            a.release([pages[0]])           # double release
+        a.check()
+
+    def test_pages_for(self):
+        a = PageAllocator(8, 16)
+        assert [a.pages_for(n) for n in (0, 1, 16, 17, 32)] == [0, 1, 1, 2, 2]
+
+    @pytest.mark.slow
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "release", "retain"]),
+                              st.integers(0, 6)), max_size=60),
+           st.integers(2, 9), st.integers(1, 8))
+    def test_allocator_never_aliases_and_balances(self, ops, n_pages, psize):
+        """Random alloc/retain/release interleavings: a page handed out is
+        never simultaneously live elsewhere, refcount accounting matches a
+        ground-truth shadow model, and check() always passes."""
+        a = PageAllocator(n_pages, psize)
+        shadow = {}                          # page -> refcount ground truth
+        holdings = []                        # alloc'd page lists, refs > 0
+        for op, arg in ops:
+            if op == "alloc":
+                try:
+                    pages = a.alloc(arg)
+                except PagesExhausted:
+                    assert arg > a.n_free    # refusal was genuine
+                    continue
+                for p in pages:
+                    assert p != TRASH_PAGE
+                    assert shadow.get(p, 0) == 0, f"aliased live page {p}"
+                    shadow[p] = 1
+                if pages:
+                    holdings.append(pages)
+            elif holdings:
+                # retain/release whole holdings, so refcounts stay uniform
+                # within each list and never hit zero while still held
+                h = holdings[arg % len(holdings)]
+                if op == "retain":
+                    a.retain(h)
+                    for p in h:
+                        shadow[p] += 1
+                else:
+                    a.release(h)
+                    for p in h:
+                        shadow[p] -= 1
+                    if shadow[h[0]] == 0:
+                        holdings.remove(h)
+            a.check()
+            live_truth = {p for p, c in shadow.items() if c > 0}
+            assert a.n_live == len(live_truth)
+            assert a.n_free == (n_pages - 1) - len(live_truth)
+            assert a.stats()["page_occupancy"] == pytest.approx(
+                len(live_truth) / (n_pages - 1))
+
+
+# ---------------------------------------------------------------------------
+# gather plans
+# ---------------------------------------------------------------------------
+
+class TestGatherPlan:
+    def test_flat_slots_noncontiguous_table(self):
+        # position p lives at table[p // psize] * psize + p % psize
+        got = flat_slots([5, 2, 7], 4, start=2, count=8)
+        expect = [22, 23, 8, 9, 10, 11, 28, 29]
+        assert got.tolist() == expect
+
+    def test_gather_plan_positions_and_holes(self):
+        read, spos = gather_plan([[3, 1], [2]], [6, 2], page_size=4,
+                                 capacity=8)
+        # gathered column i == logical position i
+        assert read[0, :6].tolist() == [12, 13, 14, 15, 4, 5]
+        assert spos[0].tolist() == [0, 1, 2, 3, 4, 5, -1, -1]
+        assert read[1, :2].tolist() == [8, 9]
+        assert spos[1, 2:].tolist() == [-1] * 6
+        # holes read the trash page (slot 0 region) and are masked by -1
+        assert (read[0, 6:] == 0).all() and (read[1, 2:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# prefix cache bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestPrefixCache:
+    def test_fingerprint_sensitivity(self):
+        base = scale_fingerprint({"a#x.A": 0.5}, None, recipe="hybrid",
+                                 kv_format="e5m2")
+        assert base != scale_fingerprint({"a#x.A": 0.25}, None,
+                                         recipe="hybrid", kv_format="e5m2")
+        assert base != scale_fingerprint({"a#x.A": 0.5}, None,
+                                         recipe="paper_e5m2",
+                                         kv_format="e5m2")
+        assert base != scale_fingerprint({"a#x.A": 0.5}, None,
+                                         recipe="hybrid", kv_format=None)
+
+    def test_shareable_pages_leaves_last_token(self):
+        c = PrefixCache(PageAllocator(8, 4), "fp")
+        # a prompt of exactly one page shares nothing: its last token's
+        # logits seed generation and must be recomputed
+        assert [c.shareable_pages(n) for n in (1, 4, 5, 8, 9)] \
+            == [0, 0, 1, 1, 2]
+
+    def test_lookup_retains_and_accounting_balances(self):
+        a = PageAllocator(8, 4)
+        c = PrefixCache(a, "fp")
+        table = a.alloc(3)                   # 10-token prompt: 3 pages
+        prompt = list(range(10))
+        c.insert(prompt, table)              # cache retains table[:2]
+        a.release(table)                     # request finished
+        assert a.n_live == 2                 # cache still holds the prefix
+        pages, n_tok = c.lookup(prompt)
+        assert (pages, n_tok) == (table[:2], 8)
+        assert c.hits == 1
+        a.release(pages)                     # second request finished
+        c.clear()
+        assert a.n_free == 7 and a.n_live == 0
+        a.check()
+
+    def test_evict_for_frees_lru(self):
+        a = PageAllocator(6, 4)
+        c = PrefixCache(a, "fp")
+        for i in range(2):
+            t = a.alloc(2)
+            c.insert([i * 100 + j for j in range(6)], t)
+            a.release(t)
+        assert a.n_free == 3                 # cache pins one page per prompt
+        assert c.evict_for(5)                # forces both entries out, LRU up
+        assert a.n_free == 5
+        a.check()
+
+
+# ---------------------------------------------------------------------------
+# engine differential parity (quantization disabled: exact by construction)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=[True, False],
+                ids=["scan", "unscanned"])
+def baseline_setup(request):
+    cfg = build_config("qwen2-1.5b", smoke=True).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, policy=BASELINE_POLICY,
+        scan_layers=request.param)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve_paged(cfg, params, prompts, *, max_new=4, chunk_size=8,
+                 page_size=4, n_pages=48, prefix_cache=False, **kw):
+    eng = PagedServeEngine(cfg, params, PagedServeConfig(
+        max_batch=max(len(prompts), 1), max_len=64, n_pages=n_pages,
+        page_size=page_size, chunk_size=chunk_size,
+        prefix_cache=prefix_cache), **kw)
+    uids = [eng.add_request(p, max_new_tokens=max_new) for p in prompts]
+    out = eng.run_to_completion()
+    return [out[u] for u in uids], eng
+
+
+def _serve_legacy(cfg, params, prompts, *, max_new=4, **kw):
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=max(len(prompts), 1), max_len=64), **kw)
+    uids = [eng.add_request(p, max_new_tokens=max_new) for p in prompts]
+    out = eng.run_to_completion()
+    return [out[u] for u in uids], eng
+
+
+class TestPagedLegacyParity:
+    def test_paged_matches_legacy_bitwise(self, baseline_setup):
+        """Same prompts, both engines, greedy: identical token streams —
+        for the scanned AND unscanned stack layouts."""
+        cfg, params = baseline_setup
+        prompts = [np.arange(9) % cfg.vocab_size,
+                   (np.arange(6) * 3 + 1) % cfg.vocab_size]
+        ref, _ = _serve_legacy(cfg, params, prompts)
+        got, eng = _serve_paged(cfg, params, prompts)
+        assert got == ref
+        # all pages returned to the pool afterwards
+        assert eng.pager.n_live == 0
+        eng.pager.check()
+
+    def test_chunked_equals_monolithic_prefill(self, baseline_setup):
+        """The chunk size is invisible: 1-token, ragged, and whole-prompt
+        prefill chunks produce the same stream."""
+        cfg, params = baseline_setup
+        if not cfg.scan_layers:
+            pytest.skip("layout-independent; scanned fixture covers it")
+        prompts = [np.arange(11) % cfg.vocab_size]
+        streams = [_serve_paged(cfg, params, prompts, chunk_size=c)[0]
+                   for c in (1, 3, 16)]
+        assert streams[0] == streams[1] == streams[2]
+
+    def test_merge_slot_unscanned_regression(self, baseline_setup):
+        """`_merge_slot` must slice the BATCH dim of every state leaf:
+        dim 1 for scanned `stack_*` groups (leading group dim), dim 0 for
+        unscanned `layer_*`/`rem_*` leaves. (The old code guessed from leaf
+        rank — always dim 1 — so unscanned KV caches merged along their
+        LENGTH axis: every slot kept only its first cached token and decode
+        walked off garbage; caught by the paged-vs-legacy differential.)"""
+        cfg, _ = baseline_setup
+        if not cfg.scan_layers:
+            pytest.skip("covers both layouts itself; run once")
+        from repro.models.transformer import init_stack_state
+        from repro.serve.engine import _merge_slot
+        for scan in (True, False):
+            old = init_stack_state(cfg.replace(scan_layers=scan), 2,
+                                   max_len=16, n_layers=cfg.n_layers)
+            new = jax.tree_util.tree_map(jnp.ones_like, old)
+            merged = _merge_slot(old, new, 1)
+            keys = set(merged)
+            assert any(k.startswith("stack_" if scan else "layer_")
+                       for k in keys), keys
+            for key, sub in merged.items():
+                bdim = 1 if key.startswith("stack_") else 0
+                for leaf, was in zip(jax.tree_util.tree_leaves(sub),
+                                     jax.tree_util.tree_leaves(old[key])):
+                    if leaf.ndim <= bdim or leaf.shape[bdim] != 2:
+                        continue
+                    got = np.moveaxis(np.asarray(leaf, np.float32), bdim, 0)
+                    before = np.moveaxis(np.asarray(was, np.float32),
+                                         bdim, 0)
+                    assert (got[1] == 1).all(), f"{key}: slot 1 not merged"
+                    assert (got[0] == before[0]).all(), \
+                        f"{key}: slot 0 clobbered (wrong batch dim)"
+
+    def test_prefix_cache_hit_equals_cold(self, baseline_setup):
+        """Second serve of the same prompt splices cached pages — and
+        produces the identical stream."""
+        cfg, params = baseline_setup
+        if not cfg.scan_layers:
+            pytest.skip("layout-independent; scanned fixture covers it")
+        prompt = np.arange(13) % cfg.vocab_size
+        eng = PagedServeEngine(cfg, params, PagedServeConfig(
+            max_batch=1, max_len=64, n_pages=48, page_size=4,
+            chunk_size=8, prefix_cache=True))
+        u1 = eng.add_request(prompt, max_new_tokens=4)
+        cold = eng.run_to_completion()[u1]
+        u2 = eng.add_request(prompt, max_new_tokens=4)
+        warm = eng.run_to_completion()[u2]
+        assert warm == cold
+        s = eng.stats()
+        assert s["prefix_cache_hits"] == 1
+        assert s["prefix_cache_hit_rate"] == pytest.approx(0.5)
+
+    def test_pages_exhausted_refusal_and_rollback(self, baseline_setup):
+        """A prompt needing more pages than allocatable is refused with the
+        structured error; the engine state rolls back (slot free, allocator
+        balanced) and smaller requests still admit."""
+        cfg, params = baseline_setup
+        if not cfg.scan_layers:
+            pytest.skip("layout-independent; scanned fixture covers it")
+        eng = PagedServeEngine(cfg, params, PagedServeConfig(
+            max_batch=2, max_len=64, n_pages=4, page_size=4,
+            chunk_size=8, prefix_cache=True))
+        with pytest.raises(PagesExhausted) as ei:
+            eng.add_request(np.arange(20), max_new_tokens=2)
+        assert ei.value.needed == 5 and ei.value.free == 3
+        assert len(eng.free_slots()) == 2       # admission rolled back
+        eng.pager.check()
+        assert eng.pager.n_live == 0
+        uid = eng.add_request(np.arange(6), max_new_tokens=2)
+        assert uid in eng.run_to_completion()
+
+    def test_step_jaxpr_has_no_logits_output(self, baseline_setup):
+        """The no-host-sync proof: the jitted step's output avals contain
+        the (B,) sampled tokens and the KV pools — NO vocab-dim array ever
+        crosses the jit boundary, so decode cannot be doing a per-token
+        host logits transfer."""
+        cfg, params = baseline_setup
+        if not cfg.scan_layers:
+            pytest.skip("layout-independent; scanned fixture covers it")
+        eng = PagedServeEngine(cfg, params, PagedServeConfig(
+            max_batch=2, max_len=64, n_pages=12, page_size=4,
+            chunk_size=8))
+        b, t, cap = 2, 8, eng.capacity
+        sds = jnp.zeros
+        batch = {"tokens": sds((b, t), jnp.int32),
+                 "positions": sds((b, t), jnp.int32),
+                 "write_slots": sds((b, t), jnp.int32),
+                 "read_slots": sds((b, cap), jnp.int32),
+                 "slot_pos": sds((b, cap), jnp.int32),
+                 "chunk_pos": sds((b, 2), jnp.int32),
+                 "last_row": sds((b,), jnp.int32),
+                 "seeds": sds((b,), jnp.int32),
+                 "steps": sds((b,), jnp.int32)}
+        jaxpr = jax.make_jaxpr(
+            lambda p, s, bt: eng._step.__wrapped__(p, s, bt))(
+            params, eng.states, batch)
+        vocab = cfg.padded_vocab_size
+        bad = [a for a in jaxpr.out_avals
+               if len(a.shape) >= 2 and a.shape[-1] == vocab]
+        assert not bad, f"vocab-dim outputs leak from the step: {bad}"
+        assert jaxpr.out_avals[0].shape == (b,)    # the sampled tokens
+
+
+# ---------------------------------------------------------------------------
+# frozen-scale fused parity (the production FP8 serving path, both recipes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["hybrid", "paper_e5m2"])
+def frozen_setup(request):
+    """Tiny unscanned LM on the fused Pallas path (interpret backend),
+    calibrated and frozen — deterministic RNE serving, bf16 KV cache (the
+    configuration under which paged/legacy parity is exact for the FULL
+    stream; FP8-KV chunked prefill reads payload bytes where legacy prefill
+    attends raw bf16, a documented semantic difference)."""
+    quant = QuantConfig(recipe=request.param, scaling="delayed",
+                        backend="pallas_interpret")
+    pol = PrecisionPolicy(quant=quant)
+    cfg = ModelConfig(arch="t", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=64,
+                      max_seq_len=64, policy=pol, remat=False,
+                      scan_layers=False)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, 64, (2, 12)),
+                                      jnp.int32)} for _ in range(2)]
+    ds, state = calibrate(params, cfg, batches,
+                          scaling_cfg=ScalingConfig(margin=1.0))
+    return cfg, params, freeze(ds, state)
+
+
+class TestFrozenFusedParity:
+    def test_paged_matches_legacy_bitwise(self, frozen_setup):
+        """THE acceptance criterion: under frozen calibrated scales the
+        paged engine's streams are bit-identical to the legacy engine's,
+        through the fused FP8 kernel, for both recipes and for decode-only
+        (chunk=1) AND chunked-prefill schedules."""
+        cfg, params, frozen = frozen_setup
+        prompts = [np.array([3, 5, 7, 11, 13, 17, 19], np.int32),
+                   np.array([2, 4, 6], np.int32)]
+        ref, _ = _serve_legacy(cfg, params, prompts, max_new=4,
+                               frozen_scales=frozen)
+        for chunk in (1, 16):
+            got, _ = _serve_paged(cfg, params, prompts, max_new=4,
+                                  chunk_size=chunk,
+                                  frozen_scales=frozen)
+            assert got == ref, f"stream diverged at chunk_size={chunk}"
+
+    def test_fp8_kv_decode_step_parity(self, frozen_setup):
+        """FP8 KV: given the SAME cache payload bytes, the paged chunk op
+        at T=1 is bitwise the legacy decode op — the paged layout adds
+        nothing on top of the payloads (op-level cache injection; the
+        engine-level stream comparison is bf16-KV because chunked prefill
+        reads payloads where legacy prefill attends raw K/V)."""
+        cfg, params, frozen = frozen_setup
+        from repro.core.qattention import fp8_sdpa_chunk, fp8_sdpa_decode
+        qcfg = cfg.policy.quant.eval_mode()
+        qcfg = dataclasses.replace(qcfg, scaling="delayed")
+        b, h, hkv, dh, c = 2, 4, 2, 16, 24
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.normal(size=(b, h, 1, dh)) * 0.3, jnp.bfloat16)
+        k8, v8 = [jnp.asarray(rng.normal(size=(b, hkv, c, dh)) * 0.3,
+                              jnp.bfloat16).astype(jnp.float8_e5m2)
+                  for _ in range(2)]
+        lengths = jnp.array([13, 20])
+        scales = {f"sdpa#{n}.A": s for n, s in
+                  zip(("q", "k", "v", "qk", "p"),
+                      (0.5, 0.5, 0.5, 4.0, 1.0))}
+        with sc.activate(sc.frozen_context(scales)):
+            valid = jnp.arange(c)[None, :] < lengths[:, None]
+            o_dec = fp8_sdpa_decode(q, k8, v8, valid, cfg=qcfg,
+                                    sm_scale=0.25, key=jax.random.PRNGKey(3),
+                                    k_cache_scale=0.7, v_cache_scale=0.9,
+                                    site="sdpa")
+            # paged view: positions where valid, -1 holes; q at pos len-1
+            spos = jnp.where(valid, jnp.arange(c)[None, :], -1)
+            cpos = jnp.stack([lengths - 1, jnp.ones_like(lengths)], 1)
+            o_chunk = fp8_sdpa_chunk(q, k8, v8, spos.astype(jnp.int32),
+                                     cpos.astype(jnp.int32), cfg=qcfg,
+                                     sm_scale=0.25,
+                                     key=jax.random.PRNGKey(3),
+                                     k_cache_scale=0.7, v_cache_scale=0.9,
+                                     site="sdpa")
+        np.testing.assert_array_equal(
+            np.asarray(o_dec).view(np.uint16),
+            np.asarray(o_chunk).view(np.uint16))
+
+    def test_prefix_cache_hit_equals_cold_frozen(self, frozen_setup):
+        cfg, params, frozen = frozen_setup
+        prompt = np.array([9, 8, 7, 6, 5, 4, 3, 2, 1], np.int32)
+        eng = PagedServeEngine(cfg, params, PagedServeConfig(
+            max_batch=1, max_len=64, n_pages=48, page_size=4,
+            chunk_size=8, prefix_cache=True), frozen_scales=frozen)
+        u1 = eng.add_request(prompt, max_new_tokens=3)
+        cold = eng.run_to_completion()[u1]
+        u2 = eng.add_request(prompt, max_new_tokens=3)
+        warm = eng.run_to_completion()[u2]
+        assert warm == cold
+        assert eng.stats()["prefix_cache_hits"] == 1

@@ -1,0 +1,112 @@
+"""On-device sampling: exact top-k/top-p masks, greedy == host argmax,
+batch-layout-invariant PRNG streams."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampling import (NEG_INF, row_keys, sample, top_k_mask,
+                                  top_p_mask)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestGreedy:
+    def test_temperature_zero_is_host_argmax(self):
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.normal(size=(5, 97)), jnp.float32)
+        keys = row_keys(jnp.arange(5, dtype=jnp.int32),
+                        jnp.zeros(5, jnp.int32))
+        got = np.asarray(sample(logits, keys, temperature=0.0))
+        ref = np.asarray(logits).argmax(-1)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_top_k_one_is_greedy(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.normal(size=(4, 33)), jnp.float32)
+        keys = row_keys(jnp.arange(4, dtype=jnp.int32),
+                        jnp.zeros(4, jnp.int32))
+        got = np.asarray(sample(logits, keys, temperature=1.0, top_k=1))
+        np.testing.assert_array_equal(got, np.asarray(logits).argmax(-1))
+
+
+class TestMasks:
+    def test_top_k_exact(self):
+        logits = jnp.asarray([[5.0, 1.0, 3.0, 4.0, 2.0]])
+        out = np.asarray(top_k_mask(logits, 2))
+        np.testing.assert_array_equal(
+            out, [[5.0, NEG_INF, NEG_INF, 4.0, NEG_INF]])
+        # ties at the threshold are all kept
+        tied = jnp.asarray([[3.0, 3.0, 1.0, 0.0]])
+        out = np.asarray(top_k_mask(tied, 2))
+        np.testing.assert_array_equal(out, [[3.0, 3.0, NEG_INF, NEG_INF]])
+        # k <= 0 and k >= vocab disable
+        np.testing.assert_array_equal(np.asarray(top_k_mask(logits, 0)),
+                                      np.asarray(logits))
+        np.testing.assert_array_equal(np.asarray(top_k_mask(logits, 99)),
+                                      np.asarray(logits))
+
+    def test_top_p_exact(self):
+        # probs = [0.5, 0.25, 0.125, 0.125] by construction
+        logits = jnp.log(jnp.asarray([[0.5, 0.25, 0.125, 0.125]]))
+        # p = 0.6: 0.5 alone misses 0.6, so the crossing token (0.25) is
+        # kept; the tail is cut
+        out = np.asarray(top_p_mask(logits, 0.6))
+        keep = out > NEG_INF / 2
+        np.testing.assert_array_equal(keep, [[True, True, False, False]])
+        # p smaller than the top prob: top-1 always survives
+        out = np.asarray(top_p_mask(logits, 0.1))
+        keep = out > NEG_INF / 2
+        np.testing.assert_array_equal(keep, [[True, False, False, False]])
+        # p >= 1 disables
+        np.testing.assert_array_equal(np.asarray(top_p_mask(logits, 1.0)),
+                                      np.asarray(logits))
+
+    def test_top_p_keeps_unmasked_values(self):
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.normal(size=(3, 17)), jnp.float32)
+        out = np.asarray(top_p_mask(logits, 0.8))
+        keep = out > NEG_INF / 2
+        # surviving entries carry their original logits
+        np.testing.assert_array_equal(out[keep], np.asarray(logits)[keep])
+        assert keep.any(axis=-1).all()
+
+
+class TestLayoutInvariance:
+    def test_row_keys_depend_only_on_seed_and_step(self):
+        k1 = np.asarray(row_keys(jnp.asarray([7, 9], jnp.int32),
+                                 jnp.asarray([3, 0], jnp.int32)))
+        k2 = np.asarray(row_keys(jnp.asarray([1, 7, 5], jnp.int32),
+                                 jnp.asarray([0, 3, 2], jnp.int32)))
+        np.testing.assert_array_equal(k1[0], k2[1])   # same (7, 3) pair
+        assert not np.array_equal(k1[0], k1[1])
+
+    def test_same_key_same_sample_across_batch_layouts(self):
+        """A request's sampled token is a function of (seed, step, logits
+        row) only — not of its batch row or of which rows share the step."""
+        rng = np.random.default_rng(3)
+        row = rng.normal(size=(1, 64)).astype(np.float32)
+        noise = rng.normal(size=(7, 64)).astype(np.float32)
+
+        def draw(batch_rows, position):
+            logits = np.concatenate([noise[:position], row,
+                                     noise[position:batch_rows - 1]])
+            seeds = np.arange(100, 100 + batch_rows, dtype=np.int32)
+            seeds[position] = 42
+            steps = np.arange(batch_rows, dtype=np.int32)
+            steps[position] = 5
+            toks = sample(jnp.asarray(logits),
+                          row_keys(jnp.asarray(seeds), jnp.asarray(steps)),
+                          temperature=0.9, top_k=20, top_p=0.95)
+            return int(np.asarray(toks)[position])
+
+        draws = {draw(1, 0), draw(4, 0), draw(4, 3), draw(8, 5)}
+        assert len(draws) == 1
+
+    def test_different_steps_decorrelate(self):
+        logits = jnp.zeros((1, 1024))        # uniform: draws expose the key
+        toks = [int(np.asarray(sample(
+            logits, row_keys(jnp.asarray([1], jnp.int32),
+                             jnp.asarray([s], jnp.int32)),
+            temperature=1.0))[0]) for s in range(8)]
+        assert len(set(toks)) > 1
