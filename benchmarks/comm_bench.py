@@ -1,0 +1,165 @@
+"""Wire-format communication benchmark: fp8_ef vs full DP reduction.
+
+  PYTHONPATH=src python -m benchmarks.comm_bench            # full sweep
+  PYTHONPATH=src python -m benchmarks.comm_bench --smoke    # CI nightly
+
+Per data-parallel size (2 / 4 / 8 host devices): wire bytes of the DP
+gradient reduction (bf16 baseline vs the e5m2 error-feedback collective —
+the fp8 payloads are real 1-byte dtypes in the HLO, so the model ratio is
+what actually moves), wall-clock of both collectives on a grad-sized
+pytree, and a tiny end-to-end train-step A/B (policy.dist.wire full vs
+fp8_ef) with the loss divergence after a few steps. Results join the
+perf trajectory as BENCH_comm.json.
+
+Must own the process: forces an 8-device host platform before the first
+jax import (benchmarks.run invokes it as a subprocess for this reason).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _median_time(fn, *args, iters=5):
+    import jax
+    jax.block_until_ready(fn(*args))          # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_collectives(dp_sizes, *, leaf_shapes, iters):
+    """Sweep the stacked-contract collectives over dp sizes."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core.precision_policy import DistConfig
+    from repro.distributed.grad_compress import wire_bytes_model
+    from repro.distributed.strategy import ParallelPlan
+
+    rng = np.random.default_rng(0)
+    grads = {f"w{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+             for i, s in enumerate(leaf_shapes)}
+    rows = []
+    for dp in dp_sizes:
+        if dp > jax.device_count():
+            continue
+        mesh = Mesh(np.array(jax.devices()[:dp]), ("data",))
+        plan = ParallelPlan.build(mesh, DistConfig(wire="fp8_ef"))
+        stacked = jax.tree_util.tree_map(
+            lambda g: jnp.broadcast_to(g[None], (dp,) + g.shape), grads)
+        err = jax.tree_util.tree_map(
+            lambda g: jnp.zeros((dp,) + g.shape, jnp.float32), grads)
+        full = jax.jit(plan.dp_allreduce(wire="full"))
+        fp8 = jax.jit(plan.dp_allreduce(wire="fp8_ef"))
+        # correctness: identical contributions -> compressed mean == leaf
+        red, _ = fp8(stacked, err)
+        rel = max(float(jnp.max(jnp.abs(r - g))
+                        / jnp.maximum(jnp.max(jnp.abs(g)), 1e-9))
+                  for r, g in zip(jax.tree_util.tree_leaves(red),
+                                  jax.tree_util.tree_leaves(grads)))
+        row = dict(dp=dp,
+                   t_full_s=_median_time(full, stacked, err, iters=iters),
+                   t_fp8_s=_median_time(fp8, stacked, err, iters=iters),
+                   max_rel_err=rel,
+                   **wire_bytes_model(grads, dp))
+        print(f"comm,dp={dp},ratio={row['ratio_fp8_vs_bf16']:.3f},"
+              f"t_full={row['t_full_s']:.4f}s,t_fp8={row['t_fp8_s']:.4f}s,"
+              f"rel_err={rel:.2e}")
+        rows.append(row)
+    return rows
+
+
+def bench_train_step(*, steps, iters):
+    """End-to-end A/B: the same tiny model trained with wire=full vs
+    wire=fp8_ef on the widest available dp mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core.loss_scale import LossScaler
+    from repro.core.precision_policy import DistConfig
+    from repro.models.registry import build_config
+    from repro.models.transformer import init_lm
+    from repro.train.step import make_optimizer_for, make_train_step
+
+    dp = jax.device_count()
+    if dp < 2:
+        return None
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    cfg = build_config("qwen2-1.5b", smoke=True).replace(remat=False)
+    opt = make_optimizer_for(cfg, scaler=LossScaler(mode="enhanced",
+                                                    init_scale=2.0**8))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    state0 = opt.init(params)
+    rng = np.random.default_rng(1)
+    B, T = 2 * dp, 32
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (B, T), dtype=np.int32),
+             "labels": rng.integers(0, cfg.vocab_size, (B, T),
+                                    dtype=np.int32),
+             "loss_mask": np.ones((B, T), np.float32)}
+
+    from repro.distributed.strategy import ParallelPlan
+    plan_f = ParallelPlan.build(mesh, DistConfig(wire="full"))
+    plan_w = ParallelPlan.build(mesh, DistConfig(wire="fp8_ef"))
+    step_f = jax.jit(make_train_step(cfg, opt, plan=plan_f))
+    step_w = jax.jit(make_train_step(cfg, opt, plan=plan_w))
+    key = jax.random.PRNGKey(2)
+
+    sf, lf = state0, None
+    sw, lw = state0, None
+    err = plan_w.init_wire_state(state0.master)
+    for i in range(steps):
+        k = jax.random.fold_in(key, i)
+        sf, mf = step_f(sf, batch, k)
+        (sw, err), mw = step_w(sw, err, batch, k)
+        lf, lw = float(mf["loss"]), float(mw["loss"])
+    t_full = _median_time(step_f, sf, batch, key, iters=iters)
+    t_fp8 = _median_time(step_w, sw, err, batch, key, iters=iters)
+    out = dict(dp=dp, steps=steps, t_full_s=t_full, t_fp8_s=t_fp8,
+               loss_full=lf, loss_fp8=lw,
+               loss_rel_diff=abs(lw - lf) / max(abs(lf), 1e-9),
+               wire_bytes=plan_w.wire_bytes(state0.master))
+    print(f"comm,train_step,dp={dp},t_full={t_full:.4f}s,t_fp8={t_fp8:.4f}s,"
+          f"loss_rel_diff={out['loss_rel_diff']:.3e}")
+    return out
+
+
+def bench_comm(smoke: bool = False):
+    import jax
+
+    from benchmarks.common import save_bench
+    leaf_shapes = [(128, 128), (333,), (64, 65)] if smoke \
+        else [(512, 512), (512, 512), (2048, 513), (4099,)]
+    iters = 3 if smoke else 7
+    payload = {
+        "device_count": jax.device_count(),
+        "platform": jax.devices()[0].platform,
+        "smoke": smoke,
+        "sweep": bench_collectives((2, 4, 8), leaf_shapes=leaf_shapes,
+                                   iters=iters),
+        "train_step": bench_train_step(steps=4 if smoke else 8, iters=iters),
+    }
+    save_bench("comm", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes (CI nightly)")
+    args = ap.parse_args(argv)
+    bench_comm(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

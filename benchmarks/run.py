@@ -5,11 +5,24 @@
 
 Prints name,value CSV lines; detailed JSON under experiments/bench/.
 """
+import subprocess
 import sys
 import time
 
 from benchmarks import paper_tables
 from benchmarks.kernel_bench import bench_kernels, bench_speed
+
+
+def bench_comm():
+    """Wire-format collectives need an 8-device host platform, which must be
+    set before jax initializes — run the comm bench in its own process."""
+    import os
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu", PYTHONPATH="src")
+    subprocess.run([sys.executable, "-m", "benchmarks.comm_bench", "--smoke"],
+                   check=True, env=env)
+
 
 ALL = {
     "table1": paper_tables.bench_table1,
@@ -23,6 +36,8 @@ ALL = {
     # reduced-scale training tokens/s and step time.
     "kernels": bench_kernels,
     "speed": bench_speed,
+    # Wire-format collectives: fp8_ef vs full DP reduction (BENCH_comm.json).
+    "comm": bench_comm,
 }
 
 

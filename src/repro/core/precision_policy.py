@@ -185,9 +185,51 @@ HYBRID_DELAYED_FP8 = QuantConfig(               # the production recipe:
 
 
 @dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Static parallelism policy — which strategies compose into the
+    ParallelPlan (distributed.strategy) and what format the collectives put
+    on the wire.
+
+    The plan object owns the mesh-specific derivations (PartitionSpecs,
+    collective implementations); this config is the pure-policy half that
+    rides on PrecisionPolicy so launch overrides spell it
+    `--set policy.dist.wire=fp8_ef` exactly like the quant knobs.
+    """
+    dp: bool = True              # data parallelism over ('pod', 'data')
+    zero1: bool = True           # ZeRO-1: master+optimizer sharded over 'data'
+    tp: bool = True              # Megatron tensor parallelism over 'model'
+    # Wire format of the data-parallel gradient reduction:
+    #   "full"   — XLA's native all-reduce (bf16/f32 on the wire).
+    #   "fp8_ef" — e5m2-compressed all-reduce with error feedback
+    #              (distributed.grad_compress): half the bytes of bf16 on
+    #              the slowest (inter-pod) link; the residual pytree rides
+    #              the train state and is checkpointed.
+    wire: str = "full"
+    # ZeRO-1 weight all-gather leg (master shards -> full compute params):
+    #   "full" — bf16 gather (XLA native).
+    #   "fp8"  — e4m3 payload gather with a shared per-leaf scale: the
+    #            frozen-format weight shards move at 1 byte/element.
+    wire_zero_gather: str = "full"
+    # Mesh axis the compressed reduction runs over. None = the slowest
+    # data-parallel link present ('pod' if in the mesh, else 'data'); the
+    # remaining dp axes reduce in full precision first (fast intra-pod ICI).
+    wire_axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.wire not in ("full", "fp8_ef"):
+            raise ValueError(f"unknown wire format {self.wire!r}")
+        if self.wire_zero_gather not in ("full", "fp8"):
+            raise ValueError(
+                f"unknown zero-gather format {self.wire_zero_gather!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
     """Model-level policy: where FP8 applies and master-weight precision."""
     quant: QuantConfig = PAPER_FP8
+    # Parallelism policy: strategy composition + collective wire formats
+    # (consumed by distributed.strategy.ParallelPlan.build).
+    dist: DistConfig = DistConfig()
     # Paper §4: first conv & last FC stay at 16-bit. LM analogue: embedding
     # table and logits head.
     quantize_embedding: bool = False

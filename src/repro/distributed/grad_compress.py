@@ -6,32 +6,41 @@ data-parallel gradient reduction across the pod boundary — the slowest link
 in a multi-pod mesh (DCN / inter-pod ICI), and the collective the roofline
 shows dominating multi-pod training steps.
 
-Algorithm (per gradient leaf, executed under shard_map over the pod axis):
+Algorithm (per gradient leaf, executed under shard_map over the wire axis):
 
   1. e      <- error-feedback buffer (f32, same shape as grad)
   2. y      =  g + e
-  3. scale  =  pmax(amax(|y|)) / E5M2_max      (shared scale: decode-correct)
-  4. q      =  RNE_e5m2(y / scale)             (1 byte/element on the wire)
+  3. scale  =  pmax(amax(|y|)) / fmt.max_normal  (shared scale: decode-correct)
+  4. q      =  RNE_fp8(y / scale)                (1 byte/element on the wire)
   5. reduce-scatter in FP8: all_to_all the fp8 shards (1B/elt), upcast to
      f32 locally, sum — single-hop summation, so precision loss is one
      quantization, not log(N) re-quantizations.
-  6. q2     =  RNE_e5m2(partial_sum / (scale * n))   ; all_gather q2 (1B/elt)
-  7. out    =  dequant                                ; e' = y - dequant(q)
+  6. q2     =  RNE_fp8(partial_sum / scale2)     ; all_gather q2 (1B/elt)
+  7. out    =  dequant                           ; e' = y - dequant(q)
+
+The payloads really are 8-bit dtypes (f8e5m2 / f8e4m3fn), so the collective
+bytes in the lowered HLO are the wire bytes — `launch.dryrun.parse_collectives`
+counts them at 1 byte/element.
 
 Wire bytes: 2 x (N-1)/N x |g| x 1 byte — half of a bf16 ring all-reduce,
 quarter of f32. Error feedback makes the compression unbiased over time
 (residuals re-enter the next step), the standard convergence fix for lossy
 gradient compression.
+
+`make_compressed_dp_allreduce` is the shard_map-wrapped entry point used by
+`train/step.py` when `policy.dist.wire == "fp8_ef"`; it operates on the
+STACKED layout (leaves carry a leading per-wire-device axis holding each
+device's local contribution and its error-feedback residual).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.fp8_formats import E5M2
+from repro.core.fp8_formats import E5M2, FloatFormat
 from repro.core.quantize import quantize_rne
 
 Array = jax.Array
@@ -41,7 +50,15 @@ def _amax(x: Array) -> Array:
     return jnp.max(jnp.abs(x.astype(jnp.float32)))
 
 
-def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
+def _to_wire(q: Array, fmt: FloatFormat) -> Array:
+    """Values already on the fmt grid -> the real 8-bit dtype (exact cast),
+    so the collective moves 1 byte/element for real. Formats wider than 8
+    bits (ablations) ship in their own dtype."""
+    return q.astype(fmt.dtype)
+
+
+def fp8_allreduce_mean(y: Array, *, axis_name: str,
+                       fmt: FloatFormat = E5M2) -> Tuple[Array, Array]:
     """Compressed all-reduce-mean of y over `axis_name` (inside shard_map).
 
     Returns (mean, dequantized_local_contribution) — the caller computes the
@@ -51,11 +68,11 @@ def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
     # spelling and constant-folds to a static int under shard_map/pmap.
     n = jax.lax.axis_size(axis_name) \
         if hasattr(jax.lax, "axis_size") else jax.lax.psum(1, axis_name)
-    scale = jax.lax.pmax(_amax(y), axis_name) / E5M2.max_normal
+    scale = jax.lax.pmax(_amax(y), axis_name) / fmt.max_normal
     scale = jnp.maximum(scale, 1e-30)
-    q = quantize_rne(y / scale, E5M2, saturate=True)        # local fp8
+    q = quantize_rne(y / scale, fmt, saturate=True)          # local fp8 grid
 
-    flat = q.reshape(-1)
+    flat = _to_wire(q, fmt).reshape(-1)
     pad = (-flat.shape[0]) % n
     if pad:
         flat = jnp.pad(flat, (0, pad))
@@ -66,9 +83,9 @@ def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
     partial = recv.astype(jnp.float32).sum(axis=0) * scale   # (chunk,) f32
     # all-gather leg: re-quantize the reduced shard, 1B/elt again
     scale2 = jnp.maximum(jax.lax.pmax(_amax(partial), axis_name)
-                         / E5M2.max_normal, 1e-30)
-    q2 = quantize_rne(partial / scale2, E5M2, saturate=True)
-    gathered = jax.lax.all_gather(q2, axis_name)             # (n, chunk) fp8
+                         / fmt.max_normal, 1e-30)
+    q2 = quantize_rne(partial / scale2, fmt, saturate=True)
+    gathered = jax.lax.all_gather(_to_wire(q2, fmt), axis_name)  # (n, chunk)
     total = gathered.astype(jnp.float32).reshape(-1) * scale2
     if pad:
         total = total[:-pad]
@@ -78,7 +95,8 @@ def fp8_allreduce_mean(y: Array, *, axis_name: str) -> Tuple[Array, Array]:
 
 
 def compressed_psum_mean(grads: Any, error: Optional[Any], *,
-                         axis_name: str) -> Tuple[Any, Any]:
+                         axis_name: str,
+                         fmt: FloatFormat = E5M2) -> Tuple[Any, Any]:
     """Tree-wise compressed mean-reduce with error feedback.
 
     grads: pytree of per-device gradient shards (inside shard_map over
@@ -91,7 +109,7 @@ def compressed_psum_mean(grads: Any, error: Optional[Any], *,
 
     def one(g, e):
         y = g.astype(jnp.float32) + e
-        mean, local = fp8_allreduce_mean(y, axis_name=axis_name)
+        mean, local = fp8_allreduce_mean(y, axis_name=axis_name, fmt=fmt)
         return mean.astype(g.dtype), y - local
 
     pairs = jax.tree_util.tree_map(one, grads, error)
@@ -102,20 +120,80 @@ def compressed_psum_mean(grads: Any, error: Optional[Any], *,
     return reduced, new_err
 
 
-def make_compressed_dp_allreduce(mesh, *, axis_name: str = "pod"):
-    """shard_map-wrapped compressed all-reduce over one mesh axis; other axes
-    pass through. Usable as a drop-in on a gradient pytree whose leaves are
-    replicated over `axis_name` — e.g. after per-pod reduction, before the
-    optimizer."""
+def make_compressed_dp_allreduce(mesh, *, axis_name: str = "pod",
+                                 fmt: FloatFormat = E5M2,
+                                 auto: frozenset = frozenset()):
+    """shard_map-wrapped compressed all-reduce over one mesh axis.
+
+    Stacked contract (how the train step hands per-device values across a
+    shard_map boundary): every leaf of `grads` and `error` carries a leading
+    axis of size mesh.shape[axis_name], sharded PartitionSpec(axis_name) —
+    slot i is device i's local contribution / residual. Returns
+
+        (reduced, new_error)
+
+    with `reduced` the replicated compressed mean (leading axis dropped) and
+    `new_error` the updated residuals, stacked like the input. Mesh axes not
+    named stay untouched: the inputs must be replicated over them (true after
+    the caller's full-precision intra-pod pre-reduction).
+    """
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
 
     def allreduce(grads, error):
         def inner(g, e):
-            return compressed_psum_mean(g, e, axis_name=axis_name)
-        specs = jax.tree_util.tree_map(lambda _: P(), grads)
-        return jax.shard_map(inner, mesh=mesh,
-                             in_specs=(specs, specs),
-                             out_specs=(specs, specs),
-                             check_vma=False)(grads, error)
+            g0 = jax.tree_util.tree_map(lambda x: jnp.squeeze(x, 0), g)
+            e0 = jax.tree_util.tree_map(lambda x: jnp.squeeze(x, 0), e)
+            red, new_err = compressed_psum_mean(g0, e0, axis_name=axis_name,
+                                                fmt=fmt)
+            return red, jax.tree_util.tree_map(lambda x: x[None], new_err)
+
+        stacked = jax.tree_util.tree_map(lambda _: P(axis_name), grads)
+        rep = jax.tree_util.tree_map(lambda _: P(), grads)
+        return shard_map_compat(inner, mesh,
+                                in_specs=(stacked, stacked),
+                                out_specs=(rep, stacked),
+                                auto=auto)(grads, error)
 
     return allreduce
+
+
+def make_full_dp_allreduce(mesh, *, axis_name: str = "pod",
+                           auto: frozenset = frozenset()):
+    """Uncompressed twin of `make_compressed_dp_allreduce` — same stacked
+    contract, full-precision pmean on the wire, error returned unchanged.
+    The A/B baseline for benchmarks/comm_bench.py."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    def allreduce(grads, error):
+        def inner(g, e):
+            red = jax.tree_util.tree_map(
+                lambda x: jax.lax.pmean(jnp.squeeze(x, 0), axis_name), g)
+            return red, e
+
+        stacked = jax.tree_util.tree_map(lambda _: P(axis_name), grads)
+        rep = jax.tree_util.tree_map(lambda _: P(), grads)
+        return shard_map_compat(inner, mesh,
+                                in_specs=(stacked, stacked),
+                                out_specs=(rep, stacked),
+                                auto=auto)(grads, error)
+
+    return allreduce
+
+
+def wire_bytes_model(tree: Any, n: int) -> dict:
+    """Cost model for the DP gradient reduction of one step, ring-style:
+    2 x (N-1)/N x numel payload bytes per device. The fp8_ef path moves
+    1 byte/element on both legs (all_to_all + all_gather); the uncompressed
+    baseline moves bf16 (2 bytes/element)."""
+    numel = int(sum(np.prod(np.shape(x), dtype=np.int64)
+                    for x in jax.tree_util.tree_leaves(tree)))
+    hops = 2.0 * (n - 1) / n if n > 1 else 0.0
+    full = hops * numel * 2.0        # bf16 wire
+    fp8 = hops * numel * 1.0         # e5m2 payloads, both legs
+    return {"numel": numel, "dp_size": int(n),
+            "bytes_full_bf16": full, "bytes_fp8_ef": fp8,
+            "ratio_fp8_vs_bf16": (fp8 / full) if full else 0.0}

@@ -149,21 +149,71 @@ def replicated(tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda _: P(), tree)
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False,
+                     auto: frozenset = frozenset()):
     """shard_map across JAX versions (jax.shard_map + check_vma in newer
-    releases, jax.experimental.shard_map + check_rep in older ones)."""
+    releases, jax.experimental.shard_map + check_rep in older ones).
+
+    auto: mesh axes left to the XLA partitioner instead of manually mapped
+    (tensor-parallel axes under an explicitly data-parallel collective).
+    NOTE: JAX 0.4.37 accepts the parameter but raises NotImplementedError at
+    trace time for nonempty sets — callers gate on it (ParallelPlan refuses
+    fp8 wire formats on meshes with a model axis > 1)."""
     sm = getattr(jax, "shard_map", None)
     if sm is not None:
-        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                   check_vma=check)
+        try:
+            return sm(f, auto=auto, **kw) if auto else sm(f, **kw)
+        except TypeError:   # newest JAX dropped `auto` (axis types instead)
+            return sm(f, **kw)
     from jax.experimental.shard_map import shard_map as sm_old
-    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=check)
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check)
+    return sm_old(f, auto=auto, **kw) if auto else sm_old(f, **kw)
 
 
 # ---------------------------------------------------------------------------
 # activation sharding constraints (logical-axis style, divisibility-checked)
 # ---------------------------------------------------------------------------
+
+# Axes currently manually mapped by an enclosing shard_map body. Inside such
+# a body the axes are *gone* from the positional sharding world —
+# with_sharding_constraint naming them is meaningless (and rejected), so
+# `constrain` drops those entries. Installed by `manual_axes(...)`, which the
+# train step wraps around the model call in wire-compressed mode.
+_MANUAL_AXES: frozenset = frozenset()
+
+
+class manual_axes:
+    """Context manager: declare mesh axes as manually mapped (shard_map) so
+    logical activation constraints over them become no-ops in this scope."""
+
+    def __init__(self, names):
+        self.names = frozenset(names)
+
+    def __enter__(self):
+        global _MANUAL_AXES
+        self._saved = _MANUAL_AXES
+        _MANUAL_AXES = _MANUAL_AXES | self.names
+        return self
+
+    def __exit__(self, *exc):
+        global _MANUAL_AXES
+        _MANUAL_AXES = self._saved
+        return False
+
+
+def _drop_manual(entry):
+    if entry is None or not _MANUAL_AXES:
+        return entry
+    if isinstance(entry, tuple):
+        kept = tuple(a for a in entry if a not in _MANUAL_AXES)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return None if entry in _MANUAL_AXES else entry
+
 
 def constrain(x, *logical_spec):
     """with_sharding_constraint with logical axes and graceful fallback.
@@ -210,6 +260,7 @@ def constrain(x, *logical_spec):
                 entries.append(name)
             else:
                 entries.append(None)
+    entries = [_drop_manual(e) for e in entries]
     if all(e is None for e in entries):
         return x
     return jax.lax.with_sharding_constraint(x, P(*entries))

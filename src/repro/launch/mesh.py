@@ -2,8 +2,9 @@
 
 Single pod: (data=16, model=16) — 256 chips (one v5e pod-slice class).
 Multi-pod: (pod=2, data=16, model=16) — 512 chips; the 'pod' axis carries
-data parallelism across the inter-pod (DCN/ICI) boundary, which is where the
-FP8 gradient compression (distributed/grad_compress.py) pays off.
+data parallelism across the inter-pod (DCN/ICI) boundary, which is where
+the FP8 wire formats pay off (ParallelPlan picks 'pod' as the wire axis;
+see distributed/strategy.py).
 
 These are FUNCTIONS, not module constants: importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS before first init).
@@ -56,10 +57,6 @@ def jit_shardings(mesh, tree):
         tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
-def dp_axes(mesh) -> Tuple[str, ...]:
-    """The data-parallel axes present in a mesh ('pod' + 'data')."""
-    return tuple(a for a in DATA_PARALLEL_AXES if a in mesh.axis_names)
-
-
-def axis_size(mesh, name: str) -> int:
-    return mesh.shape[name] if name in mesh.axis_names else 1
+# Axis bookkeeping (dp axes present, per-axis sizes, wire-axis choice) lives
+# on distributed.strategy.ParallelPlan — build one from (mesh, policy.dist)
+# instead of reading mesh.shape by hand.

@@ -25,11 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.loss_scale import LossScaleState
-from repro.core.master_weights import MixedPrecisionState
-from repro.distributed.sharding import (batch_specs, param_specs, replicated,
-                                        state_specs, zero1_specs)
-from repro.launch.mesh import dp_axes
+from repro.distributed.sharding import replicated
+from repro.distributed.strategy import ParallelPlan
 from repro.models.config import ModelConfig
 from repro.models.registry import build_config
 from repro.models.transformer import (init_lm, init_paged_stack_state,
@@ -106,13 +103,12 @@ def _shaped(fn, *args):
     return jax.eval_shape(fn, *args)
 
 
-def pick_microbatches(cfg: ModelConfig, batch: int, seq: int, mesh,
+def pick_microbatches(cfg: ModelConfig, batch: int, seq: int, dp: int,
                       *, residual_budget: float = 2.0e9) -> int:
     """Gradient-accumulation factor sized so the per-device layer-residual
     footprint (L x B_mb/dp x S x D x 2 bytes, the scan bwd carry) stays
-    under `residual_budget`. Powers of two, capped so B_mb >= dp."""
-    sizes = dict(mesh.shape)
-    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    under `residual_budget`. Powers of two, capped so B_mb >= dp.
+    `dp` is the total data-parallel degree (ParallelPlan.dp_size)."""
     total_layers = cfg.n_layers + cfg.n_encoder_layers
     per_mb = lambda n: (total_layers * (batch / (dp * n)) * seq
                         * cfg.d_model * 2.0)
@@ -120,26 +116,6 @@ def pick_microbatches(cfg: ModelConfig, batch: int, seq: int, mesh,
     while per_mb(n) > residual_budget and batch // (n * 2) >= dp:
         n *= 2
     return n
-
-
-def _paged_state_specs(states_s, mesh):
-    """Specs for the paged KV slot pool. Unlike fixed-slot caches there is
-    no batch dim to shard — the pool is shared by every in-flight request
-    and slots are gathered by index, so the slot dim stays replicated over
-    the data axes; the kv-head dim shards over 'model' (matching attention
-    TP) when divisible."""
-    msize = dict(mesh.shape).get("model", 1)
-
-    def spec_one(x):
-        shape = jnp.shape(x)
-        hdim = len(shape) - 2       # (..., n_slots, n_kv_heads, head_dim)
-        if msize > 1 and len(shape) >= 3 and shape[hdim] % msize == 0:
-            spec = [None] * len(shape)
-            spec[hdim] = "model"
-            return P(*spec)
-        return P()
-
-    return jax.tree_util.tree_map(spec_one, states_s)
 
 
 @functools.lru_cache(maxsize=None)
@@ -188,19 +164,25 @@ def build_cell(arch: str, shape: str, mesh, *,
         if pol_kw:
             qkw = {k.split(".", 1)[1]: v for k, v in pol_kw.items()
                    if k.startswith("quant.")}
+            dkw = {k.split(".", 1)[1]: v for k, v in pol_kw.items()
+                   if k.startswith("dist.")}
             pol_kw = {k: v for k, v in pol_kw.items()
-                      if not k.startswith("quant.")}
+                      if not k.startswith(("quant.", "dist."))}
             pol = cfg.policy
             if qkw:
                 pol = dataclasses.replace(pol, quant=dataclasses.replace(
                     pol.quant, **qkw))
+            if dkw:
+                pol = dataclasses.replace(pol, dist=dataclasses.replace(
+                    pol.dist, **dkw))
             cfg = cfg.replace(policy=dataclasses.replace(pol, **pol_kw))
         if cfg_kw:
             cfg = cfg.replace(**cfg_kw)
     if unroll_layers:
         cfg = cfg.replace(scan_layers=False)
-    dp = dp_axes(mesh)
-    dpspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    # The plan owns every sharding decision from here on: dp/zero1/tp axes,
+    # PartitionSpecs, wire-format collectives.
+    plan = ParallelPlan.build(mesh, cfg.policy.dist)
 
     key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
     params_s = _shaped(lambda: init_lm(jax.random.PRNGKey(0), cfg))
@@ -210,7 +192,7 @@ def build_cell(arch: str, shape: str, mesh, *,
             lambda s: jax.ShapeDtypeStruct(
                 s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
                 else s.dtype), params_s)
-    pspecs = param_specs(params_s, mesh)
+    pspecs = plan.param_specs(params_s)
 
     meta = dict(arch=arch, shape=shape, mode=mode, n_layers=cfg.n_layers,
                 n_encoder_layers=cfg.n_encoder_layers,
@@ -223,31 +205,27 @@ def build_cell(arch: str, shape: str, mesh, *,
                 head_dim=cfg.resolved_head_dim,
                 vocab=cfg.padded_vocab_size,
                 pattern=",".join(cfg.pattern()),
-                window=cfg.window)
+                window=cfg.window,
+                dist=plan.describe())
 
     if mode == "train":
         opt = make_optimizer_for(cfg)
         state_s = _shaped(opt.init, params_s)
-        mspecs = zero1_specs(params_s, pspecs, mesh)
-        opt_specs = {k: (mspecs if k in ("mu", "nu") else P())
-                     for k in state_s.opt_state}
-        state_specs_tree = MixedPrecisionState(
-            master=mspecs, opt_state=opt_specs,
-            loss_scale=LossScaleState(P(), P(), P(), P()))
+        state_specs_tree = plan.train_state_specs(state_s)
         batch_s = _token_batch(cfg, batch, seq, labels=True)
-        bspecs = batch_specs(batch_s, mesh)
+        bspecs = plan.batch_specs(batch_s)
         # Roofline (unrolled) lowering: single microbatch so per-step FLOPs
         # are fully visible to cost_analysis (a microbatch scan body would be
         # counted once); memory fit is proven by the scan lowering instead.
-        n_mb = 1 if unroll_layers else pick_microbatches(cfg, batch, seq, mesh)
+        n_mb = 1 if unroll_layers \
+            else pick_microbatches(cfg, batch, seq, plan.dp_size)
         if force_nmb is not None:
             n_mb = force_nmb
         meta["n_microbatches"] = n_mb
         # Sequence parallelism: shards the residual stream + norm/GEMM f32
         # transients over 'model'; always on for train when a model axis
         # exists (pure win: memory / TP-degree, small extra gather volume).
-        sizes = dict(mesh.shape)
-        if sizes.get("model", 1) > 1 and seq % sizes["model"] == 0 \
+        if plan.tp_size > 1 and seq % plan.tp_size == 0 \
                 and force_sp is not False:
             cfg = cfg.replace(sequence_parallel=True)
             meta["sequence_parallel"] = True
@@ -279,9 +257,27 @@ def build_cell(arch: str, shape: str, mesh, *,
             scaling = DelayedScaling(registry, qcfg=cfg.policy.quant)
             meta["scale_rows"] = len(registry)
         fn = make_train_step(cfg, opt, n_microbatches=n_mb,
-                             grad_shardings=mspecs, scaling=scaling)
+                             scaling=scaling, plan=plan)
+        wire = plan.compresses
+        if wire:
+            # The fp8-on-the-wire step threads the error-feedback residual
+            # pytree (stacked per-wire-device, sharded over the wire axis).
+            meta["wire_bytes"] = plan.wire_bytes(params_s)
+            err_s = plan.wire_state_struct(state_s.master)
+            espec = plan.wire_state_specs(err_s)
         if scaling is not None:
             sstate_s = _shaped(scaling.init)
+            if wire:
+                metrics_s = _shaped(fn, state_s, sstate_s, err_s, batch_s,
+                                    jax.random.PRNGKey(0))[1]
+                return dict(
+                    fn=fn, args=(state_s, sstate_s, err_s, batch_s, key_s),
+                    in_shardings=(state_specs_tree, replicated(sstate_s),
+                                  espec, bspecs, P()),
+                    out_shardings=((state_specs_tree, replicated(sstate_s),
+                                    espec), replicated(metrics_s)),
+                    donate_argnums=(0, 1, 2),
+                    meta=meta)
             metrics_s = _shaped(fn, state_s, sstate_s, batch_s,
                                 jax.random.PRNGKey(0))[1]
             return dict(
@@ -289,6 +285,16 @@ def build_cell(arch: str, shape: str, mesh, *,
                 in_shardings=(state_specs_tree, replicated(sstate_s),
                               bspecs, P()),
                 out_shardings=((state_specs_tree, replicated(sstate_s)),
+                               replicated(metrics_s)),
+                donate_argnums=(0, 1),
+                meta=meta)
+        if wire:
+            metrics_s = _shaped(fn, state_s, err_s, batch_s,
+                                jax.random.PRNGKey(0))[1]
+            return dict(
+                fn=fn, args=(state_s, err_s, batch_s, key_s),
+                in_shardings=(state_specs_tree, espec, bspecs, P()),
+                out_shardings=((state_specs_tree, espec),
                                replicated(metrics_s)),
                 donate_argnums=(0, 1),
                 meta=meta)
@@ -301,9 +307,7 @@ def build_cell(arch: str, shape: str, mesh, *,
             meta=meta)
 
     # ---- serving cells ------------------------------------------------------
-    sizes = dict(mesh.shape)
-    if mode == "prefill" and sizes.get("model", 1) > 1 \
-            and seq % sizes["model"] == 0:
+    if mode == "prefill" and plan.tp_size > 1 and seq % plan.tp_size == 0:
         cfg = cfg.replace(sequence_parallel=True)
         meta["sequence_parallel"] = True
     cache_len = min(seq, 32768) if shape != "long_500k" else cfg.window or 1
@@ -358,20 +362,12 @@ def build_cell(arch: str, shape: str, mesh, *,
                 (batch, 4096, cfg.d_model), jnp.bfloat16)
         fn = make_serve_decode(cfg)
 
-    sspecs = (_paged_state_specs(states_s, mesh) if paged
-              else state_specs(states_s, mesh))
-    bspecs = batch_specs(batch_s, mesh)
-    sizes = dict(mesh.shape)
-    dp_total = 1
-    for a in dp:
-        dp_total *= sizes[a]
-    vdim = "model" if cfg.padded_vocab_size % sizes.get("model", 1) == 0 \
-        else None
-    bdim = dpspec if (dp and batch % dp_total == 0) else None
-    logits_spec = P(bdim, None, vdim)
+    sspecs = plan.serve_state_specs(states_s, paged=paged)
+    bspecs = plan.batch_specs(batch_s)
+    logits_spec = plan.logits_spec(batch, cfg.padded_vocab_size)
     # Serving params are ZeRO-sharded over 'data' on top of TP (FSDP-style
     # per-layer gather) — a 123B bf16 model does not fit at TP-16 alone.
-    serve_pspecs = zero1_specs(params_s, pspecs, mesh)
+    serve_pspecs = plan.master_specs(params_s, pspecs)
     return dict(
         fn=fn, args=(params_s, batch_s, states_s),
         in_shardings=(serve_pspecs, bspecs, sspecs),

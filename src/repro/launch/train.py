@@ -21,10 +21,20 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--wire", default="full", choices=["full", "fp8_ef"],
+                    help="DP gradient reduction wire format "
+                         "(policy.dist.wire): fp8_ef = e5m2-compressed "
+                         "all-reduce with error feedback")
+    ap.add_argument("--zero-gather", default="full", choices=["full", "fp8"],
+                    help="ZeRO-1 weight all-gather wire format "
+                         "(policy.dist.wire_zero_gather)")
     args = ap.parse_args()
 
+    import dataclasses
+
+    import jax
+
     if os.environ.get("COORDINATOR_ADDRESS"):
-        import jax
         jax.distributed.initialize()   # multi-host fleet entry
 
     from repro.core.loss_scale import LossScaler
@@ -36,6 +46,20 @@ def main():
     cfg = build_config(args.arch, smoke=args.smoke)
     if args.smoke:
         cfg = cfg.replace(remat=False)
+    plan = None
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        # Pure data-parallel launcher mesh; the full pod/data/model grids
+        # come from launch.mesh.make_production_mesh under the dry-run.
+        from repro.distributed.strategy import ParallelPlan
+        from repro.launch.mesh import make_mesh
+        dist = dataclasses.replace(cfg.policy.dist, wire=args.wire,
+                                   wire_zero_gather=args.zero_gather)
+        cfg = cfg.replace(policy=dataclasses.replace(cfg.policy, dist=dist))
+        plan = ParallelPlan.build(make_mesh((n_dev,), ("data",)), dist)
+        print(f"[train] parallel plan: {plan.describe()}")
+    elif args.wire != "full" or args.zero_gather != "full":
+        print("[train] single device: wire format flags ignored")
     opt = make_optimizer_for(cfg, name="adam", learning_rate=args.lr,
                              scaler=LossScaler(mode="enhanced",
                                                init_scale=2.0**13))
@@ -47,7 +71,8 @@ def main():
                                 checkpoint_every=max(10, args.steps // 4),
                                 checkpoint_dir=args.ckpt_dir,
                                 metrics_path=f"{args.ckpt_dir}/metrics.jsonl",
-                                n_microbatches=args.microbatches))
+                                n_microbatches=args.microbatches),
+                     plan=plan)
     loop.install_signal_handlers()
     out = loop.run()
     print(f"finished step {out['last_step']} loss="

@@ -28,10 +28,13 @@ import numpy as np
 from repro.obs.metrics import SCHEMA_VERSION
 
 HEALTH_PREFIX = "health/"
+COMM_PREFIX = "comm/"
 # health/* keys that are NOT per-site [sat, flush] pairs: the dense per-site
 # amax vector and the scalar scale-churn rate (fraction of sites whose scale
 # moved this step).
 _NON_PAIR_KEYS = ("health/amax_sites", "health/scale_churn")
+# comm/* keys that carry strings (the wire-format name), not numbers.
+_COMM_STR_KEYS = ("comm/wire",)
 
 
 def load_metrics(path: str) -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
@@ -75,6 +78,9 @@ def validate_records(records: List[Dict[str, Any]],
                 if arr.shape[-1:] != (2,):
                     errors.append(f"{where}: {k} last dim != 2 "
                                   f"(shape {arr.shape})")
+            if k.startswith(COMM_PREFIX) and k not in _COMM_STR_KEYS \
+                    and not isinstance(v, (int, float)):
+                errors.append(f"{where}: {k} not numeric ({v!r})")
         for ev in rec.get("health_events", []):
             if "kind" not in ev or "step" not in ev:
                 errors.append(f"{where}: malformed health_event {ev!r}")
@@ -146,6 +152,40 @@ def _events_section(records: List[Dict[str, Any]], cap: int = 40) -> List[str]:
     return lines
 
 
+def _comms_section(records: List[Dict[str, Any]],
+                   meta: Optional[Dict[str, Any]] = None) -> List[str]:
+    """Wire-format communication stream (distributed runs): per-step wire
+    bytes of the DP gradient reduction plus the sampled span/allreduce_s
+    timing probe. Absent entirely for single-device runs."""
+    comm_keys = sorted({k for r in records for k in r
+                        if k.startswith(COMM_PREFIX)})
+    if not comm_keys:
+        return []
+    last = next((r for r in reversed(records)
+                 if any(k in r for k in comm_keys)), {})
+    dist = (meta or {}).get("dist") or {}
+    lines = ["", "## Comms", ""]
+    if dist:
+        lines.append(
+            f"- plan: dp={dist.get('dp_axes')} (size {dist.get('dp_size')}), "
+            f"zero1={dist.get('zero1_axis')}, tp={dist.get('tp_axis')}, "
+            f"wire={dist.get('wire')} over axis {dist.get('wire_axis')!r}")
+    bps = last.get("comm/bytes_per_step")
+    ratio = last.get("comm/ratio_fp8_vs_bf16")
+    n_steps = sum(1 for r in records if "comm/bytes_per_step" in r)
+    if isinstance(bps, (int, float)):
+        lines.append(f"- DP reduction wire bytes/step: {_fmt(bps, '.4g')} "
+                     f"({_fmt(bps * n_steps, '.4g')} over {n_steps} steps)")
+    if isinstance(ratio, (int, float)):
+        lines.append(f"- fp8_ef vs bf16 wire ratio: {_fmt(ratio, '.3f')}")
+    ar = [r["span/allreduce_s"] for r in records
+          if isinstance(r.get("span/allreduce_s"), (int, float))]
+    if ar:
+        lines.append(f"- allreduce probe: p50 {_fmt(_pct(ar, 50))} s, "
+                     f"p99 {_fmt(_pct(ar, 99))} s (n={len(ar)} samples)")
+    return lines
+
+
 def render(records: List[Dict[str, Any]],
            meta: Optional[Dict[str, Any]] = None,
            serve_stats: Optional[Dict[str, Any]] = None,
@@ -193,6 +233,7 @@ def render(records: List[Dict[str, Any]],
                     f"| {k[len('span/'):-2]} | "
                     f"{_fmt(float(np.mean(vals)) if vals else None)} | "
                     f"{_fmt(_pct(vals, 99))} |")
+        lines += _comms_section(records, meta)
         lines += ["", "## FP8 site health", ""] + _site_table(records)
         lines += ["", "## Health events", ""] + _events_section(records)
     else:

@@ -70,10 +70,18 @@ class TrainLoop:
                      Callable[[int, Dict[str, Any]], None]] = None,
                  health: Optional[HealthConfig] = None,
                  scaling: Optional[DelayedScaling] = None,
-                 amax_sync=None):
+                 amax_sync=None, plan=None):
         """scaling: optional DelayedScaling bundle (delayed per-tensor FP8
         scaling). Its ScaleState rides through the jitted step and is
         checkpointed/restored next to the optimizer state.
+
+        plan: optional distributed.strategy.ParallelPlan. Supplies gradient
+        shardings to the step; when plan.compresses (policy.dist.wire ==
+        "fp8_ef") the DP reduction runs over the fp8 error-feedback
+        collective — the residual pytree then rides the step like
+        ScaleState does (checkpointed under "wire_error", restored on
+        resume) and the loop emits comm/* metrics plus a sampled
+        span/allreduce_s timing probe.
 
         on_metrics(step, record): called with every serialized metrics
         record (the exact dict written to the jsonl sink, health_events
@@ -86,12 +94,21 @@ class TrainLoop:
         self.on_straggler = on_straggler
         self.on_metrics = on_metrics
         self.scaling = scaling
+        self.plan = plan
+        self.wire = plan is not None and plan.compresses
         self.ckpt = Checkpointer(loop.checkpoint_dir,
                                  keep_last_k=loop.keep_last_k)
         self._stop = False
         self._step_fn = jax.jit(make_train_step(
             cfg, optimizer, n_microbatches=loop.n_microbatches,
-            scaling=scaling, amax_sync=amax_sync))
+            scaling=scaling, amax_sync=amax_sync, plan=plan))
+        # Timing probe for the wire collective: the step is ONE jitted
+        # program, so the reduction cannot be timed from the host inside
+        # it — instead a standalone jit of the same collective runs on the
+        # (grad-shaped) residual pytree every log_every steps, under
+        # span/allreduce_s.
+        self._wire_probe = jax.jit(plan.dp_allreduce()) if self.wire else None
+        self._comm: Dict[str, float] = {}
         self.tracer = Tracer(loop.trace_path)
         self.monitor = HealthMonitor(
             health,
@@ -111,6 +128,8 @@ class TrainLoop:
         if self.scaling is not None:
             # Row order of the dense health/amax_sites vector.
             meta["sites"] = list(self.scaling.registry.keys)
+        if self.plan is not None:
+            meta["dist"] = self.plan.describe()
         return meta
 
     # -- preemption ----------------------------------------------------------
@@ -123,15 +142,21 @@ class TrainLoop:
         signal.signal(signal.SIGINT, handler)
 
     # -- main -----------------------------------------------------------------
-    def _pack(self, state, scale_state):
-        if self.scaling is None:
+    def _pack(self, state, scale_state, err=None):
+        if self.scaling is None and not self.wire:
             return state
-        return {"train": state, "amax_scales": scale_state}
+        tree = {"train": state}
+        if self.scaling is not None:
+            tree["amax_scales"] = scale_state
+        if self.wire:
+            tree["wire_error"] = err
+        return tree
 
     def _unpack(self, tree):
-        if self.scaling is None:
-            return tree, None
-        return tree["train"], tree["amax_scales"]
+        if self.scaling is None and not self.wire:
+            return tree, None, None
+        return (tree["train"], tree.get("amax_scales"),
+                tree.get("wire_error"))
 
     def run(self) -> Dict[str, Any]:
         with MetricsLogger(self.loop.metrics_path, meta=self._logger_meta(),
@@ -145,15 +170,20 @@ class TrainLoop:
         params = init_lm(jax.random.PRNGKey(self.seed), self.cfg)
         state = self.optimizer.init(params)
         scale_state = self.scaling.init() if self.scaling else None
+        err = self.plan.init_wire_state(state.master) if self.wire else None
+        if self.wire:
+            self._comm = {f"comm/{k}": v for k, v in
+                          self.plan.wire_bytes(state.master).items()
+                          if isinstance(v, (int, float))}
         del params
         start_step = 0
         ema = None
         stragglers = 0
         if self.ckpt.latest_step() is not None:
             proto = jax.eval_shape(lambda s: s,
-                                   self._pack(state, scale_state))
+                                   self._pack(state, scale_state, err))
             tree, start_step = self.ckpt.restore(proto)
-            state, scale_state = self._unpack(tree)
+            state, scale_state, err = self._unpack(tree)
             # Straggler baseline survives restarts: a resumed run otherwise
             # re-learns the EMA from scratch and both forgets its count and
             # risks flagging warm steps against a cold baseline.
@@ -181,13 +211,25 @@ class TrainLoop:
             step_key = jax.random.fold_in(
                 jax.random.PRNGKey(self.seed + 17), step)
             with self.tracer.span("step_dispatch", step=step):
-                if self.scaling is None:
+                if self.wire and self.scaling is None:
+                    (state, err), metrics = self._step_fn(
+                        state, err, batch, step_key)
+                elif self.wire:
+                    (state, scale_state, err), metrics = self._step_fn(
+                        state, scale_state, err, batch, step_key)
+                elif self.scaling is None:
                     state, metrics = self._step_fn(state, batch, step_key)
                 else:
                     (state, scale_state), metrics = self._step_fn(
                         state, scale_state, batch, step_key)
             with self.tracer.span("device_sync", step=step):
                 metrics = jax.block_until_ready(metrics)
+            if self.wire and step % self.loop.log_every == 0:
+                # Sampled wire-collective timing: the residual pytree is
+                # exactly grad-shaped, so reducing it exercises the real
+                # program (result discarded; error buffers untouched).
+                with self.tracer.span("allreduce", step=step):
+                    jax.block_until_ready(self._wire_probe(err, err))
             dt = time.time() - t0
             # straggler detection (skip the compile step)
             if step > start_step:
@@ -207,7 +249,7 @@ class TrainLoop:
             if save:
                 with self.tracer.span("checkpoint", step=step):
                     self.ckpt.save(
-                        step + 1, self._pack(state, scale_state),
+                        step + 1, self._pack(state, scale_state, err),
                         extra={"straggler_ema": ema,
                                "stragglers": stragglers})
 
@@ -216,7 +258,8 @@ class TrainLoop:
             # whose metrics triggered them.
             record = {k: jsonable(v) for k, v in metrics.items()}
             record.update(step=step, step_time_s=round(dt, 4),
-                          stragglers=stragglers, **self.tracer.durations())
+                          stragglers=stragglers, **self._comm,
+                          **self.tracer.durations())
             events = self.monitor.observe(step, record)
             if events:
                 record["health_events"] = events
@@ -237,5 +280,5 @@ class TrainLoop:
                 break
         self.ckpt.wait()
         return {"state": state, "scale_state": scale_state,
-                "last_step": step + 1,
+                "wire_error": err, "last_step": step + 1,
                 "metrics": last_metrics, "stragglers": stragglers}

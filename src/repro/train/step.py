@@ -45,14 +45,25 @@ def make_optimizer_for(cfg: ModelConfig, *, name: str = "adam",
 
 
 def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
-                    n_microbatches: int = 1, grad_shardings=None,
+                    n_microbatches: int = 1,
                     scaling: Optional[DelayedScaling] = None,
-                    amax_sync=None):
+                    amax_sync=None, plan=None):
     """Returns train_step(state, batch, step_key) -> (state, metrics).
 
-    grad_shardings: optional PartitionSpec pytree (params-shaped). Applied to
-    the gradients / accumulator so the f32 grad buffer is ZeRO-sharded like
-    the master weights instead of ballooning to a model-sharded-only copy.
+    plan: optional distributed.strategy.ParallelPlan. Supplies the gradient
+    shardings (grads / the f32 accumulator constrained to the ZeRO-1 master
+    layout instead of ballooning to a model-sharded-only copy) and, when
+    `plan.compresses` (policy.dist.wire == "fp8_ef" on a >1-device wire
+    axis), reroutes the DP gradient reduction through the e5m2-compressed
+    error-feedback all-reduce: the loss/grad pass then runs inside an
+    explicit shard_map over the dp axes and the step signature grows the
+    residual pytree,
+
+        train_step(state, [scale_state,] err, batch, step_key)
+            -> ((state, [scale_state,] err), metrics)
+
+    with `err` created by plan.init_wire_state(state.master) and
+    checkpointed next to ScaleState by the train loop.
 
     scaling: optional DelayedScaling bundle. When given, the returned step is
         train_step(state, scale_state, batch, step_key)
@@ -62,15 +73,21 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
     context, forward amax observations come back through the loss aux,
     error/grad observations through the cotangents of per-site tokens, and
     the history is updated post-step (optionally cross-replica-synced via
-    `amax_sync`, e.g. distributed.amax_sync.make_amax_sync('data')).
+    `amax_sync`, e.g. distributed.amax_sync.make_amax_sync('data')). In
+    wire-compressed mode amax_sync is ignored: observations are already
+    cross-device-combined (pmax) inside the shard_map body.
     """
+    wire = plan is not None and plan.compresses
 
     def constrain_grads(g):
-        if grad_shardings is None:
+        if plan is None:
             return g
+        from jax.sharding import NamedSharding
+        specs = plan.grad_specs(g)
         return jax.tree_util.tree_map(
-            lambda x, s: jax.lax.with_sharding_constraint(x, s),
-            g, grad_shardings)
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(plan.mesh, s)),
+            g, specs)
 
     def loss_fn(params, tokens, batch, step_key, scale, scale_state):
         if scaling is None:
@@ -80,14 +97,16 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
             return lm_loss(params, batch, cfg=cfg, qkey=step_key,
                            loss_scale=scale)
 
-    def _grads_and_metrics(params, batch, step_key, scale, scale_state):
+    def _grads_and_metrics(params, batch, step_key, scale, scale_state,
+                           constrain=None):
+        constrain = constrain_grads if constrain is None else constrain
         tokens = scaling.zero_tokens() if scaling is not None else {}
 
         if n_microbatches <= 1:
             (loss, metrics), (grads, tok_grads) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1), has_aux=True)(
                     params, tokens, batch, step_key, scale, scale_state)
-            return loss, metrics, constrain_grads(grads), tok_grads
+            return loss, metrics, constrain(grads), tok_grads
 
         def reshape_mb(x):
             return x.reshape((n_microbatches,
@@ -105,9 +124,9 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
                 acc, g)
             tacc = jax.tree_util.tree_map(lambda a, gg: jnp.maximum(a, gg),
                                           tacc, tg)
-            return (constrain_grads(acc), tacc, i + 1), (l, m)
+            return (constrain(acc), tacc, i + 1), (l, m)
 
-        zero = constrain_grads(jax.tree_util.tree_map(
+        zero = constrain(jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params))
         tzero = jax.tree_util.tree_map(jnp.zeros_like, tokens)
         (grads, tok_grads, _), (losses, metricses) = jax.lax.scan(
@@ -122,6 +141,67 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
                        else v.mean())
                    for k, v in metricses.items()}
         return loss, metrics, grads, tok_grads
+
+    def _combine_tokens(tok, axes):
+        """Cross-device combine of token cotangents: amax channels by pmax
+        (matching amax_sync semantics), the optional (sat, flush) health
+        tail by pmean (they are per-batch fractions)."""
+        c = scale_ctx.TOKEN_CHANNELS
+        if tok.ndim and tok.shape[-1] > c:
+            return jnp.concatenate(
+                [jax.lax.pmax(tok[..., :c], axes),
+                 jax.lax.pmean(tok[..., c:], axes)], axis=-1)
+        return jax.lax.pmax(tok, axes)
+
+    def _wire_grads_and_metrics(params, batch, step_key, scale, scale_state):
+        """The fp8-on-the-wire gradient pass: loss/grads computed locally
+        inside an explicit shard_map over the dp axes (so the cross-device
+        reduction is OURS, not an XLA-inserted all-reduce), full-precision
+        pmean over the fast intra-pod axes, then the e5m2 error-feedback
+        collective over the wire axis. Returns stacked per-wire-device f32
+        grads (leading axis = wire device) ready for plan.dp_allreduce."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import sharding as shmod
+
+        dp = plan.dp_axes
+        inner = plan.inner_dp_axes
+
+        def local_body(*args):
+            if scaling is None:
+                params_, batch_, key_, scale_ = args
+                sstate_ = None
+            else:
+                params_, batch_, key_, scale_, sstate_ = args
+            # Logical activation constraints naming the manually-mapped dp
+            # axes are meaningless inside the body — drop them.
+            with shmod.manual_axes(dp):
+                loss, metrics, grads, tok_grads = _grads_and_metrics(
+                    params_, batch_, key_, scale_, sstate_,
+                    constrain=lambda g: g)
+            if inner:
+                grads = jax.tree_util.tree_map(
+                    lambda g: jax.lax.pmean(g, inner), grads)
+            loss = jax.lax.pmean(loss, dp)
+            metrics = {k: (jax.lax.pmax(v, dp)
+                           if k.startswith((AMAX_PREFIX, HEALTH_PREFIX))
+                           else jax.lax.pmean(v, dp))
+                       for k, v in metrics.items()}
+            tok_grads = {k: _combine_tokens(v, dp)
+                         for k, v in tok_grads.items()}
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32)[None], grads)
+            return loss, metrics, grads, tok_grads
+
+        bspecs = plan.batch_specs(batch)
+        operands = (params, batch, step_key, scale)
+        in_specs = (P(), bspecs, P(), P())
+        if scaling is not None:
+            operands += (scale_state,)
+            in_specs += (P(),)
+        return plan.shard_map(
+            local_body, in_specs,
+            (P(), P(), P(plan.wire_axis), P()))(*operands)
 
     def _finish(state, grads, loss, metrics, scale):
         new_state, opt_metrics = optimizer.apply_gradients(state, grads)
@@ -160,6 +240,42 @@ def make_train_step(cfg: ModelConfig, optimizer: MixedPrecisionOptimizer, *,
             out["health/amax_sites"] = new_scale_state.amax_history[:, 0]
         return (new_state, new_scale_state), out
 
+    def train_step_wire(state: MixedPrecisionState, err,
+                        batch: Dict[str, Array], step_key: Array):
+        params = optimizer.compute_params(state)
+        params = plan.gather_params(params)
+        scale = state.loss_scale.scale
+        loss, metrics, stacked, _ = _wire_grads_and_metrics(
+            params, batch, step_key, scale, None)
+        reduced, new_err = plan.dp_allreduce()(stacked, err)
+        new_state, out = _finish(state, constrain_grads(reduced),
+                                 loss, metrics, scale)
+        return (new_state, new_err), out
+
+    def train_step_wire_scaled(state: MixedPrecisionState,
+                               scale_state: ScaleState, err,
+                               batch: Dict[str, Array], step_key: Array):
+        params = optimizer.compute_params(state)
+        params = plan.gather_params(params)
+        scale = state.loss_scale.scale
+        loss, metrics, stacked, tok_grads = _wire_grads_and_metrics(
+            params, batch, step_key, scale, scale_state)
+        reduced, new_err = plan.dp_allreduce()(stacked, err)
+        observed = split_observations(metrics, tok_grads, scaling.registry)
+        # No amax_sync here: observations were pmax-combined across devices
+        # inside the shard_map body already.
+        new_scale_state = scaling.update(scale_state, observed, sync=None)
+        new_state, out = _finish(state, constrain_grads(reduced),
+                                 loss, metrics, scale)
+        if scaling.qcfg.track_health:
+            out["health/scale_churn"] = jnp.mean(
+                (scale_state.scale != new_scale_state.scale)
+                .astype(jnp.float32))
+            out["health/amax_sites"] = new_scale_state.amax_history[:, 0]
+        return (new_state, new_scale_state, new_err), out
+
+    if wire:
+        return train_step_wire if scaling is None else train_step_wire_scaled
     return train_step if scaling is None else train_step_scaled
 
 
