@@ -166,3 +166,19 @@ def timed(fn, *args, iters: int = 5) -> float:
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6  # us
+
+
+def timed_min(fn, *args, reps: int = 10) -> float:
+    """Best-of-single-calls wall time (us). A mean over a batched loop
+    folds scheduler spikes into the estimate and penalizes multi-dispatch
+    pipelines disproportionately; the per-call minimum is the standard
+    noise-floor estimator for A/B wall comparisons (apply it to BOTH
+    sides of a ratio)."""
+    fn(*args)  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.time() - t0)
+    return best * 1e6  # us

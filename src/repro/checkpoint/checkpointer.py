@@ -19,6 +19,7 @@ model-code refactors as long as parameter names are stable.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import shutil
@@ -71,6 +72,27 @@ def _path_key(path) -> str:
     return "/".join(parts)
 
 
+# np.savez forbids "/" in archive names, so path keys are escaped. The v1
+# scheme ("/" -> "__") collided with literal "__" in leaf names (a module
+# named "w__gate" vs a nested path "w/gate" mangle identically — one leaf
+# silently overwrites the other and restore mis-assigns or KeyErrors).
+# v2 escapes "_" -> "_u" FIRST, so every "__" in the escaped form can only
+# come from "/" and the decode ("__" -> "/" then "_u" -> "_") is exact.
+_KEY_ESCAPE = "v2"
+
+
+def _escape_key(key: str) -> str:
+    return key.replace("_", "_u").replace("/", "__")
+
+
+def _unescape_key(name: str, scheme) -> str:
+    if scheme == _KEY_ESCAPE:
+        return name.replace("__", "/").replace("_u", "_")
+    # Legacy (pre-v2) checkpoints: lossy inverse, kept for reading old
+    # manifests (which carry no "key_escape" field).
+    return name.replace("__", "/")
+
+
 class Checkpointer:
     def __init__(self, directory: str, *, keep_last_k: int = 3,
                  async_save: bool = True):
@@ -79,6 +101,13 @@ class Checkpointer:
         self.keep_last_k = keep_last_k
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        # Serializes the commit/GC step on the writer thread against
+        # all_steps()/restore() directory scans on the main thread.
+        self._lock = threading.Lock()
+        # Belt and braces with the non-daemon writer thread below: a
+        # process exiting right after the final save() still joins the
+        # in-flight write instead of dropping the last checkpoint.
+        atexit.register(self.wait)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):
@@ -93,6 +122,7 @@ class Checkpointer:
             dtypes[k] = str(v.dtype)
         manifest = {"step": int(step), "time": time.time(),
                     "keys": sorted(leaves), "dtypes": dtypes,
+                    "key_escape": _KEY_ESCAPE,
                     "extra": extra or {}}
 
         def _write():
@@ -104,18 +134,23 @@ class Checkpointer:
             # patterns (same-width uint view); the manifest records the real
             # dtype and restore views them back.
             np.savez(tmp / "leaves.npz",
-                     **{k.replace("/", "__"): _to_native(v)
+                     **{_escape_key(k): _to_native(v)
                         for k, v in leaves.items()})
             (tmp / _MANIFEST).write_text(json.dumps(manifest))
             (tmp / _COMMITTED).write_text("ok")
-            final = self.dir / f"step_{step:010d}"
-            if final.exists():
-                shutil.rmtree(final)
-            tmp.rename(final)
-            self._gc()
+            with self._lock:
+                final = self.dir / f"step_{step:010d}"
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+                self._gc_locked()
 
         if self.async_save:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            # Non-daemon: interpreter shutdown joins in-flight writers, so
+            # a process exiting right after the final step can never drop
+            # its last checkpoint (the old daemon thread could die
+            # mid-write with only a .tmp dir left behind).
+            self._thread = threading.Thread(target=_write, daemon=False)
             self._thread.start()
         else:
             _write()
@@ -126,17 +161,25 @@ class Checkpointer:
             self._thread = None
 
     def _gc(self):
-        steps = self.all_steps()
+        with self._lock:
+            self._gc_locked()
+
+    def _gc_locked(self):
+        steps = self._all_steps_locked()
         for s in steps[:-self.keep_last_k] if self.keep_last_k else []:
             shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
 
     # --------------------------------------------------------------- restore
-    def all_steps(self):
+    def _all_steps_locked(self):
         out = []
         for p in sorted(self.dir.glob("step_*")):
             if (p / _COMMITTED).exists():
                 out.append(int(p.name.split("_")[1]))
         return out
+
+    def all_steps(self):
+        with self._lock:
+            return self._all_steps_locked()
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
@@ -152,13 +195,18 @@ class Checkpointer:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        d = self.dir / f"step_{step:010d}"
-        data = np.load(d / "leaves.npz")
-        dtypes = self.manifest(step)["dtypes"]
-        leaves = {}
-        for k in data.files:
-            key = k.replace("__", "/")
-            leaves[key] = _from_native(data[k], dtypes[key])
+        # Hold the lock through the leaf reads: the async writer's GC must
+        # not delete a just-listed step directory mid-load.
+        with self._lock:
+            d = self.dir / f"step_{step:010d}"
+            data = np.load(d / "leaves.npz")
+            man = json.loads((d / _MANIFEST).read_text())
+            dtypes = man["dtypes"]
+            scheme = man.get("key_escape")
+            leaves = {}
+            for k in data.files:
+                key = _unescape_key(k, scheme)
+                leaves[key] = _from_native(data[k], dtypes[key])
 
         shard_flat = None
         if shardings is not None:

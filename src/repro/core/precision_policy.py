@@ -91,10 +91,20 @@ class QuantConfig:
     # VMEM footprint is O(attn_block_q*D + attn_block_kv*D) — independent
     # of the sequence length — and results are bit-invariant to both knobs
     # (LANE-stepped reductions, TQ-pinned dK/dV contraction, absolute-
-    # coordinate SR bits). attn_block_q must be a multiple of 128 when
-    # larger than 128; attn_block_kv a multiple of 128.
-    attn_block_q: int = 128
-    attn_block_kv: int = 512
+    # coordinate SR bits), so they only move wall-clock. None (default)
+    # resolves per shape through the block-size autotuner winners table
+    # (kernels.autotune, controlled by `autotune` below), falling back to
+    # the kernel defaults. Explicit ints always win and are validated:
+    # attn_block_q must be a multiple of 128 when larger than 128 (and a
+    # 128-multiple outright for the backward), attn_block_kv a multiple
+    # of 128.
+    attn_block_q: Optional[int] = None
+    attn_block_kv: Optional[int] = None
+    # Block-size autotuner mode for unset block knobs (GEMM bm/bk/bn and
+    # the attn_block_* above): "table" consults the shipped winners table
+    # (or $REPRO_AUTOTUNE_TABLE), "off" pins the built-in defaults, any
+    # other string is read as a path to an alternative table.
+    autotune: str = "table"
     # Precision-health counters (repro.obs): per-site saturation / flush
     # fractions observed next to the delayed-scaling amax reads — payload
     # bit patterns on the XLA side, VMEM tile counts in the fused kernel

@@ -86,6 +86,7 @@ def _kernel_kwargs(cfg: QuantConfig):
                 saturate_s=cfg.saturate_for(ACT),
                 saturate_p=cfg.saturate_for(ACT),
                 block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                autotune=cfg.autotune,
                 interpret=cfg.backend == "pallas_interpret")
 
 

@@ -7,12 +7,18 @@ fine to ~8k fp8 context, hopeless at 32k. These kernels stream K/V through a
 kv-stripe grid dimension instead, so the VMEM footprint is
 O(block_kv * head_dim) per grid step regardless of the sequence length:
 
-  forward grid   (B, H, Q/block_q, 3 * S/block_kv)
-      The innermost dimension interleaves the three softmax passes (running
-      row-max m -> normalizer l -> quantized-P PV contraction) over the kv
-      stripes; the (m, l, PV accumulator) carries live in VMEM scratch
-      across stripes, so the LANE-stepped computation chain is identical to
-      the single-stripe kernel — outputs are invariant to block_kv.
+  forward grid   (B, H, Q/block_q, S/block_kv)
+      ONE grid step per kv stripe: the online-softmax recurrence
+      (ref.fwd_stripe_online) rescales the (l, PV accumulator) carries by
+      exp(m_old - m_new) per LANE block, so each K/V stripe is DMA'd and
+      read exactly once — the PR-5 kernel visited every stripe three times
+      (m -> l -> PV phases), re-computing the quantized score tiles each
+      visit. The carries live in VMEM scratch across stripes; the LANE-
+      block chain is independent of the stripe cut, so outputs are
+      invariant to block_kv. With every (k, v) block visited once, Mosaic's
+      grid pipeline double-buffers the NEXT stripe's K/V DMA against the
+      current stripe's compute (the revisiting phase structure used to
+      defeat that overlap for 2 of every 3 visits).
 
   backward grid  (B, H, Q/block_q, 4 * S/block_kv)     [stats + dQ]
       Phases m -> l -> rd (the softmax-VJP row reduction, with the dP amax)
@@ -90,13 +96,12 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
     # and every quantize are untouched, so counts on/off is bit-identical.
     # chunk_ref ('chunk' mode): (B, 2) int32 SMEM [start, n_valid] rows —
     # per-batch chunk coordinates, bound via the _fwd_body_chunk adapter.
-    b, h, iq, u = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+    b, h, iq, j = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
                    pl.program_id(3))
-    j, phase = u % nk, u // nk
     jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
     active = (j >= jmin) & (j <= jmax)
 
-    @pl.when(u == 0)
+    @pl.when(j == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, -1e30)
         l_scr[...] = jnp.zeros_like(l_scr)
@@ -111,50 +116,39 @@ def _fwd_body(q_ref, k_ref, v_ref, msk_ref, scal_ref, seed_ref,
     kw = dict(seed=seed_ref[0], bh=b * n_heads + h, row0=iq * bq,
               col0=j * bkv, scal2=(scal_ref[0], scal_ref[1]),
               mask_mode=mask_mode, window=window, q_len=q_len, s_len=s_len,
-              fmt_s=fmt_s, rounding_s=rounding_s, saturate_s=saturate_s)
+              fmt_s=fmt_s, rounding_s=rounding_s, saturate_s=saturate_s,
+              f_p=scal_ref[2], fmt_p=fmt_p, rounding_p=rounding_p,
+              saturate_p=saturate_p)
     if chunk_ref is not None:
         kw["chunk"] = (chunk_ref[b, 0], chunk_ref[b, 1])
 
-    @pl.when(active & (phase == 0))
-    def _pass_m():
+    @pl.when(active)
+    def _stripe():
         if hs_ref is None:
-            m, amax_s, _ = _r.fwd_stripe_m(q_ref[0, 0], k_ref[0, 0], kvmask,
-                                           m_scr[...], as_ref[0, 0, 0], **kw)
+            m, l, acc, amax_s, amax_p, _, _ = _r.fwd_stripe_online(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask,
+                m_scr[...], l_scr[...], acc_scr[...],
+                as_ref[0, 0, 0], ap_ref[0, 0, 0], **kw)
         else:
-            m, amax_s, _, hs = _r.fwd_stripe_m(
-                q_ref[0, 0], k_ref[0, 0], kvmask, m_scr[...],
-                as_ref[0, 0, 0], health=hs_ref[0, 0, 0], **kw)
+            m, l, acc, amax_s, amax_p, _, _, hs, hp = _r.fwd_stripe_online(
+                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask,
+                m_scr[...], l_scr[...], acc_scr[...],
+                as_ref[0, 0, 0], ap_ref[0, 0, 0],
+                health_s=hs_ref[0, 0, 0], health_p=hp_ref[0, 0, 0], **kw)
             hs_ref[0, 0, 0] = hs
-        m_scr[...] = m
-        as_ref[0, 0, 0] = amax_s
-
-    @pl.when(active & (phase == 1))
-    def _pass_l():
-        l_scr[...] = _r.fwd_stripe_l(q_ref[0, 0], k_ref[0, 0], kvmask,
-                                     m_scr[...], l_scr[...], **kw)
-
-    @pl.when(active & (phase == 2))
-    def _pass_pv():
-        l = l_scr[...]
-        d_safe = jnp.where(l > 0, l, 1.0)
-        pkw = dict(f_p=scal_ref[2], fmt_p=fmt_p, rounding_p=rounding_p,
-                   saturate_p=saturate_p)
-        if hp_ref is None:
-            acc, amax_p, _ = _r.fwd_stripe_pv(
-                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
-                d_safe, acc_scr[...], ap_ref[0, 0, 0], **pkw, **kw)
-        else:
-            acc, amax_p, _, hp = _r.fwd_stripe_pv(
-                q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], kvmask, m_scr[...],
-                d_safe, acc_scr[...], ap_ref[0, 0, 0],
-                health=hp_ref[0, 0, 0], **pkw, **kw)
             hp_ref[0, 0, 0] = hp
+        m_scr[...] = m
+        l_scr[...] = l
         acc_scr[...] = acc
+        as_ref[0, 0, 0] = amax_s
         ap_ref[0, 0, 0] = amax_p
 
-    @pl.when(u == 3 * nk - 1)
+    @pl.when(j == nk - 1)
     def _write():
-        o_ref[0, 0] = (acc_scr[...] * scal_ref[3]).astype(jnp.bfloat16)
+        l = l_scr[...]
+        d_safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] * scal_ref[3] / d_safe
+                       ).astype(jnp.bfloat16)
 
 
 def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
@@ -191,11 +185,11 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
     bkv = sp if not block_kv else min(block_kv, sp)
     nk = sp // bkv
     nq = qp // bq
-    grid = (b_, h_, nq, 3 * nk)
+    grid = (b_, h_, nq, nk)
 
     def kv_index(b, h, iq, u):
         jmin, jmax = _span(iq, bq, bkv, nk, mask_mode, window)
-        return (b, h // group, jnp.clip(u % nk, jmin, jmax), 0)
+        return (b, h // group, jnp.clip(u, jmin, jmax), 0)
 
     in_specs = [
         pl.BlockSpec((1, 1, bq, dp), lambda b, h, iq, u: (b, h, iq, 0)),
@@ -208,7 +202,7 @@ def fp8_attention_fwd_kernel(q8, k8, v8, kv_mask, seed, scal, *,
             raise ValueError("with_counts supports the training masks "
                              f"(causal/full), not {mask_mode!r}")
         in_specs.append(pl.BlockSpec((1, bkv),
-                                     lambda b, h, iq, u: (b, u % nk)))
+                                     lambda b, h, iq, u: (b, u)))
         args.append(kv_mask)
         body = _fwd_body
         if mask_mode == "chunk":

@@ -22,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels.fp8_attention import kernel as _k
 from repro.kernels.fp8_attention import ref as _r
 
@@ -33,13 +34,14 @@ def _health_frac(h):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p",
-    "rounding_s", "rounding_p", "saturate_s", "saturate_p", "with_counts",
-    "interpret"))
+    "mask_mode", "window", "block_q", "block_kv", "autotune", "fmt_s",
+    "fmt_p", "rounding_s", "rounding_p", "saturate_s", "saturate_p",
+    "with_counts", "interpret"))
 def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
                       window: int = 0, kv_mask=None, chunk_pos=None,
-                      block_q: int = _k.DEFAULT_BQ,
+                      block_q: int = None,
                       block_kv: int = None,
+                      autotune: str = "table",
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
                       rounding_s: str = "sr", rounding_p: str = "sr",
                       saturate_s: bool = True, saturate_p: bool = True,
@@ -56,8 +58,12 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     q row r of batch b sits at absolute position start_b + r when
     r < n_valid_b and is fully masked (exact-zero output) otherwise: the
     causal condition on logical positions, for paged/gathered KV layouts.
-    block_kv: kv-stripe rows resident in VMEM per grid step (None ->
-    kernel default).
+    block_kv: kv-stripe rows resident in VMEM per grid step. Unset
+    block_q/block_kv resolve through the autotuner winners table (see
+    kernels.autotune; `autotune="off"` pins the built-in defaults) and
+    fall back to the kernel defaults; explicit knobs always win and are
+    validated (never silently clamped to a different schedule). Results
+    are bit-invariant to both knobs, so the table only moves wall-clock.
 
     Returns (o (B,H,Q,D) bf16, amax_s, amax_p) — scalar amaxes of the
     quantized S/P tiles in grid units (multiply by s_s / s_p for real
@@ -73,6 +79,9 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
     """
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
+    block_q, block_kv = _at.resolve_attn_blocks(
+        "fwd", mask_mode, q_len, s_len, d, block_q=block_q,
+        block_kv=block_kv, autotune=autotune)
     bq = min(block_q, max(1, q_len))
     bkv = _r.resolve_block_kv(s_len, block_kv)
     qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq, bkv)
@@ -104,13 +113,14 @@ def fp8_attention_fwd(q8, k8, v8, seed, scal, *, mask_mode: str = "causal",
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "mask_mode", "window", "block_q", "block_kv", "fmt_s", "fmt_p", "fmt_e",
-    "rounding_s", "rounding_p", "rounding_e",
+    "mask_mode", "window", "block_q", "block_kv", "autotune", "fmt_s",
+    "fmt_p", "fmt_e", "rounding_s", "rounding_p", "rounding_e",
     "saturate_s", "saturate_p", "saturate_e", "with_counts", "interpret"))
 def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       mask_mode: str = "causal", window: int = 0,
-                      block_q: int = _k.DEFAULT_BQ,
+                      block_q: int = None,
                       block_kv: int = None,
+                      autotune: str = "table",
                       fmt_s: str = "e5m2", fmt_p: str = "e5m2",
                       fmt_e: str = "e5m2",
                       rounding_s: str = "sr", rounding_p: str = "sr",
@@ -121,9 +131,12 @@ def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
                       interpret: bool = False):
     """Fused FP8 attention backward (training masks: 'causal'/'full').
     do8: the error-quantized output cotangent payload (B,H,Q,D). scal (10,)
-    f32 (ref.bwd_q_tile). block_q must be a TQ (128) multiple when larger
-    than TQ — dK/dV contraction granularity is pinned to TQ rows, so
-    results are invariant to both block knobs. Returns (dq (B,H,Q,D) f32,
+    f32 (ref.bwd_q_tile). An explicit block_q must be a positive TQ (128)
+    multiple — dK/dV contraction granularity is pinned to TQ rows, so a
+    sub-TQ request is a schedule the kernel cannot honor and raises
+    (never a silent clamp). Unset knobs resolve through the autotuner
+    winners table, then the kernel defaults; results are invariant to
+    both block knobs. Returns (dq (B,H,Q,D) f32,
     dk/dv (B,Hkv,S,D) f32, amax_dp, amax_ds) with amaxes in grid units.
 
     with_counts=True additionally returns (health_dp, health_ds): (2,) f32
@@ -136,7 +149,10 @@ def fp8_attention_bwd(q8, k8, v8, do8, seed, scal, *,
             f"{mask_mode!r}")
     b_, h_, q_len, d = q8.shape
     s_len = k8.shape[2]
-    bq = max(_k.TQ, block_q)
+    block_q, block_kv = _at.resolve_attn_blocks(
+        "bwd", mask_mode, q_len, s_len, d, block_q=block_q,
+        block_kv=block_kv, autotune=autotune)
+    bq = block_q
     bkv = _r.resolve_block_kv(s_len, block_kv)
     qp, kp, vp = _r.pad_qkv(q8, k8, v8, bq, bkv)
     dop = _r._pad_to(_r._pad_to(do8, 2, bq), 3, _r.LANE)

@@ -2,37 +2,61 @@
 
 This module is the SINGLE SOURCE OF TRUTH for the fused-attention numerics:
 the Pallas kernel bodies (kernel.py) and the unfused reference drivers below
-call the *same* per-stripe pass functions (`fwd_stripe_m` / `fwd_stripe_l` /
-`fwd_stripe_pv`, `bwd_stripe_rd` / `bwd_stripe_dq` / `bwd_stripe_dkv`), so in
-interpret mode the kernel is bit-identical to the unfused quantize ->
-matmul -> softmax -> quantize -> matmul composition by construction — the
-same guarantee structure `sr_fp8_from_bits` gives the fused GEMM kernels.
+call the *same* per-stripe pass functions (`fwd_stripe_online`,
+`bwd_stripe_rd` / `bwd_stripe_dq` / `bwd_stripe_dkv`, with
+`fwd_stripe_m` / `fwd_stripe_l` recomputing the softmax statistics for the
+backward), so in interpret mode the kernel is bit-identical to the unfused
+quantize -> matmul -> softmax -> quantize -> matmul composition by
+construction — the same guarantee structure `sr_fp8_from_bits` gives the
+fused GEMM kernels.
 
 Semantics (the paper's Fig. 1a dataflow extended into attention, all four
 tensor classes in FP8):
 
-    forward:   S8 = Q_A((q8 . k8^T) * f_s)          f_s = s_q s_k sm / s_s
-               P  = softmax(S8 * s_s)  (rows; masked lanes exactly 0)
-               P8 = Q_A(P / s_p)
-               O  = (P8 . v8) * (s_p s_v)           -> bf16
-    backward:  dP8 = Q_E((do8 . v8^T) * f_dp)       f_dp = s_do s_v / s_dp
+    forward (ONE-PASS online softmax — each K/V stripe is read once):
+        per LANE column block j, in ascending column order:
+          S8_j = Q_A((q8 . k8_j^T) * f_s)       f_s = s_q s_k sm / s_s
+          x_j  = S8_j * s_s                     (masked lanes -1e30)
+          m'   = max(m, rowmax(x_j));  c = exp(m - m')
+          e_j  = exp(x_j - m')                  (masked lanes exact 0)
+          E8_j = Q_A(e_j / s_p)    UNNORMALIZED probs vs the running max
+          l    = l * c + rowsum(e_j)
+          acc  = acc * c + E8_j . v8_j
+          m    = m'
+        O = acc * (s_p s_v) / l   -> bf16       (l -> 1 fully-masked rows)
+    backward:  P8  = Q_A(exp(x - m_final) / l / s_p)   (normalized — the
+               exact softmax rows, recomputed from the two-pass statistics)
+               dP8 = Q_E((do8 . v8^T) * f_dp)       f_dp = s_do s_v / s_dp
                dS  = P_deq * (dP_deq - rowsum(P_deq * dP_deq))
                dS8 = Q_E(dS * sm / s_ds)
                dQ = (dS8 . k8)   * (s_ds s_k)
                dK = (dS8^T . q8) * (s_ds s_q)
                dV = (P8^T . do8) * (s_p s_do)
 
+The forward quantizes its probs UNNORMALIZED against the running row max
+(e_j <= 1 because the running max dominates every column seen so far, with
+exact 1.0 at the row's max column — better FP8 range utilization than the
+normalized p = e/l it replaces), while the backward recomputes the
+NORMALIZED P8 from the exact final statistics — the standard FP8
+flash-attention structure: quantization is straight-through in the adjoint
+either way, and the forward E8 tiles never reach HBM to be reused. Both
+the `#p.A` amax observation and the P payload/health counters therefore
+refer to the forward's unnormalized E8 tiles.
+
 Streamed-KV structure: the KV axis is partitioned into stripes of `block_kv`
-rows. The softmax statistics are still the exact two-pass form (pass 1: the
-order-free running row max `m`; pass 2: the normalizer `l` accumulated in
-fixed LANE-wide sequential steps), with the carries (`m`, `l`, the PV
-accumulator) crossing stripe boundaries — so results are invariant to the
-`block_kv` choice: the LANE-step chain is identical however it is cut into
-stripes. `kv_stripe_span` gives the static per-q-tile stripe range outside
-which causal/sliding-window tiles are FULLY masked; both the kernels (via
-block index maps + predication) and the reference drivers skip those
-stripes, which is exact because a fully-masked stripe contributes exact-0.0
-to `l`/PV/dQ/dK/dV, -inf to `m`, and (see below) nothing to any amax.
+rows and the (m, l, PV accumulator) carries cross stripe boundaries — ONE
+visit per stripe (the PR-5 kernel needed three). Results are invariant to
+the `block_kv` choice because the online recurrence advances in fixed
+LANE-wide column blocks whose order is independent of how they are grouped
+into stripes: the running max after block j is the prefix max over blocks
+<= j under ANY stripe cut, so every e_j / E8_j / l / acc value is
+identical. `kv_stripe_span` gives the static per-q-tile stripe range
+outside which causal/sliding-window tiles are FULLY masked; both the
+kernels (via block index maps + predication) and the reference drivers
+skip those stripes, which is exact because a fully-masked stripe
+contributes exact-0.0 to `e`/`l`/PV/dQ/dK/dV, leaves `m` unchanged (its
+rescale factor is exp(m - m) = exp(0) = exact 1.0), and (see below)
+nothing to any amax.
 
 Stripe-skip observation semantics (changed from the PR-4 kernel): the fused
 amax observations at `#qk.A` / `#p.A` / `#dp.E` / `#ds.E` are masked to the
@@ -264,13 +288,15 @@ def _sblocks(q8, k8s, kvmask_s, *, seed, bh, row0, col0, scal2,
 
 def fwd_stripe_m(q8, k8s, kvmask_s, m, amax_s, *, payload=False,
                  health=None, **kw):
-    """Pass 1 over one stripe: exact running row-max carry + the S amax
-    observation (masked to the attended region). Returns
-    (m, amax_s, s8_tiles) — tiles only when payload=True (oracle use).
-    With a (3,) `health` accumulator, additionally returns it advanced by
-    this stripe's S precision-health counts (4-tuple; the observation-only
-    extra output never perturbs the carries — counters on/off is
-    bit-identical)."""
+    """Exact running row-max carry over one stripe + the S amax
+    observation (masked to the attended region). The BACKWARD's statistics
+    recompute (and the retained two-pass baseline `fwd_q_tile_two_pass`)
+    use this; the forward kernel itself runs the one-pass
+    `fwd_stripe_online`. Returns (m, amax_s, s8_tiles) — tiles only when
+    payload=True (oracle use). With a (3,) `health` accumulator,
+    additionally returns it advanced by this stripe's S precision-health
+    counts (4-tuple; the observation-only extra output never perturbs the
+    carries — counters on/off is bit-identical)."""
     tiles = []
     for jj, s8, valid, x, cols, obs in _sblocks(q8, k8s, kvmask_s, **kw):
         m = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
@@ -286,20 +312,78 @@ def fwd_stripe_m(q8, k8s, kvmask_s, m, amax_s, *, payload=False,
 
 
 def fwd_stripe_l(q8, k8s, kvmask_s, m, l, **kw):
-    """Pass 2 over one stripe: the softmax normalizer carry, accumulated in
-    LANE-wide sequential steps (the fixed chain block_kv cannot change)."""
+    """Softmax normalizer carry over one stripe given the FINAL row max,
+    accumulated in LANE-wide sequential steps (the fixed chain block_kv
+    cannot change). Backward statistics recompute / two-pass baseline."""
     for jj, s8, valid, x, cols, obs in _sblocks(q8, k8s, kvmask_s, **kw):
         e = jnp.where(valid, jnp.exp(x - m), 0.0)
         l = l + jnp.sum(e, axis=-1, keepdims=True)
     return l
 
 
+def fwd_stripe_online(q8, k8s, v8s, kvmask_s, m, l, acc, amax_s, amax_p, *,
+                      seed, bh, f_p, fmt_p, rounding_p, saturate_p,
+                      payload=False, health_s=None, health_p=None, **kw):
+    """ONE pass over one stripe: the online-softmax recurrence (module
+    docstring) advancing the (m, l, acc) carries per LANE column block,
+    with both amax observations (masked to the attended region) taken in
+    the same pass. This is the forward kernel's stripe body — each K/V
+    stripe is read exactly once.
+
+    Rescaling by exp(m - m') per LANE block (not per stripe) is what makes
+    the result invariant to the stripe partition: the block chain is the
+    same however the blocks are grouped. A fully-masked block leaves m
+    unchanged, so its rescale factor is exp(0) = exact 1.0 and its
+    e-contribution is exact 0.0 — stripe skipping stays exact. The probs
+    are quantized UNNORMALIZED against the running max (e <= 1 by
+    construction); normalization by the final l happens once at write-out.
+
+    Returns (m, l, acc, amax_s, amax_p, s8_tiles, p8_tiles) — tile lists
+    only when payload=True (oracle use). With (3,) `health_s`/`health_p`
+    accumulators, additionally returns both advanced by this stripe's S/P
+    precision-health counts (observation-only: carries are untouched, so
+    counters on/off is bit-identical)."""
+    s_tiles, p_tiles = [], []
+    bq = q8.shape[0]
+    rows = kw["row0"] + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    for jj, s8, valid, x, cols, obs in _sblocks(q8, k8s, kvmask_s,
+                                                seed=seed, bh=bh, **kw):
+        m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+        amax_s = jnp.maximum(amax_s, jnp.max(
+            jnp.where(obs, jnp.abs(s8.astype(jnp.float32)), 0.0)))
+        if health_s is not None:
+            health_s = health_s + _health_counts(s8, obs, kw["fmt_s"])
+        corr = jnp.exp(m - m_new)
+        e = jnp.where(valid, jnp.exp(x - m_new), 0.0)
+        bits = sr_hash_bits(seed, SALT_P, bh, rows, cols) \
+            if rounding_p == "sr" else jnp.zeros((bq, LANE), jnp.uint8)
+        p8 = _quant_tile(e * f_p, bits, fmt_p, rounding_p, saturate_p)
+        amax_p = jnp.maximum(amax_p, jnp.max(
+            jnp.where(obs, jnp.abs(p8.astype(jnp.float32)), 0.0)))
+        if health_p is not None:
+            health_p = health_p + _health_counts(p8, obs, fmt_p)
+        l = l * corr + jnp.sum(e, axis=-1, keepdims=True)
+        acc = acc * corr + _dot_f32(p8, v8s[jj * LANE:(jj + 1) * LANE],
+                                    ((1,), (0,)))
+        m = m_new
+        if payload:
+            s_tiles.append(jnp.where(valid, s8, _zeros_like_fp8(s8)))
+            p_tiles.append(jnp.where(valid, p8, _zeros_like_fp8(p8)))
+    if health_s is not None:
+        return (m, l, acc, amax_s, amax_p, s_tiles, p_tiles,
+                health_s, health_p)
+    return m, l, acc, amax_s, amax_p, s_tiles, p_tiles
+
+
 def fwd_stripe_pv(q8, k8s, v8s, kvmask_s, m, d_safe, acc, amax_p, *,
                   seed, bh, f_p, fmt_p, rounding_p, saturate_p,
                   payload=False, health=None, **kw):
-    """Pass 3 over one stripe: quantized probs + P amax + PV accumulation.
-    Returns (acc, amax_p, p8_tiles) — plus the advanced (3,) P health
-    counts when a `health` accumulator is given."""
+    """Two-pass PV stripe (NORMALIZED probs from the final statistics):
+    quantized probs + P amax + PV accumulation. Retained as the two-pass
+    baseline for the one-pass A/B bench and equivalence tests — the
+    forward kernel runs `fwd_stripe_online`. Returns (acc, amax_p,
+    p8_tiles) — plus the advanced (3,) P health counts when a `health`
+    accumulator is given."""
     tiles = []
     bq = q8.shape[0]
     rows = kw["row0"] + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
@@ -475,14 +559,72 @@ def fwd_q_tile(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
                block_kv: int = 0, payload: bool = True, chunk=None):
     """Fused FP8 attention forward for one (bq, D) query tile against the
     full padded (Sp, D) K/V of its (batch, kv-head), streamed in
-    `block_kv`-row stripes (0 = one stripe; fully-masked stripes skipped).
+    `block_kv`-row stripes (0 = one stripe; fully-masked stripes skipped)
+    with ONE pass per stripe (the online-softmax recurrence — see
+    `fwd_stripe_online`).
 
     scal: indexable [f_s, s_s, f_p, f_o] (see module docstring).
     Returns (o_bf16 (bq, D), amax_s, amax_p, s8_tiles, p8_tiles) — the
     payload tile lists (one (bq, LANE) tile per LANE column block, masked
-    positions zeroed, empty when payload=False) are consumed by the
-    reference drivers only. amaxes are in grid units over the attended
-    region, exactly `fp8_amax_bits` over the masked logical payload."""
+    positions zeroed, empty when payload=False; P tiles are the
+    UNNORMALIZED E8 probs) are consumed by the reference drivers only.
+    amaxes are in grid units over the attended region, exactly
+    `fp8_amax_bits` over the masked logical payload."""
+    f_s, s_s, f_p, f_o = scal[0], scal[1], scal[2], scal[3]
+    bq = q8.shape[0]
+    sp = k8.shape[0]
+    bkv = sp if not block_kv else block_kv
+    nk = sp // bkv
+    jmin, jmax = kv_stripe_span(row0, bq, block_kv=bkv, n_kv=nk,
+                                mask_mode=mask_mode, window=window)
+    kw = _stripe_kw(seed, bh, row0, (f_s, s_s), mask_mode, window,
+                    q_len, s_len, fmt_s, rounding_s, saturate_s)
+    if chunk is not None:
+        kw["chunk"] = chunk
+
+    def stripes():
+        for j in range(jmin, jmax + 1):
+            yield (j, j * bkv, k8[j * bkv:(j + 1) * bkv],
+                   v8[j * bkv:(j + 1) * bkv], _mask_stripe(kvmask, j, bkv))
+
+    m = jnp.full((bq, 1), -1e30, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc = jnp.zeros((bq, v8.shape[1]), jnp.float32)
+    amax_s = amax_p = jnp.float32(0.0)
+    s8_j, p8_j = {}, {}
+    for j, col0, ks, vs, ms in stripes():
+        m, l, acc, amax_s, amax_p, s_tiles, p_tiles = _call_stripe(
+            fwd_stripe_online, q8, ks, vs, ms, m, l, acc, amax_s, amax_p,
+            f_p=f_p, fmt_p=fmt_p, rounding_p=rounding_p,
+            saturate_p=saturate_p, payload=payload, **{**kw, "col0": col0})
+        if payload:
+            s8_j[j] = s_tiles
+            p8_j[j] = p_tiles
+    d_safe = jnp.where(l > 0, l, 1.0)   # fully-masked (padded) rows -> o = 0
+    o = (acc * f_o / d_safe).astype(jnp.bfloat16)
+    s8_tiles, p8_tiles = [], []
+    if payload:
+        # Skipped-stripe payload filler in the RESPECTIVE format (S8 and
+        # P8 may differ, e.g. a mixed-format config).
+        per_stripe = bkv // LANE
+        zt_s = [jnp.zeros((bq, LANE), fmt_dtype(fmt_s))] * per_stripe
+        zt_p = [jnp.zeros((bq, LANE), fmt_dtype(fmt_p))] * per_stripe
+        for j in range(nk):
+            s8_tiles += s8_j.get(j, zt_s)
+            p8_tiles += p8_j.get(j, zt_p)
+    return o, amax_s, amax_p, s8_tiles, p8_tiles
+
+
+def fwd_q_tile_two_pass(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
+                        mask_mode: str, window: int, q_len: int, s_len: int,
+                        fmt_s: str, fmt_p: str, rounding_s: str,
+                        rounding_p: str, saturate_s: bool, saturate_p: bool,
+                        block_kv: int = 0, chunk=None):
+    """The PR-5 two-pass-per-stripe forward (final-max statistics first,
+    then a normalized-P PV pass re-reading every stripe), retained as the
+    baseline the one-pass rewrite is A/B-benched and equivalence-tested
+    against. Returns (o_bf16, amax_s, l) — the normalized composition the
+    one-pass output must match to within one final-divide rounding."""
     f_s, s_s, f_p, f_o = scal[0], scal[1], scal[2], scal[3]
     bq = q8.shape[0]
     sp = k8.shape[0]
@@ -502,41 +644,23 @@ def fwd_q_tile(q8, k8, v8, kvmask, *, seed, bh, row0, scal,
 
     m = jnp.full((bq, 1), -1e30, jnp.float32)
     amax_s = jnp.float32(0.0)
-    s8_j = {}
     for j, col0, ks, vs, ms in stripes():
-        m, amax_s, tiles = _call_stripe(
-            fwd_stripe_m, q8, ks, ms, m, amax_s, payload=payload,
-            **{**kw, "col0": col0})
-        if payload:
-            s8_j[j] = tiles
+        m, amax_s, _ = _call_stripe(fwd_stripe_m, q8, ks, ms, m, amax_s,
+                                    payload=False, **{**kw, "col0": col0})
     l = jnp.zeros((bq, 1), jnp.float32)
     for j, col0, ks, vs, ms in stripes():
         l = _call_stripe(fwd_stripe_l, q8, ks, ms, m, l,
                          **{**kw, "col0": col0})
-    d_safe = jnp.where(l > 0, l, 1.0)   # fully-masked (padded) rows -> p = 0
+    d_safe = jnp.where(l > 0, l, 1.0)
     acc = jnp.zeros((bq, v8.shape[1]), jnp.float32)
     amax_p = jnp.float32(0.0)
-    p8_j = {}
     for j, col0, ks, vs, ms in stripes():
-        acc, amax_p, tiles = _call_stripe(
+        acc, amax_p, _ = _call_stripe(
             fwd_stripe_pv, q8, ks, vs, ms, m, d_safe, acc, amax_p,
             f_p=f_p, fmt_p=fmt_p, rounding_p=rounding_p,
-            saturate_p=saturate_p, payload=payload,
-            **{**kw, "col0": col0})
-        if payload:
-            p8_j[j] = tiles
+            saturate_p=saturate_p, payload=False, **{**kw, "col0": col0})
     o = (acc * f_o).astype(jnp.bfloat16)
-    s8_tiles, p8_tiles = [], []
-    if payload:
-        # Skipped-stripe payload filler in the RESPECTIVE format (S8 and
-        # P8 may differ, e.g. a mixed-format config).
-        per_stripe = bkv // LANE
-        zt_s = [jnp.zeros((bq, LANE), fmt_dtype(fmt_s))] * per_stripe
-        zt_p = [jnp.zeros((bq, LANE), fmt_dtype(fmt_p))] * per_stripe
-        for j in range(nk):
-            s8_tiles += s8_j.get(j, zt_s)
-            p8_tiles += p8_j.get(j, zt_p)
-    return o, amax_s, amax_p, s8_tiles, p8_tiles
+    return o, amax_s, l
 
 
 def bwd_q_tile(q8, k8, v8, do8, kvmask, *, seed, bh, row0, scal,

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels.fp8_matmul import kernel as _k
 
 
@@ -17,13 +18,22 @@ def _pad_to(x, mult0, mult1):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype",
-                                             "interpret"))
-def fp8_matmul(a, b, *, bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "autotune",
+                                             "out_dtype", "interpret"))
+def fp8_matmul(a, b, *, bm=None, bk=None, bn=None, autotune: str = "table",
                out_dtype=jnp.float32, interpret: bool = False):
     """a: (M, K) fp8, b: (K, N) fp8 -> (M, N). Pads to tile multiples
-    (zero padding is exact for matmul) and slices the result back."""
+    (zero padding is exact for matmul) and slices the result back.
+    Unset bm/bk/bn resolve through the autotuner winners table (see
+    kernels.autotune; `autotune="off"` pins the built-in defaults);
+    explicit ints always win."""
     m, n = a.shape[0], b.shape[1]
+    # Shares the fused-GEMM (e5m2) table entries: the tile-dot dataflow is
+    # identical and the quantize epilogue cost is block-independent.
+    bm, bk, bn = _at.resolve_gemm_blocks(
+        "nn", m, a.shape[1], n, out_format="e5m2", bm=bm, bk=bk, bn=bn,
+        autotune=autotune,
+        defaults=(_k.DEFAULT_BM, _k.DEFAULT_BK, _k.DEFAULT_BN))
     bm_ = min(bm, max(8, m))
     bn_ = min(bn, max(128, n))
     bk_ = min(bk, max(128, a.shape[1]))

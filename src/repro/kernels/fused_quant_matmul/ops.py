@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels.fused_quant_matmul import kernel as _k
 
 
@@ -18,13 +19,15 @@ def _pad_to(x, mult0, mult1):
 
 
 @functools.partial(jax.jit, static_argnames=("dims", "bm", "bk", "bn",
+                                             "autotune",
                                              "out_format", "rounding",
                                              "saturate", "with_amax",
                                              "with_counts",
                                              "amax_units", "interpret"))
 def fused_quant_matmul(a, b, key, scale=None, *,
                        dims: str = "nn",
-                       bm=_k.DEFAULT_BM, bk=_k.DEFAULT_BK, bn=_k.DEFAULT_BN,
+                       bm=None, bk=None, bn=None,
+                       autotune: str = "table",
                        out_format: str = "e5m2",
                        rounding: str = "sr", saturate: bool = True,
                        with_amax: bool = False,
@@ -48,6 +51,13 @@ def fused_quant_matmul(a, b, key, scale=None, *,
     alongside the operands, and the amax epilogue masks the padded region, so
     results are invariant to the (bm, bk, bn) tiling choice.
 
+    bm/bk/bn default to None: unset knobs resolve through the block-size
+    autotuner winners table (`autotune`: "table" = the shipped /
+    $REPRO_AUTOTUNE_TABLE table, "off" = built-in defaults, or a table
+    path — see kernels.autotune) and fall back to the built-in defaults.
+    Explicit ints always win. Resolution happens at trace time, per
+    logical shape.
+
     with_counts=True (requires with_amax) returns (out, amax, health) where
     health is a (2,) f32 [saturated_fraction, flushed_fraction] of the
     logical output — the repro.obs precision-health counters, taken from the
@@ -55,6 +65,10 @@ def fused_quant_matmul(a, b, key, scale=None, *,
     pass). The quantize math is identical with counts on or off.
     """
     m, n, c = _k.gemm_shape(a.shape, b.shape, dims)
+    bm, bk, bn = _at.resolve_gemm_blocks(
+        dims, m, c, n, out_format=out_format, bm=bm, bk=bk, bn=bn,
+        autotune=autotune,
+        defaults=(_k.DEFAULT_BM, _k.DEFAULT_BK, _k.DEFAULT_BN))
     if scale is None:
         scale = jnp.ones((1,), jnp.float32)
     scale = jnp.asarray(scale, jnp.float32).reshape((1,))

@@ -247,9 +247,20 @@ def build_cell(arch: str, shape: str, mesh, *,
         meta["track_health"] = cfg.policy.quant.track_health
         if cfg.policy.quant.fuse_attention:
             # Streamed-KV knobs (results are bit-invariant to them; they
-            # set the kernel's VMEM working set per grid step).
-            meta["attn_block_q"] = cfg.policy.quant.attn_block_q
-            meta["attn_block_kv"] = cfg.policy.quant.attn_block_kv
+            # set the kernel's VMEM working set per grid step). Unset
+            # knobs resolve through the autotuner winners table exactly
+            # as the kernel op will at trace time, so the dry-run artifact
+            # records the schedule the cell actually runs.
+            from repro.kernels import autotune as _autotune
+            from repro.kernels.fp8_attention import ref as _attn_ref
+            _bq, _bkv = _autotune.resolve_attn_blocks(
+                "fwd", "causal", seq, seq, cfg.resolved_head_dim,
+                block_q=cfg.policy.quant.attn_block_q,
+                block_kv=cfg.policy.quant.attn_block_kv,
+                autotune=cfg.policy.quant.autotune)
+            meta["attn_block_q"] = _bq
+            meta["attn_block_kv"] = _attn_ref.resolve_block_kv(seq, _bkv)
+            meta["autotune"] = cfg.policy.quant.autotune
         if cfg.policy.quant.scaling == "delayed":
             from repro.scaling.calibrate import discover_lm_sites
             from repro.scaling.state import DelayedScaling

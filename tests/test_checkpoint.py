@@ -81,3 +81,82 @@ def test_manifest(tmp_path, tree):
     m = ck.manifest()
     assert m["step"] == 7 and m["extra"]["loss"] == 1.5
     assert "a" in m["keys"]
+
+
+def test_key_escape_collision(tmp_path):
+    # Regression: under the v1 scheme ("/" -> "__") a leaf literally
+    # named "w__gate" and a nested path "w/gate" mangled to the same
+    # archive name — one silently overwrote the other. The v2 escape
+    # ("_" -> "_u" first) keeps them distinct and round-trips exactly.
+    tree = {"w__gate": jnp.full((2,), 1.0, jnp.float32),
+            "w": {"gate": jnp.full((2,), 2.0, jnp.float32)},
+            "under_score": {"x__y": jnp.full((2,), 3.0, jnp.float32)}}
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, tree)
+    man = ck.manifest()
+    assert man["key_escape"] == "v2"
+    assert sorted(man["keys"]) == ["under_score/x__y", "w/gate",
+                                   "w__gate"]
+    restored, _ = ck.restore(jax.eval_shape(lambda t: t, tree))
+    assert float(restored["w__gate"][0]) == 1.0
+    assert float(restored["w"]["gate"][0]) == 2.0
+    assert float(restored["under_score"]["x__y"][0]) == 3.0
+
+
+def test_legacy_checkpoint_readable(tmp_path, tree):
+    # A pre-v2 checkpoint (v1 mangling, no "key_escape" manifest field)
+    # must still restore via the legacy decode path.
+    d = Path(tmp_path) / "step_0000000003"
+    d.mkdir()
+    leaves = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+              "nested/b": np.ones((2,), np.float32),
+              "nested/c": np.asarray(3, np.int32)}
+    np.savez(d / "leaves.npz",
+             **{k.replace("/", "__"): v for k, v in leaves.items()})
+    man = {"step": 3, "time": 0.0, "keys": sorted(leaves),
+           "dtypes": {k: str(v.dtype) for k, v in leaves.items()},
+           "extra": {}}          # no "key_escape": legacy manifest
+    (d / "manifest.json").write_text(json.dumps(man))
+    (d / "COMMITTED").write_text("ok")
+    proto = {"a": jax.ShapeDtypeStruct((3, 4), jnp.float32),
+             "nested": {"b": jax.ShapeDtypeStruct((2,), jnp.float32),
+                        "c": jax.ShapeDtypeStruct((), jnp.int32)}}
+    restored, step = Checkpointer(tmp_path, async_save=False).restore(proto)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), leaves["a"])
+    assert int(restored["nested"]["c"]) == 3
+
+
+def test_slow_async_writer_not_dropped(tmp_path, tree, monkeypatch):
+    # Regression for the async-save lifecycle: a writer still flushing
+    # must (a) run on a non-daemon thread (interpreter shutdown joins it
+    # instead of killing it mid-write), (b) not race all_steps()/
+    # restore() on the main thread, and (c) be fully visible after
+    # wait().
+    import time as _time
+
+    import repro.checkpoint.checkpointer as ckpt_mod
+    real_savez = ckpt_mod.np.savez
+
+    def slow_savez(*a, **kw):
+        _time.sleep(0.3)
+        return real_savez(*a, **kw)
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", slow_savez)
+    ck = Checkpointer(tmp_path, async_save=True)
+    ck.save(1, tree)
+    ck.wait()
+    ck.save(2, tree)
+    assert ck._thread is not None and not ck._thread.daemon
+    # Concurrent listing/restore while step 2 is mid-write: sees only
+    # committed state, never a half-written directory.
+    proto = jax.eval_shape(lambda t: t, tree)
+    for _ in range(5):
+        steps = ck.all_steps()
+        assert steps in ([1], [1, 2])
+        _, got = ck.restore(proto)
+        assert got in (1, 2)
+    ck.wait()
+    assert ck.all_steps() == [1, 2]
+    _, got = ck.restore(proto)
+    assert got == 2
