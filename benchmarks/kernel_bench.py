@@ -445,6 +445,9 @@ def bench_autotune_sweep(*, smoke=False):
             out[f"autotune_{key}_blocks"] = [row["block_q"],
                                              row["block_kv"]]
         out[f"autotune_{key}_parity"] = row["parity"]
+        # VMEM-model prune record (no silent caps): which candidates the
+        # sweep refused to time, with the modeled footprints.
+        out[f"autotune_{key}_pruned"] = row.get("pruned", [])
     return out
 
 

@@ -1,0 +1,17 @@
+"""Static analysis for the FP8 training/serving stack.
+
+Three tools, one import surface:
+
+ * `jaxpr_walk`     — the canonical nested-jaxpr traversal every jaxpr
+   assertion in the repo goes through (tests included): pallas_call /
+   scan / custom_vjp / shard_map aware, primitive counting, dtype
+   census.
+ * `vmem`           — analytic per-kernel VMEM/grid footprint model for
+   the fused GEMM and attention kernels, consulted by the autotuner
+   (prune can't-fit candidates before timing) and by `launch/specs.py`
+   (reject oversized explicit block knobs at spec-build time).
+ * `precision_lint` — lint passes over the jitted train/serve step
+   jaxprs of a built cell: fused-path coverage, real-f8 payload checks,
+   quantize-site <-> SiteRegistry bijection, token-channel width, and
+   double-rounding chains.  CLI: `python -m repro.tools.lint`.
+"""

@@ -583,6 +583,22 @@ def sweep_gemm(shapes=None, *, dims_list=("nn", "nt", "tn"),
         for dims in dims_list:
             cands = gemm_candidates(m, k, n, defaults=defaults,
                                     smoke=smoke)
+            # Analytic VMEM pre-filter: never time a candidate the model
+            # proves can't fit.  The clamped default (cands[0]) is exempt
+            # — it anchors tuned_vs_default — but gets a loud warning if
+            # the model says it wouldn't fit either.
+            from repro.analysis import vmem as _vm
+            kept, pruned = _vm.prune_gemm_candidates(cands[1:], dims=dims)
+            if not _vm.gemm_vmem(*cands[0], dims=dims).fits:
+                log(f"[autotune] WARNING: default GEMM blocks "
+                    f"{cands[0]} exceed the VMEM model for "
+                    f"({m}, {k}, {n}) {dims}; timing it anyway as the "
+                    f"baseline")
+            for p in pruned:
+                log(f"[autotune] prune {tuple(p['blocks'])} for "
+                    f"({m}, {k}, {n}) {dims}: {p['reason']} "
+                    f"({p['vmem_bytes']} > {p['budget_bytes']} bytes)")
+            cands = [cands[0]] + kept
             walls = {}
             for bm, bk, bn in cands:
                 fn = make_gemm_analogue(m, k, n, dims=dims, bm=bm, bk=bk,
@@ -605,6 +621,7 @@ def sweep_gemm(shapes=None, *, dims_list=("nn", "nt", "tn"),
                            "candidates": {f"{c[0]}x{c[1]}x{c[2]}":
                                           round(w, 2)
                                           for c, w in walls.items()},
+                           "pruned": pruned,
                            **table[key]})
             log(f"[autotune] {key}: tuned {best} "
                 f"{walls[best]:.0f}us vs default {default} "
@@ -633,6 +650,17 @@ def sweep_attention(shapes=None, *, kinds=("fwd", "bwd"),
               * 0.2).astype(jnp.float8_e5m2)
         for kind in kinds:
             cands = attn_candidates(kind, s, s, smoke=smoke)
+            # Analytic VMEM pre-filter (see sweep_gemm): can't-fit
+            # candidates are logged + recorded, never timed.
+            from repro.analysis import vmem as _vm
+            kept, pruned = _vm.prune_attn_candidates(
+                kind, cands, d, mask_mode=mask_mode)
+            for p in pruned:
+                log(f"[autotune] prune q{p['blocks'][0]}_kv"
+                    f"{p['blocks'][1]} for ({s}, {d}) {kind}: "
+                    f"{p['reason']} ({p['vmem_bytes']} > "
+                    f"{p['budget_bytes']} bytes)")
+            cands = kept
             walls = {}
             for bq, bkv in cands:
                 if kind == "fwd":
@@ -648,6 +676,11 @@ def sweep_attention(shapes=None, *, kinds=("fwd", "bwd"),
                                               iters=iters, reps=reps)
             from repro.kernels.fp8_attention import ref as _ar
             default = (min(TQ, s), _ar.resolve_block_kv(s, None))
+            if not _vm.attn_vmem(kind, *default, d,
+                                 mask_mode=mask_mode).fits:
+                log(f"[autotune] WARNING: default attention blocks "
+                    f"{default} exceed the VMEM model for ({s}, {d}) "
+                    f"{kind}; timing them anyway as the baseline")
             if default not in walls:
                 fn = (make_attn_analogue(s, d, bq=default[0],
                                          bkv=default[1], passes=1,
@@ -671,6 +704,7 @@ def sweep_attention(shapes=None, *, kinds=("fwd", "bwd"),
             report.append({"key": key, "shape": [s, d], "kind": kind,
                            "candidates": {f"q{c[0]}_kv{c[1]}": round(w, 2)
                                           for c, w in walls.items()},
+                           "pruned": pruned,
                            **table[key]})
             log(f"[autotune] {key}: tuned {best} "
                 f"{walls[best]:.0f}us vs default {default} "

@@ -125,29 +125,16 @@ def _cfg_for_cell(arch: str, shape: str) -> ModelConfig:
     return cfg.replace(max_seq_len=max(cfg.max_seq_len, seq))
 
 
-def build_cell(arch: str, shape: str, mesh, *,
-               unroll_layers: bool = False,
-               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    """Returns dict(fn, args, in_shardings, out_shardings, meta).
+def _apply_overrides(cfg: ModelConfig, overrides: Optional[Dict[str, Any]]
+                     ) -> Tuple[ModelConfig, Any, Any, Dict[str, Any]]:
+    """Apply dotted-key cell overrides to a ModelConfig.
 
-    unroll_layers=True disables scan-over-layers so cost_analysis counts
-    every layer (roofline lowering); the default scan lowering is used for
-    the memory-fit proof and the multi-pod pass.
-
-    overrides: perf-iteration knobs applied to the ModelConfig; keys starting
-    with 'policy.' modify the PrecisionPolicy (e.g. {'policy.kv_cache_format':
-    'e5m2', 'attn_chunk_size': 512, 'capacity_factor': 1.0}). Keys starting
-    with 'serve.' select/configure the paged serving step for decode cells
-    ({'serve.paged': True, 'serve.page_size': 64, 'serve.chunk_size': 1,
-    'serve.n_pages': N}) — KV memory then scales with the page pool, not
-    batch * max_len.
+    Returns (cfg, force_n_microbatches, force_sequence_parallel,
+    serve_kwargs).  'policy.quant.*' / 'policy.dist.*' / 'policy.*' keys
+    replace into the nested policy dataclasses; 'serve.*' keys are
+    returned for the serving-step builder; everything else replaces
+    directly on the ModelConfig.
     """
-    ok, why = cell_supported(arch, shape)
-    if not ok:
-        raise ValueError(f"cell ({arch}, {shape}) skipped: {why}")
-    info = SHAPES[shape]
-    seq, batch, mode = info["seq"], info["batch"], info["mode"]
-    cfg = _cfg_for_cell(arch, shape)
     force_nmb = None
     force_sp = None
     serve_kw: Dict[str, Any] = {}
@@ -178,6 +165,43 @@ def build_cell(arch: str, shape: str, mesh, *,
             cfg = cfg.replace(policy=dataclasses.replace(pol, **pol_kw))
         if cfg_kw:
             cfg = cfg.replace(**cfg_kw)
+    return cfg, force_nmb, force_sp, serve_kw
+
+
+def cell_config(arch: str, shape: str, *,
+                overrides: Optional[Dict[str, Any]] = None) -> ModelConfig:
+    """The ModelConfig a cell is built with (shape-adjusted, overrides
+    applied) — the same resolution path `build_cell` takes, without
+    building anything.  Used by `repro.analysis.precision_lint` to
+    classify jaxpr findings against the cell's actual knobs."""
+    cfg = _cfg_for_cell(arch, shape)
+    return _apply_overrides(cfg, overrides)[0]
+
+
+def build_cell(arch: str, shape: str, mesh, *,
+               unroll_layers: bool = False,
+               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Returns dict(fn, args, in_shardings, out_shardings, meta).
+
+    unroll_layers=True disables scan-over-layers so cost_analysis counts
+    every layer (roofline lowering); the default scan lowering is used for
+    the memory-fit proof and the multi-pod pass.
+
+    overrides: perf-iteration knobs applied to the ModelConfig; keys starting
+    with 'policy.' modify the PrecisionPolicy (e.g. {'policy.kv_cache_format':
+    'e5m2', 'attn_chunk_size': 512, 'capacity_factor': 1.0}). Keys starting
+    with 'serve.' select/configure the paged serving step for decode cells
+    ({'serve.paged': True, 'serve.page_size': 64, 'serve.chunk_size': 1,
+    'serve.n_pages': N}) — KV memory then scales with the page pool, not
+    batch * max_len.
+    """
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape}) skipped: {why}")
+    info = SHAPES[shape]
+    seq, batch, mode = info["seq"], info["batch"], info["mode"]
+    cfg = _cfg_for_cell(arch, shape)
+    cfg, force_nmb, force_sp, serve_kw = _apply_overrides(cfg, overrides)
     if unroll_layers:
         cfg = cfg.replace(scan_layers=False)
     # The plan owns every sharding decision from here on: dp/zero1/tp axes,
@@ -261,6 +285,18 @@ def build_cell(arch: str, shape: str, mesh, *,
             meta["attn_block_q"] = _bq
             meta["attn_block_kv"] = _attn_ref.resolve_block_kv(seq, _bkv)
             meta["autotune"] = cfg.policy.quant.autotune
+            if cfg.policy.quant.attn_block_q is not None \
+                    or cfg.policy.quant.attn_block_kv is not None:
+                # Explicit knobs are checked against the analytic VMEM
+                # model here, at spec-build time, so an oversized config
+                # fails with the modeled footprint instead of an opaque
+                # Mosaic allocation error hours into a launch.
+                from repro.analysis import vmem as _vmem
+                _vmem.check_attn_blocks(
+                    meta["attn_block_q"], meta["attn_block_kv"],
+                    cfg.resolved_head_dim,
+                    label=f"explicit attention blocks for cell "
+                          f"({arch}, {shape})")
         if cfg.policy.quant.scaling == "delayed":
             from repro.scaling.calibrate import discover_lm_sites
             from repro.scaling.state import DelayedScaling

@@ -217,23 +217,9 @@ class TestDelayedVsJit:
 # hot path: no full-tensor amax reduction under delayed scaling
 # ---------------------------------------------------------------------------
 
-try:
-    from jax.extend import core as _jcore
-except ImportError:   # older JAX
-    from jax import core as _jcore
-_JAXPR_TYPES = (_jcore.Jaxpr, _jcore.ClosedJaxpr)
-
-
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                    v, is_leaf=lambda x: isinstance(x, _JAXPR_TYPES)):
-                if isinstance(sub, _jcore.ClosedJaxpr):
-                    yield from _walk_eqns(sub.jaxpr)
-                elif isinstance(sub, _jcore.Jaxpr):
-                    yield from _walk_eqns(sub)
+# The canonical traversal lives in repro.analysis.jaxpr_walk; the lint
+# passes and these tests assert through the same walker.
+from repro.analysis.jaxpr_walk import walk_eqns as _walk_eqns
 
 
 def _wide_reduce_max_count(fn, *args):
